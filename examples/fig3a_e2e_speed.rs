@@ -1,0 +1,104 @@
+//! Fig. 3a — end-to-end simulation speedup over the fine-grained baseline
+//! for ResNet-50 and GPT-3 Small (prefill "S" and generation "G") on the
+//! Server NPU, across batch sizes.
+//!
+//! ```sh
+//! cargo run --release --offline --example fig3a_e2e_speed [-- --full]
+//! ```
+//!
+//! Paper: 19x–384x speedups. Quick mode uses a 128-token prompt and
+//! batches {1,4}; `--full` uses the paper's 512-token prompt and batches
+//! {1,4,16} (the baseline then runs for many minutes — that slowness *is*
+//! the result).
+
+use onnxim::baseline::detailed::simulate_graph_detailed;
+use onnxim::config::NpuConfig;
+use onnxim::graph::optimizer::{optimize, OptLevel};
+use onnxim::graph::Graph;
+use onnxim::models;
+use onnxim::scheduler::Fcfs;
+use onnxim::sim::{NoDriver, Simulator};
+use onnxim::util::stats::Table;
+use std::time::Instant;
+
+fn run_case(name: &str, graph: Graph, cfg: &NpuConfig, table: &mut Table) {
+    let mut g = graph;
+    optimize(&mut g, OptLevel::Extended);
+
+    let t0 = Instant::now();
+    let det = simulate_graph_detailed(&g, cfg);
+    let t_base = t0.elapsed().as_secs_f64();
+
+    let mut sim = Simulator::new(cfg.clone(), Box::new(Fcfs::new()));
+    sim.add_request(g, 0, 0);
+    let t1 = Instant::now();
+    let r = sim.run(&mut NoDriver);
+    let t_sim = t1.elapsed().as_secs_f64();
+
+    // Incremental line (long runs): the table re-prints everything at the end.
+    println!(
+        "  {name}: baseline {t_base:.2}s, ONNXim-SN {t_sim:.2}s -> {:.0}x",
+        t_base / t_sim
+    );
+    table.row(&[
+        name.to_string(),
+        format!("{t_base:.2}"),
+        format!("{t_sim:.2}"),
+        format!("{:.0}x", t_base / t_sim),
+        format!("{}", r.total_cycles),
+        format!("{}", det.cycles),
+    ]);
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = NpuConfig::server();
+    let prompt = if full { 512 } else { 64 };
+    let batches: &[usize] = if full { &[1, 4, 16] } else { &[1] };
+
+    println!("Fig. 3a reproduction: end-to-end simulation speedup over the");
+    println!("fine-grained baseline, Server NPU (paper: 19x-384x).\n");
+    let mut table = Table::new(&[
+        "workload",
+        "baseline(s)",
+        "ONNXim-SN(s)",
+        "speedup",
+        "sim cycles",
+        "base cycles",
+    ]);
+
+    // ResNet-50's fine-grained baseline alone runs for many minutes —
+    // which is the paper's point; it is included only under --full.
+    if full {
+        for &b in batches {
+            run_case(
+                &format!("ResNet-50 B{b}"),
+                models::resnet50(b),
+                &cfg,
+                &mut table,
+            );
+        }
+    }
+    for &b in batches {
+        run_case(
+            &format!("GPT-3(S) B{b} p{prompt}"),
+            models::gpt3_small_prefill(b, prompt),
+            &cfg,
+            &mut table,
+        );
+    }
+    for &b in batches {
+        run_case(
+            &format!("GPT-3(G) B{b} kv{prompt}"),
+            models::gpt3_small_decode(b, prompt),
+            &cfg,
+            &mut table,
+        );
+    }
+    table.print();
+    if !full {
+        println!("\n(quick mode: 128-token prompt, batches 1/4 — pass --full for");
+        println!(" the paper's 512-token/B16 points; the baseline cost grows with");
+        println!(" MACs, which is the measurement)");
+    }
+}

@@ -1,0 +1,131 @@
+//! Fig. 5 — impact of the attention mechanism (GQA vs MHA) on inference
+//! time and NPU utilization for Llama-3-8B-class decode.
+//!
+//! ```sh
+//! cargo run --release --offline --example fig5_attention [-- --layers 4 --batch 16]
+//! ```
+//!
+//! The paper's §II-E case study: with MHA, every head has its own KV
+//! vectors, so single-token generation performs a long memory-bound GEMV
+//! per head and the cores starve; GQA shares KV across head groups (8 KV
+//! heads for 32 query heads in Llama-3), cutting KV traffic 4x.
+//!
+//! Scale note (EXPERIMENTS.md): the paper runs all 32 layers at batch 128
+//! (17-45 min of simulation). Layers are homogeneous, so we default to 4
+//! layers at batch 16 with the full 1023-token context and the real
+//! per-layer dimensions; per-layer behaviour (attention latency share,
+//! utilization gap) is preserved. The vocab head is kept.
+
+use onnxim::config::NpuConfig;
+use onnxim::graph::optimizer::{optimize, OptLevel};
+use onnxim::graph::OpKind;
+use onnxim::models::gpt::{llama3, TransformerCfg};
+use onnxim::scheduler::Fcfs;
+use onnxim::sim::{NoDriver, Simulator};
+use onnxim::util::stats::Table;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let layers = arg("--layers", 2);
+    let batch = arg("--batch", 8);
+    let ctx = arg("--ctx", 1023);
+
+    println!("Fig. 5 reproduction: GQA vs MHA decode on the Server NPU");
+    println!("(Llama-3-8B dims, {layers}/32 layers, batch {batch}, {ctx}-token KV)\n");
+
+    let mut table = Table::new(&[
+        "variant",
+        "cycles/token",
+        "ms @1GHz",
+        "attn KV bytes",
+        "core util",
+        "dram util",
+    ]);
+    let mut util_lines = Vec::new();
+
+    for gqa in [true, false] {
+        let cfg_model = TransformerCfg::llama3_8b(gqa).with_layers(layers);
+        let mut g = llama3(batch, ctx, &cfg_model);
+        optimize(&mut g, OptLevel::Extended);
+
+        // KV-cache bytes read by attention per token (the Fig.5 mechanism).
+        let kv_bytes: u64 = g
+            .tensors
+            .iter()
+            .filter(|t| t.name.contains("cache"))
+            .map(|t| t.numel() * 2)
+            .sum();
+
+        let npu = NpuConfig::server();
+        let mut sim =
+            Simulator::new(npu, Box::new(Fcfs::new())).with_util_timeline(100_000);
+        sim.add_request(g, 0, 0);
+        let t0 = std::time::Instant::now();
+        let r = sim.run(&mut NoDriver);
+        let wall = t0.elapsed().as_secs_f64();
+
+        let name = if gqa { "GQA (8 kv heads)" } else { "MHA (32 kv heads)" };
+        println!(
+            "  {name}: {} cycles/token ({:.2} ms), wall {wall:.1}s",
+            r.total_cycles,
+            r.total_cycles as f64 / 1e6
+        );
+        table.row(&[
+            name.into(),
+            format!("{}", r.total_cycles),
+            format!("{:.2}", r.total_cycles as f64 / 1e6),
+            format!("{:.0} MiB", kv_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.1}%", 100.0 * r.mean_core_util),
+            format!("{:.1}%", 100.0 * r.mean_dram_util),
+        ]);
+
+        // Utilization timeline (Fig. 5's plot): mean across cores per bucket.
+        let timeline: Vec<f64> = sim
+            .util_timeline()
+            .iter()
+            .map(|s| s.iter().sum::<f64>() / s.len() as f64)
+            .collect();
+        util_lines.push((name, timeline, wall));
+    }
+
+    table.print();
+
+    println!("\nutilization over time (each char = 100k cycles, 0-9 = 0-90%+):");
+    for (name, timeline, wall) in &util_lines {
+        let line: String = timeline
+            .iter()
+            .map(|&u| char::from_digit((u * 10.0).min(9.0) as u32, 10).unwrap())
+            .collect();
+        println!("  {name:<18} [{line}]  (sim wall {wall:.1}s)");
+    }
+
+    // Attention share of total work (cycles attributable to attention ops).
+    println!("\nattention op share of FLOPs:");
+    for gqa in [true, false] {
+        let cfg_model = TransformerCfg::llama3_8b(gqa).with_layers(layers);
+        let g = llama3(batch, ctx, &cfg_model);
+        let attn_flops: u64 = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::FusedAttention { .. }))
+            .map(|n| g.node_flops(n))
+            .sum();
+        println!(
+            "  {}: {:.1}% of {:.1} GFLOP/token (KV traffic differs 4x, FLOPs identical)",
+            if gqa { "GQA" } else { "MHA" },
+            100.0 * attn_flops as f64 / g.flops() as f64,
+            g.flops() as f64 / 1e9
+        );
+    }
+    println!("\n(paper: MHA substantially increases attention latency and");
+    println!(" underutilizes the cores; GQA restores utilization — the gap");
+    println!(" above is the same mechanism at reduced scale)");
+}

@@ -1,0 +1,6 @@
+fn main() {
+    std::fs::write("configs/mobile.json", onnxim::config::NpuConfig::mobile().to_json()).unwrap();
+    std::fs::write("configs/server.json", onnxim::config::NpuConfig::server().to_json()).unwrap();
+    std::fs::write("configs/server_crossbar.json", onnxim::config::NpuConfig::server().with_crossbar_noc().to_json()).unwrap();
+    println!("configs written");
+}

@@ -1,0 +1,61 @@
+//! Quickstart: simulate a small model on both Table-II NPU configs.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Walks the full public API: build a graph, run the optimizer, pick a
+//! scheduling policy, simulate, and read the report.
+
+use onnxim::config::NpuConfig;
+use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
+use onnxim::graph::{Activation, Graph, OpKind};
+use onnxim::scheduler::Fcfs;
+use onnxim::sim::{NoDriver, Simulator};
+
+/// Build a 3-layer MLP with explicit GELU nodes (so the optimizer has
+/// fusion work to do).
+fn build_model(batch: usize, dim: usize) -> Graph {
+    let mut g = Graph::new("quickstart-mlp");
+    let mut cur = g.activation("x", &[batch, dim, dim]);
+    g.inputs = vec![cur];
+    for i in 0..3 {
+        let w = g.weight(&format!("fc{i}.w"), &[dim, dim]);
+        let h = g.activation(&format!("fc{i}.h"), &[batch, dim, dim]);
+        g.node(
+            &format!("fc{i}"),
+            OpKind::MatMul { activation: Activation::None },
+            &[cur, w],
+            &[h],
+        );
+        let a = g.activation(&format!("fc{i}.act"), &[batch, dim, dim]);
+        g.node(&format!("gelu{i}"), OpKind::Gelu, &[h], &[a]);
+        cur = a;
+    }
+    g.outputs = vec![cur];
+    g
+}
+
+fn main() {
+    for cfg in [NpuConfig::mobile(), NpuConfig::server()] {
+        let mut graph = build_model(1, 512);
+        let report = optimize(&mut graph, OptLevel::Extended);
+        println!("== {} NPU ==", cfg.name);
+        println!("model: {}", summarize(&graph));
+        println!(
+            "optimizer fused {} activations into matmuls",
+            report.activation_fused
+        );
+        let mut sim = Simulator::new(cfg.clone(), Box::new(Fcfs::new()));
+        sim.add_request(graph, 0, 0);
+        let t0 = std::time::Instant::now();
+        let r = sim.run(&mut NoDriver);
+        println!("{}", r.summary());
+        println!(
+            "wall: {:.3}s ({:.1}M simulated cycles/s, {} loop iterations)\n",
+            t0.elapsed().as_secs_f64(),
+            r.total_cycles as f64 / t0.elapsed().as_secs_f64() / 1e6,
+            sim.iterations
+        );
+    }
+}

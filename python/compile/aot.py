@@ -1,0 +1,120 @@
+"""AOT pipeline: lower the L2 entry points to HLO **text** artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids. See /opt/xla-example/README.md.
+
+Alongside each artifact we dump binary f32 fixtures (inputs from a fixed
+seed + the oracle's outputs) so the Rust runtime can verify numerics
+end-to-end without Python (examples/functional_e2e.rs).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_f32(path, arr):
+    arr = jnp.asarray(arr, jnp.float32)
+    flat = arr.reshape(-1)
+    with open(path, "wb") as f:
+        f.write(struct.pack(f"<{flat.size}f", *map(float, flat)))
+
+
+def export(name, fn, example_args, expected, out_dir, manifest):
+    """Lower `fn`, write HLO text + input/output fixtures."""
+    lowered = jax.jit(fn).lower(*example_args)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    arg_shapes = []
+    for i, a in enumerate(example_args):
+        write_f32(os.path.join(out_dir, f"{name}.in{i}.bin"), a)
+        arg_shapes.append(list(a.shape))
+    out_shapes = []
+    for i, o in enumerate(expected):
+        write_f32(os.path.join(out_dir, f"{name}.out{i}.bin"), o)
+        out_shapes.append(list(o.shape))
+    manifest[name] = {"inputs": arg_shapes, "outputs": out_shapes}
+    print(f"  {name}: hlo={os.path.getsize(hlo_path)}B args={arg_shapes} outs={out_shapes}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat: Makefile may pass --out <file>; use its directory.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    key = jax.random.PRNGKey(42)
+
+    # 1. Tile GEMM (the systolic array op): 64x128 @ 128x64.
+    k1, k2, key = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (64, 128), jnp.float32)
+    w = jax.random.normal(k2, (128, 64), jnp.float32)
+    export("gemm", model.gemm_entry, (x, w), (ref.matmul_ref(x, w),), out_dir, manifest)
+
+    # 2. Decode attention with GQA (8 heads, 2 KV heads, 128-token cache).
+    kq, kk, kv, key = jax.random.split(key, 4)
+    heads, kv_heads, hd, seq_kv = 8, 2, 64, 128
+    q = jax.random.normal(kq, (heads, hd), jnp.float32)
+    k_cache = jax.random.normal(kk, (kv_heads, seq_kv, hd), jnp.float32)
+    v_cache = jax.random.normal(kv, (kv_heads, seq_kv, hd), jnp.float32)
+    expected = ref.attention_decode_ref(q, k_cache, v_cache)
+    export(
+        "attention_decode",
+        model.attention_decode_entry,
+        (q, k_cache, v_cache),
+        (expected,),
+        out_dir,
+        manifest,
+    )
+
+    # 3. Full transformer block (seq 16, d 128, 4 heads, ff 256).
+    kx, kp, key = jax.random.split(key, 3)
+    seq, d, heads_b, d_ff = 16, 128, 4, 256
+    xb = jax.random.normal(kx, (seq, d), jnp.float32) * 0.5
+    params = ref.make_block_params(kp, d, heads_b, d_ff)
+    arg_list = (
+        xb,
+        params["wq"], params["wk"], params["wv"], params["wo"],
+        params["w1"], params["w2"],
+        params["g1"], params["b1"], params["g2"], params["b2"],
+    )
+    expected_block = ref.transformer_block_ref(xb, params)
+
+    def block_fn(x, wq, wk, wv, wo, w1, w2, g1, b1, g2, b2):
+        return model.transformer_block_entry(
+            x, wq, wk, wv, wo, w1, w2, g1, b1, g2, b2, heads=heads_b
+        )
+
+    export("transformer_block", block_fn, arg_list, (expected_block,), out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

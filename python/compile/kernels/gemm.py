@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: tiled weight-stationary GEMM.
+
+This is the systolic array's math — the compute hot-spot the simulator's
+analytic core model prices at ``l + width + height - 1`` cycles. The
+BlockSpec tiling mirrors the simulator's MVIN/MVOUT schedule exactly: the
+grid walks (m-tile, n-tile, k-tile) with the output block resident in VMEM
+across the k loop (the accumulator SRAM), and each (A-block, B-block) pair
+staged into VMEM (the scratchpad partition).
+
+TPU note (DESIGN.md §Hardware-Adaptation): block sizes default to the
+128x128 MXU-aligned tile; run under ``interpret=True`` on CPU (real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, k_tiles: int):
+    """One grid step: accumulate x_block @ w_block into the output block.
+
+    The output BlockSpec maps every k index to the same (i, j) block, so
+    Pallas keeps it VMEM-resident across the k loop — the accumulator.
+    """
+    kt = pl.program_id(2)
+
+    @pl.when(kt == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(x, w, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Tiled GEMM: ``x[M,K] @ w[K,N]`` with f32 accumulation.
+
+    Shapes need not be multiples of the block size: inputs are zero-padded
+    to block multiples (sound for matmul accumulation) and the output is
+    sliced back — interpret-mode Pallas does not zero partial edge blocks.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    k_tiles = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, k_tiles=k_tiles),
+        grid=(mp // bm, np_ // bn, k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kt: (i, kt)),
+            pl.BlockSpec((bk, bn), lambda i, j, kt: (kt, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:m, :n]

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (pytest) — the CORE correctness signal for the L1 layer. The
+references use only `jax.numpy`, no Pallas, no custom lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain matmul in f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def gelu_ref(x):
+    """tanh-approximated GELU (the NPU vector-unit flavor)."""
+    x = x.astype(jnp.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def layernorm_skip_ref(a, b, gamma, beta, eps=1e-5):
+    """Fused skip + layernorm (the paper's LN+skip fusion, §II-A)."""
+    return layernorm_ref(a + b, gamma, beta, eps)
+
+
+def softmax_ref(x):
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_decode_ref(q, k_cache, v_cache):
+    """Single-token attention against a KV cache.
+
+    q: [heads, head_dim]; k_cache/v_cache: [kv_heads, seq_kv, head_dim].
+    GQA when kv_heads < heads (heads share KV within a group).
+    """
+    heads, head_dim = q.shape
+    kv_heads = k_cache.shape[0]
+    group = heads // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+    outs = []
+    for h in range(heads):
+        kv = h // group
+        scores = (k_cache[kv] @ q[h]) * scale            # [seq_kv]
+        p = softmax_ref(scores)
+        outs.append(p @ v_cache[kv])                     # [head_dim]
+    return jnp.stack(outs)
+
+
+def transformer_block_ref(x, params):
+    """Pre-LN transformer block forward (self-attention over x itself).
+
+    x: [seq, d]. params: dict with wq, wk, wv, wo, w1, w2, g1, b1, g2, b2.
+    """
+    seq, d = x.shape
+    heads = params["heads"]
+    hd = d // heads
+    h = layernorm_ref(x, params["g1"], params["b1"])
+    q = (h @ params["wq"]).reshape(seq, heads, hd)
+    k = (h @ params["wk"]).reshape(seq, heads, hd)
+    v = (h @ params["wv"]).reshape(seq, heads, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    outs = []
+    for hh in range(heads):
+        scores = (q[:, hh] @ k[:, hh].T) * scale
+        p = softmax_ref(scores)
+        outs.append(p @ v[:, hh])
+    attn = jnp.concatenate(outs, axis=-1)
+    x = x + attn @ params["wo"]
+    h2 = layernorm_ref(x, params["g2"], params["b2"])
+    x = x + gelu_ref(h2 @ params["w1"]) @ params["w2"]
+    return x
+
+
+def make_block_params(key, d, heads, d_ff):
+    """Deterministic random parameters for a block."""
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(jnp.float32(d))
+    return {
+        "heads": heads,
+        "wq": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w1": jax.random.normal(ks[4], (d, d_ff), jnp.float32) * s,
+        "w2": jax.random.normal(ks[5], (d_ff, d), jnp.float32) / jnp.sqrt(jnp.float32(d_ff)),
+        "g1": jnp.ones((d,), jnp.float32),
+        "b1": jnp.zeros((d,), jnp.float32),
+        "g2": jnp.ones((d,), jnp.float32),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }

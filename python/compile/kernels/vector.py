@@ -1,0 +1,125 @@
+"""L1 Pallas kernels for the NPU vector unit: GELU, fused LayerNorm(+skip),
+softmax.
+
+These are the "emerging operators" the paper highlights (layer
+normalization, skip connections — §I). Each kernel processes rows resident
+in VMEM, mirroring the simulator's vector-unit templates
+(rust/src/lowering/vector.rs): one pass per row block, reductions on-chip.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+@jax.jit
+def gelu(x):
+    """Element-wise tanh-GELU over a 2D tensor, row-blocked."""
+    m, n = x.shape
+    bm = min(128, m)
+    mp = -(-m // bm) * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        _gelu_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:m]
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Row-wise LayerNorm: x[M,N], gamma/beta[N]."""
+    m, n = x.shape
+    bm = min(128, m)
+    mp = -(-m // bm) * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:m]
+
+
+def _ln_skip_kernel(a_ref, b_ref, g_ref, bb_ref, o_ref, *, eps: float):
+    x = a_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + bb_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm_skip(a, b, gamma, beta, eps: float = 1e-5):
+    """Fused skip-connection + LayerNorm: LN(a + b) in one VMEM pass —
+    the §II-A fusion the simulator's optimizer performs."""
+    m, n = a.shape
+    bm = min(128, m)
+    mp = -(-m // bm) * bm
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+        b = jnp.pad(b, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_ln_skip_kernel, eps=eps),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(a, b, gamma, beta)
+    return out[:m]
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def softmax(x):
+    """Row-wise numerically-stable softmax."""
+    m, n = x.shape
+    bm = min(128, m)
+    mp = -(-m // bm) * bm
+    # Pad with -inf so padded rows don't produce NaN (they're sliced off).
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)), constant_values=0.0) if mp != m else x
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:m]

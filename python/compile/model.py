@@ -1,0 +1,73 @@
+"""L2: functional models assembled from the L1 Pallas kernels.
+
+These are the *functional-execution mode* of the simulator: the same
+computations whose timing the Rust simulator models, computed numerically.
+`aot.py` lowers the jitted entry points once to HLO text; the Rust runtime
+(rust/src/runtime/) loads and executes them via PJRT — Python is never on
+the simulation path.
+
+Entry points (all pure, jit-able):
+  - ``gemm_entry``            — one systolic GEMM tile op
+  - ``attention_decode_entry``— one-token attention against a KV cache
+                                 (the GEMV bottleneck of §II-E)
+  - ``transformer_block_entry`` — a full pre-LN block forward
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_k
+from .kernels import vector as vec_k
+
+
+def gemm_entry(x, w):
+    """Tile GEMM through the Pallas kernel (f32 accumulate)."""
+    return (gemm_k.gemm(x, w),)
+
+
+def attention_decode_entry(q, k_cache, v_cache):
+    """Single-token multi-head attention against a KV cache.
+
+    q: [heads, head_dim]; k_cache/v_cache: [kv_heads, seq_kv, head_dim]
+    (GQA when kv_heads < heads). All matmuls go through the Pallas GEMM;
+    softmax through the Pallas vector kernel.
+    """
+    heads, head_dim = q.shape
+    kv_heads, seq_kv, _ = k_cache.shape
+    group = heads // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    outs = []
+    for kv in range(kv_heads):
+        # Scores for the whole group against this KV head: the K tile is
+        # loaded once and reused by `group` query heads — the GQA traffic
+        # saving the simulator's lowering models (lowering/gemm.rs).
+        qg = q[kv * group : (kv + 1) * group]             # [group, hd]
+        scores = gemm_k.gemm(qg, k_cache[kv].T) * scale   # [group, seq_kv]
+        p = vec_k.softmax(scores)                         # [group, seq_kv]
+        outs.append(gemm_k.gemm(p, v_cache[kv]))          # [group, hd]
+    return (jnp.concatenate(outs, axis=0),)
+
+
+def transformer_block_entry(x, wq, wk, wv, wo, w1, w2, g1, b1, g2, b2, *, heads=4):
+    """Pre-LN transformer block: LN -> QKV -> MHA -> proj -> skip ->
+    LN -> FFN(GELU) -> skip. Every matmul is the Pallas GEMM; LN/softmax/
+    GELU are the Pallas vector kernels; the final skip+LN of the next
+    block would use the fused layernorm_skip."""
+    seq, d = x.shape
+    hd = d // heads
+    h = vec_k.layernorm(x, g1, b1)
+    q = gemm_k.gemm(h, wq).reshape(seq, heads, hd)
+    k = gemm_k.gemm(h, wk).reshape(seq, heads, hd)
+    v = gemm_k.gemm(h, wv).reshape(seq, heads, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    outs = []
+    for hh in range(heads):
+        scores = gemm_k.gemm(q[:, hh], k[:, hh].T) * scale
+        p = vec_k.softmax(scores)
+        outs.append(gemm_k.gemm(p, v[:, hh]))
+    attn = jnp.concatenate(outs, axis=-1)
+    x = x + gemm_k.gemm(attn, wo)
+    h2 = vec_k.layernorm(x, g2, b2)
+    x = x + gemm_k.gemm(vec_k.gelu(gemm_k.gemm(h2, w1)), w2)
+    return (x,)

@@ -1,0 +1,105 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and block sizes for the GEMM) — the build-time
+correctness gate for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm import gemm
+from compile.kernels.vector import gelu, layernorm, layernorm_skip, softmax
+
+DIM = st.integers(min_value=1, max_value=96)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+class TestGemm:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**16))
+    def test_matches_ref_arbitrary_shapes(self, m, k, n, seed):
+        x = rand(seed, (m, k))
+        w = rand(seed + 1, (k, n))
+        got = gemm(x, w, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("block", [8, 16, 64, 128])
+    def test_block_size_invariant(self, block):
+        x = rand(7, (100, 70))
+        w = rand(8, (70, 90))
+        got = gemm(x, w, bm=block, bn=block, bk=block)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5)
+
+    def test_gemv_row(self):
+        # The decode-phase shape: M=1 (the paper's §II-E bottleneck).
+        x = rand(1, (1, 512))
+        w = rand(2, (512, 256))
+        np.testing.assert_allclose(
+            gemm(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-5
+        )
+
+    def test_f32_accumulation_exact_for_integers(self):
+        # Integer-valued inputs must be exact in f32 accumulation.
+        x = jnp.ones((64, 64), jnp.float32) * 3.0
+        w = jnp.ones((64, 64), jnp.float32) * 2.0
+        got = gemm(x, w)
+        assert float(got[0, 0]) == 64 * 6.0
+
+    def test_bf16_inputs_accumulate_in_f32(self):
+        x = rand(3, (64, 64)).astype(jnp.bfloat16)
+        w = rand(4, (64, 64)).astype(jnp.bfloat16)
+        got = gemm(x, w)
+        assert got.dtype == jnp.float32
+        want = ref.matmul_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+class TestVector:
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIM, n=st.integers(2, 96), seed=st.integers(0, 2**16))
+    def test_gelu(self, m, n, seed):
+        x = rand(seed, (m, n), 2.0)
+        np.testing.assert_allclose(gelu(x), ref.gelu_ref(x), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIM, n=st.integers(2, 96), seed=st.integers(0, 2**16))
+    def test_layernorm(self, m, n, seed):
+        x = rand(seed, (m, n), 3.0)
+        g = rand(seed + 1, (n,)) + 1.0
+        b = rand(seed + 2, (n,))
+        np.testing.assert_allclose(
+            layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=DIM, n=st.integers(2, 96), seed=st.integers(0, 2**16))
+    def test_layernorm_skip_fusion_equals_unfused(self, m, n, seed):
+        a = rand(seed, (m, n))
+        b = rand(seed + 1, (m, n))
+        g = jnp.ones((n,), jnp.float32)
+        bb = jnp.zeros((n,), jnp.float32)
+        fused = layernorm_skip(a, b, g, bb)
+        unfused = ref.layernorm_skip_ref(a, b, g, bb)
+        np.testing.assert_allclose(fused, unfused, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIM, n=st.integers(2, 96), seed=st.integers(0, 2**16))
+    def test_softmax(self, m, n, seed):
+        x = rand(seed, (m, n), 4.0)
+        got = softmax(x)
+        np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-5, atol=1e-6)
+        # Rows sum to 1.
+        np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(m), rtol=1e-5)
+
+    def test_softmax_large_logits_stable(self):
+        x = jnp.array([[1000.0, 1000.0, -1000.0]], jnp.float32)
+        got = np.asarray(softmax(x))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got[0, :2], [0.5, 0.5], atol=1e-6)

@@ -1,0 +1,49 @@
+//! End-to-end simulator throughput on the evaluation models: simulated
+//! cycles/s wall-clock (the §Perf headline) and key report metrics.
+//! `cargo bench --bench e2e_models`
+
+use onnxim::config::NpuConfig;
+use onnxim::graph::optimizer::{optimize, OptLevel};
+use onnxim::models;
+use onnxim::scheduler::Fcfs;
+use onnxim::sim::{NoDriver, Simulator};
+use onnxim::util::stats::Table;
+use std::time::Instant;
+
+fn main() {
+    println!("End-to-end simulation throughput (Server NPU, FCFS)\n");
+    let mut t = Table::new(&[
+        "model",
+        "sim cycles",
+        "sim ms@1GHz",
+        "wall s",
+        "Mcyc/s",
+        "core util",
+        "dram util",
+    ]);
+    for (name, batch) in [
+        ("resnet50", 1),
+        ("resnet50", 4),
+        ("gpt3-small-prefill", 1),
+        ("gpt3-small-decode", 1),
+        ("gpt3-small-decode", 8),
+    ] {
+        let mut g = models::by_name(name, batch).unwrap();
+        optimize(&mut g, OptLevel::Extended);
+        let mut sim = Simulator::new(NpuConfig::server(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        let t0 = Instant::now();
+        let r = sim.run(&mut NoDriver);
+        let wall = t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("{name} B{batch}"),
+            format!("{}", r.total_cycles),
+            format!("{:.3}", r.total_cycles as f64 / 1e6),
+            format!("{wall:.2}"),
+            format!("{:.1}", r.total_cycles as f64 / wall / 1e6),
+            format!("{:.1}%", 100.0 * r.mean_core_util),
+            format!("{:.1}%", 100.0 * r.mean_dram_util),
+        ]);
+    }
+    t.print();
+}

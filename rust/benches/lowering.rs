@@ -1,0 +1,40 @@
+//! Lowering throughput: tiles and instructions generated per second for
+//! the evaluation models — the front-end cost the paper's §I claims is
+//! "optimized for fast simulation speed". `cargo bench --bench lowering`
+
+use onnxim::config::NpuConfig;
+use onnxim::graph::optimizer::{optimize, OptLevel};
+use onnxim::lowering::{lower_graph, AddressMap, LoweringParams};
+use onnxim::models;
+use onnxim::util::stats::Table;
+use std::time::Instant;
+
+fn main() {
+    println!("Lowering throughput (Server NPU tiling)\n");
+    let cfg = NpuConfig::server();
+    let p = LoweringParams::from_config(&cfg);
+    let mut t = Table::new(&["model", "nodes", "tiles", "instrs", "lower ms", "Minstr/s"]);
+    for name in ["resnet50", "gpt3-small-prefill", "gpt3-small-decode", "llama3-8b-gqa"] {
+        let mut g = models::by_name(name, 1).unwrap();
+        optimize(&mut g, OptLevel::Extended);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let t0 = Instant::now();
+        let lowered = lower_graph(&g, &amap, &p, 0).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let tiles: usize = lowered.iter().map(|(_, ts)| ts.len()).sum();
+        let instrs: usize = lowered
+            .iter()
+            .flat_map(|(_, ts)| ts.iter())
+            .map(|tile| tile.instrs.len())
+            .sum();
+        t.row(&[
+            name.into(),
+            format!("{}", g.nodes.len()),
+            format!("{tiles}"),
+            format!("{instrs}"),
+            format!("{:.2}", wall * 1e3),
+            format!("{:.2}", instrs as f64 / wall / 1e6),
+        ]);
+    }
+    t.print();
+}

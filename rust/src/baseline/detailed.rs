@@ -1,0 +1,270 @@
+//! Fine-grained ("Accel-sim-like") simulator.
+//!
+//! Conventional GPU/accelerator simulators replay every dynamic operation:
+//! for a tensor-core/systolic workload the simulated work is proportional
+//! to the MAC count, because each fixed-size fragment/tile operation is an
+//! instruction in the trace (§III-B: "the number of dynamic instructions
+//! in the trace for Accel-sim is proportional to the number of fixed-size
+//! tiles from the GEMM"). This module reproduces that cost model honestly:
+//! it simulates the systolic array *per PE, per cycle* — the same
+//! microarchitecture ONNXim prices analytically — so wall-clock comparisons
+//! against it are apples-to-apples (same host, same workload, same
+//! simulated hardware).
+//!
+//! The returned cycle counts agree with the analytic model (same dataflow),
+//! which is exactly the paper's point: you pay 100-1000x wall-clock for the
+//! same answer.
+
+use crate::config::NpuConfig;
+use crate::graph::{Graph, OpKind};
+
+/// Result of a fine-grained simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct DetailedResult {
+    pub cycles: u64,
+    /// Checksum of simulated PE state: forces the per-PE work to be real
+    /// (not optimized away) and makes runs comparable.
+    pub checksum: u64,
+    pub macs: u64,
+}
+
+/// Per-PE, per-cycle weight-stationary systolic array model.
+struct PeArray {
+    h: usize,
+    w: usize,
+    /// Stationary weights, one per PE.
+    weights: Vec<u64>,
+    /// Horizontal activation pipeline registers (one per PE).
+    a_regs: Vec<u64>,
+    /// Vertical partial-sum pipeline registers (one per PE).
+    psums: Vec<u64>,
+    checksum: u64,
+}
+
+impl PeArray {
+    fn new(h: usize, w: usize) -> Self {
+        PeArray {
+            h,
+            w,
+            weights: vec![0; h * w],
+            a_regs: vec![0; h * w],
+            psums: vec![0; h * w],
+            checksum: 0,
+        }
+    }
+
+    /// Stream one weight row into the array (shadow load), 1 cycle.
+    fn preload_row(&mut self, r: usize, seed: u64) {
+        for c in 0..self.w {
+            self.weights[r * self.w + c] = seed.wrapping_add((r * self.w + c) as u64) | 1;
+        }
+    }
+
+    /// One compute cycle: activations shift right, psums shift down, every
+    /// active PE MACs. `t` is the cycle index within the pass; `l` the
+    /// number of streamed rows.
+    fn compute_cycle(&mut self, t: usize, l: u64, seed: u64) {
+        let (h, w) = (self.h, self.w);
+        // Shift right-to-left in storage order so each value moves once.
+        for r in 0..h {
+            for c in (1..w).rev() {
+                self.a_regs[r * w + c] = self.a_regs[r * w + c - 1];
+            }
+            // New skewed input enters column 0 of row r at cycle t >= r.
+            self.a_regs[r * w] = if t >= r && ((t - r) as u64) < l {
+                seed.wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add((t - r) as u64 ^ (r as u64) << 32)
+                    | 1
+            } else {
+                0
+            };
+        }
+        // Psums shift down; bottom row drains into the checksum.
+        for c in 0..w {
+            let drained = self.psums[(h - 1) * w + c];
+            self.checksum = self.checksum.wrapping_add(drained).rotate_left(1);
+            for r in (1..h).rev() {
+                self.psums[r * w + c] = self.psums[(r - 1) * w + c];
+            }
+            self.psums[c] = 0;
+        }
+        // MAC at every PE holding a live activation.
+        for r in 0..h {
+            for c in 0..w {
+                let a = self.a_regs[r * w + c];
+                if a != 0 {
+                    let i = r * w + c;
+                    self.psums[i] =
+                        self.psums[i].wrapping_add(a.wrapping_mul(self.weights[i]));
+                }
+            }
+        }
+    }
+}
+
+/// Simulate an `M x K x N` GEMM at per-PE granularity. Memory is a simple
+/// bandwidth/latency model (the fine-grained cost is the compute replay —
+/// matching where trace-driven simulators actually spend their time).
+pub fn simulate_gemm_detailed(m: u64, k: u64, n: u64, cfg: &NpuConfig) -> DetailedResult {
+    let h = cfg.systolic_height;
+    let w = cfg.systolic_width;
+    let mut array = PeArray::new(h, w);
+    let mut cycles: u64 = 0;
+    let mut macs: u64 = 0;
+    // Single-core simulation: the full DRAM bandwidth is available.
+    let bw = cfg.dram.bandwidth_gbps / cfg.core_freq_ghz;
+    let eb = cfg.element_bytes as u64;
+    let mut mem_cycles: f64 = 0.0;
+
+    // Fixed-size array passes: (h x w) weight tiles, l = min(m, pass rows).
+    for k0 in (0..k).step_by(h) {
+        let th = h.min((k - k0) as usize);
+        for n0 in (0..n).step_by(w) {
+            let tw = w.min((n - n0) as usize);
+            // Weight preload: one row per cycle.
+            for r in 0..th {
+                array.preload_row(r, k0 ^ n0 ^ r as u64);
+                cycles += 1;
+            }
+            mem_cycles += (th * tw) as f64 * eb as f64 / bw;
+            // Stream all M rows through this weight tile.
+            let l = m;
+            let pass = l as usize + th + tw - 1;
+            for t in 0..pass {
+                array.compute_cycle(t, l, (k0 << 20) ^ n0 ^ t as u64);
+                cycles += 1;
+            }
+            mem_cycles += (l * th as u64) as f64 * eb as f64 / bw;
+            macs += l * th as u64 * tw as u64;
+        }
+    }
+    // Memory time overlaps compute; the slower side dominates.
+    let total = cycles.max(mem_cycles as u64);
+    DetailedResult { cycles: total, checksum: array.checksum, macs }
+}
+
+/// Run a whole graph on the fine-grained model (sequential ops, conv via
+/// im2col-GEMM, attention as its constituent GEMMs, element-wise on a
+/// per-element loop). Used for the Fig. 3a end-to-end comparison.
+pub fn simulate_graph_detailed(g: &Graph, cfg: &NpuConfig) -> DetailedResult {
+    let mut cycles = 0u64;
+    let mut checksum = 0u64;
+    let mut macs = 0u64;
+    let order = g.topo_order().expect("valid graph");
+    let vec_per_cycle = (cfg.vector_lanes * cfg.vector_alus_per_lane) as u64;
+    for nid in order {
+        let node = &g.nodes[nid];
+        match &node.op {
+            OpKind::MatMul { .. } => {
+                let a = &g.tensors[node.inputs[0]].shape;
+                let b = &g.tensors[node.inputs[1]].shape;
+                let batch: u64 =
+                    a[..a.len() - 2].iter().map(|&d| d as u64).product::<u64>().max(1);
+                let (m, k) = (a[a.len() - 2] as u64, a[a.len() - 1] as u64);
+                let n = b[b.len() - 1] as u64;
+                for _ in 0..batch {
+                    let r = simulate_gemm_detailed(m, k, n, cfg);
+                    cycles += r.cycles;
+                    checksum = checksum.wrapping_add(r.checksum);
+                    macs += r.macs;
+                }
+            }
+            OpKind::Conv { out_channels, kernel, .. } => {
+                let x = &g.tensors[node.inputs[0]].shape;
+                let o = &g.tensors[node.outputs[0]].shape;
+                let m = (o[2] * o[3]) as u64;
+                let k = (x[1] * kernel[0] * kernel[1]) as u64;
+                let n = *out_channels as u64;
+                for _ in 0..x[0] {
+                    let r = simulate_gemm_detailed(m, k, n, cfg);
+                    cycles += r.cycles;
+                    checksum = checksum.wrapping_add(r.checksum);
+                    macs += r.macs;
+                }
+            }
+            OpKind::FusedAttention { heads, head_dim, seq_q, seq_kv, .. } => {
+                let x = &g.tensors[node.inputs[0]].shape;
+                let batch = x[0] as u64;
+                for _ in 0..batch * *heads as u64 {
+                    let r1 = simulate_gemm_detailed(*seq_q as u64, *head_dim as u64, *seq_kv as u64, cfg);
+                    let r2 = simulate_gemm_detailed(*seq_q as u64, *seq_kv as u64, *head_dim as u64, cfg);
+                    cycles += r1.cycles + r2.cycles;
+                    checksum = checksum.wrapping_add(r1.checksum ^ r2.checksum);
+                    macs += r1.macs + r2.macs;
+                }
+            }
+            _ => {
+                // Element-wise: one op per element through the vector unit,
+                // simulated element-by-element (the fine-grained way).
+                let elems = g.tensors[node.outputs[0]].numel();
+                let mut acc = checksum | 1;
+                for e in 0..elems {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(e);
+                }
+                checksum = checksum.wrapping_add(acc);
+                cycles += elems.div_ceil(vec_per_cycle);
+            }
+        }
+    }
+    DetailedResult { cycles, checksum, macs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+
+    #[test]
+    fn macs_exact() {
+        let r = simulate_gemm_detailed(32, 16, 24, &NpuConfig::mobile());
+        assert_eq!(r.macs, 32 * 16 * 24);
+    }
+
+    #[test]
+    fn cycles_close_to_analytic_formula() {
+        // Same dataflow as the analytic model: per (h,w) weight tile,
+        // preload h + stream (l + w + h - 1).
+        let cfg = NpuConfig::mobile();
+        let (m, k, n) = (64u64, 32u64, 16u64);
+        let r = simulate_gemm_detailed(m, k, n, &cfg);
+        let tiles = k.div_ceil(8) * n.div_ceil(8);
+        let analytic = tiles * (8 + m + 8 + 8 - 1);
+        let err = (r.cycles as f64 - analytic as f64).abs() / analytic as f64;
+        assert!(err < 0.05, "detailed {} vs analytic {analytic}", r.cycles);
+    }
+
+    #[test]
+    fn checksum_nonzero_and_deterministic() {
+        let a = simulate_gemm_detailed(16, 16, 16, &NpuConfig::mobile());
+        let b = simulate_gemm_detailed(16, 16, 16, &NpuConfig::mobile());
+        assert_ne!(a.checksum, 0, "PE work must be real");
+        assert_eq!(a.checksum, b.checksum);
+    }
+
+    #[test]
+    fn work_scales_with_macs_not_array() {
+        // Wall-clock proxy: simulated per-PE cycle count. Server array does
+        // the same GEMM in fewer passes but each pass costs h*w PE updates,
+        // so total PE work is comparable — the big array does NOT reduce
+        // fine-grained simulation work (the paper's core observation).
+        use std::time::Instant;
+        let t0 = Instant::now();
+        simulate_gemm_detailed(128, 128, 128, &NpuConfig::mobile());
+        let mobile = t0.elapsed();
+        let t1 = Instant::now();
+        simulate_gemm_detailed(128, 128, 128, &NpuConfig::server());
+        let server = t1.elapsed();
+        // Within 100x of each other (both ~proportional to MACs; the
+        // server pass has fill/drain overhead).
+        assert!(server < mobile * 100, "server {server:?} vs mobile {mobile:?}");
+    }
+
+    #[test]
+    fn graph_simulation_covers_all_ops() {
+        let g = crate::models::mlp(1, 64, 2);
+        let r = simulate_graph_detailed(&g, &NpuConfig::mobile());
+        // mlp input is [batch, dim] so each matmul is a GEMV: m=1.
+        assert_eq!(r.macs, 2 * 1 * 64 * 64);
+        assert!(r.cycles > 0);
+    }
+}

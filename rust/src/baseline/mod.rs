@@ -1,0 +1,13 @@
+//! Baseline simulators the paper compares and validates against.
+//!
+//! - [`detailed`] — an Accel-sim stand-in: a fine-grained simulator whose
+//!   dynamic work scales with the number of MACs (per-PE, per-cycle
+//!   modeling), used as the wall-clock comparison target for Fig. 2 and
+//!   Fig. 3a. See DESIGN.md §3 for the substitution argument.
+//! - [`rtl_ref`] — a Gemmini-RTL stand-in: a cycle-exact, register-level
+//!   model of one weight-stationary core (input skew, shadow weight
+//!   registers, column psum pipelines, accumulator write port), used as
+//!   ground truth for the Fig. 3b core-model validation.
+
+pub mod detailed;
+pub mod rtl_ref;

@@ -1,0 +1,471 @@
+//! NPU configuration system.
+//!
+//! Configurations mirror Table II of the paper: the `Mobile NPU`
+//! (Ethos-U55-like) and `Server NPU` (TPUv4i-like) presets are provided as
+//! constructors and as JSON files under `configs/`.
+
+use crate::util::json::Json;
+
+/// DRAM device family. Timing defaults follow Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DramDevice {
+    Ddr4,
+    Hbm2,
+}
+
+/// Cycle-level DRAM configuration (timings in nanoseconds as in Table II;
+/// converted to core cycles internally since the cores run at 1 GHz).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub device: DramDevice,
+    /// Number of independent channels (each with its own controller).
+    pub channels: usize,
+    /// Banks per channel.
+    pub banks_per_channel: usize,
+    /// Row size in bytes (row-buffer granularity for hit/miss decisions).
+    pub row_bytes: u64,
+    /// Total DRAM bandwidth in GB/s across all channels.
+    pub bandwidth_gbps: f64,
+    /// Timing parameters in nanoseconds: CAS latency.
+    pub t_cl_ns: f64,
+    /// RAS-to-CAS delay.
+    pub t_rcd_ns: f64,
+    /// Row active time (min time between ACT and PRE).
+    pub t_ras_ns: f64,
+    /// Write recovery time.
+    pub t_wr_ns: f64,
+    /// Row precharge time.
+    pub t_rp_ns: f64,
+    /// Access granularity in bytes (one memory request transfers this much).
+    pub access_granularity: u64,
+    /// Per-controller request queue depth.
+    pub queue_depth: usize,
+}
+
+impl DramConfig {
+    /// DDR4 single-channel, 12 GB/s (Mobile NPU, Table II).
+    pub fn ddr4_mobile() -> Self {
+        DramConfig {
+            device: DramDevice::Ddr4,
+            channels: 1,
+            banks_per_channel: 16,
+            row_bytes: 2048,
+            bandwidth_gbps: 12.0,
+            t_cl_ns: 22.0,
+            t_rcd_ns: 22.0,
+            t_ras_ns: 56.0,
+            t_wr_ns: 24.0,
+            t_rp_ns: 22.0,
+            access_granularity: 64,
+            queue_depth: 32,
+        }
+    }
+
+    /// HBM2, 2 stacks = 16 channels, 614 GB/s (Server NPU, Table II).
+    pub fn hbm2_server() -> Self {
+        DramConfig {
+            device: DramDevice::Hbm2,
+            channels: 16,
+            banks_per_channel: 16,
+            row_bytes: 1024,
+            bandwidth_gbps: 614.0,
+            t_cl_ns: 7.0,
+            t_rcd_ns: 7.0,
+            t_ras_ns: 17.0,
+            t_wr_ns: 8.0,
+            t_rp_ns: 7.0,
+            access_granularity: 64,
+            queue_depth: 64,
+        }
+    }
+
+    /// Bytes transferred per core cycle per channel (data-bus throughput).
+    pub fn bytes_per_cycle_per_channel(&self, core_freq_ghz: f64) -> f64 {
+        self.bandwidth_gbps / core_freq_ghz / self.channels as f64
+    }
+}
+
+/// Which NoC model to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NocModel {
+    /// Simple latency + bandwidth model (the paper's "ONNXim-SN").
+    Simple,
+    /// Flit-level cycle-accurate crossbar (the paper's Booksim-backed model).
+    Crossbar,
+}
+
+/// NoC configuration. The paper uses an `cores × channels` crossbar with
+/// 64-bit flits.
+#[derive(Debug, Clone)]
+pub struct NocConfig {
+    pub model: NocModel,
+    /// Flit size in bytes (64-bit flits in Table II).
+    pub flit_bytes: u64,
+    /// Zero-load latency in cycles for the simple model (and per-hop
+    /// pipeline depth for the crossbar).
+    pub latency: u64,
+    /// Link bandwidth in bytes/cycle for the simple model.
+    pub link_bytes_per_cycle: f64,
+    /// Input-queue depth (flits) per port for the crossbar model.
+    pub input_queue_flits: usize,
+}
+
+impl NocConfig {
+    pub fn simple() -> Self {
+        NocConfig {
+            model: NocModel::Simple,
+            flit_bytes: 8,
+            latency: 12,
+            link_bytes_per_cycle: 8.0,
+            input_queue_flits: 64,
+        }
+    }
+
+    pub fn crossbar() -> Self {
+        NocConfig {
+            model: NocModel::Crossbar,
+            ..Self::simple()
+        }
+    }
+}
+
+/// Vector-unit operation latencies (cycles per vector-width batch), by op
+/// class. Matches the paper: "The configuration file also specifies the
+/// operation latency for each operator type."
+#[derive(Debug, Clone)]
+pub struct VectorLatency {
+    pub add: u64,
+    pub mul: u64,
+    pub gelu: u64,
+    pub exp: u64,
+    pub div: u64,
+    pub sqrt: u64,
+    pub max: u64,
+}
+
+impl Default for VectorLatency {
+    fn default() -> Self {
+        VectorLatency { add: 1, mul: 1, gelu: 4, exp: 4, div: 4, sqrt: 4, max: 1 }
+    }
+}
+
+/// Top-level NPU configuration (Table II).
+#[derive(Debug, Clone)]
+pub struct NpuConfig {
+    pub name: String,
+    /// Core clock in GHz. Both Table II configs use 1 GHz.
+    pub core_freq_ghz: f64,
+    pub num_cores: usize,
+    /// Systolic array width (columns; output-channel dimension).
+    pub systolic_width: usize,
+    /// Systolic array height (rows; reduction dimension).
+    pub systolic_height: usize,
+    /// Vector unit lanes (16 ALUs per lane per Table II).
+    pub vector_lanes: usize,
+    pub vector_alus_per_lane: usize,
+    /// Scratchpad size per core in KiB.
+    pub spad_kb: usize,
+    /// Accumulator SRAM per core in KiB.
+    pub acc_kb: usize,
+    /// Element size of activations/weights in bytes.
+    pub element_bytes: usize,
+    /// Accumulator element size in bytes (wider for partial sums).
+    pub acc_element_bytes: usize,
+    /// Maximum outstanding DMA requests per core.
+    pub dma_max_inflight: usize,
+    pub vector_latency: VectorLatency,
+    pub dram: DramConfig,
+    pub noc: NocConfig,
+}
+
+impl NpuConfig {
+    /// Table II "Mobile NPU": 4 cores, 8x8 systolic array, 8-lane vector
+    /// unit, 64 KB scratchpad, 16 KB accumulator, DDR4 12 GB/s, 4x2 crossbar.
+    pub fn mobile() -> Self {
+        NpuConfig {
+            name: "mobile".into(),
+            core_freq_ghz: 1.0,
+            num_cores: 4,
+            systolic_width: 8,
+            systolic_height: 8,
+            vector_lanes: 8,
+            vector_alus_per_lane: 16,
+            spad_kb: 64,
+            acc_kb: 16,
+            element_bytes: 1,
+            acc_element_bytes: 4,
+            dma_max_inflight: 16,
+            vector_latency: VectorLatency::default(),
+            dram: DramConfig::ddr4_mobile(),
+            noc: NocConfig::simple(),
+        }
+    }
+
+    /// Table II "Server NPU": 4 cores, 128x128 systolic array, 128-lane
+    /// vector unit, 32 MB scratchpad, 4 MB accumulator, HBM2 614 GB/s,
+    /// 4x16 crossbar.
+    pub fn server() -> Self {
+        NpuConfig {
+            name: "server".into(),
+            core_freq_ghz: 1.0,
+            num_cores: 4,
+            systolic_width: 128,
+            systolic_height: 128,
+            vector_lanes: 128,
+            vector_alus_per_lane: 16,
+            spad_kb: 32 * 1024,
+            acc_kb: 4 * 1024,
+            element_bytes: 2,
+            acc_element_bytes: 4,
+            // Enough outstanding 64 B requests to cover the memory
+            // round-trip at full HBM2 bandwidth (latency*bandwidth
+            // product: ~200 cyc * 154 B/cyc/core / 64 B ~= 480; sized 4x
+            // for burstiness).
+            dma_max_inflight: 2048,
+            vector_latency: VectorLatency::default(),
+            dram: DramConfig::hbm2_server(),
+            // Server-class NoC: links sized so the 4 cores can actually
+            // sink the 614 GB/s the HBM2 supplies (64 B / 512-bit flits,
+            // 160 B/cyc links). Table II's "64-bit flit" figure is only
+            // self-consistent for the Mobile NPU's 12 GB/s; a 4-port
+            // crossbar of 8 B/cyc links would cap memory bandwidth at
+            // 32 B/cyc. See DESIGN.md §6.
+            noc: NocConfig {
+                model: NocModel::Simple,
+                flit_bytes: 64,
+                latency: 12,
+                link_bytes_per_cycle: 160.0,
+                input_queue_flits: 256,
+            },
+        }
+    }
+
+    /// Switch to the flit-level crossbar NoC (paper's "ONNXim" variant, vs.
+    /// "ONNXim-SN" for the simple model).
+    pub fn with_crossbar_noc(mut self) -> Self {
+        self.noc.model = NocModel::Crossbar;
+        self
+    }
+
+    pub fn with_cores(mut self, n: usize) -> Self {
+        self.num_cores = n;
+        self
+    }
+
+    /// Scratchpad bytes per core.
+    pub fn spad_bytes(&self) -> u64 {
+        self.spad_kb as u64 * 1024
+    }
+
+    /// Accumulator bytes per core.
+    pub fn acc_bytes(&self) -> u64 {
+        self.acc_kb as u64 * 1024
+    }
+
+    /// Convert a nanosecond timing parameter to core cycles.
+    pub fn ns_to_cycles(&self, ns: f64) -> u64 {
+        (ns * self.core_freq_ghz).ceil() as u64
+    }
+
+    /// Peak MACs/cycle of one core's systolic array.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (self.systolic_width * self.systolic_height) as u64
+    }
+
+    /// Load a configuration from a JSON file.
+    pub fn from_json_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        self.as_json().pretty()
+    }
+
+    fn as_json(&self) -> Json {
+        let d = &self.dram;
+        let n = &self.noc;
+        let v = &self.vector_latency;
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("core_freq_ghz", Json::num(self.core_freq_ghz)),
+            ("num_cores", Json::num(self.num_cores as f64)),
+            ("systolic_width", Json::num(self.systolic_width as f64)),
+            ("systolic_height", Json::num(self.systolic_height as f64)),
+            ("vector_lanes", Json::num(self.vector_lanes as f64)),
+            ("vector_alus_per_lane", Json::num(self.vector_alus_per_lane as f64)),
+            ("spad_kb", Json::num(self.spad_kb as f64)),
+            ("acc_kb", Json::num(self.acc_kb as f64)),
+            ("element_bytes", Json::num(self.element_bytes as f64)),
+            ("acc_element_bytes", Json::num(self.acc_element_bytes as f64)),
+            ("dma_max_inflight", Json::num(self.dma_max_inflight as f64)),
+            (
+                "vector_latency",
+                Json::obj(vec![
+                    ("add", Json::num(v.add as f64)),
+                    ("mul", Json::num(v.mul as f64)),
+                    ("gelu", Json::num(v.gelu as f64)),
+                    ("exp", Json::num(v.exp as f64)),
+                    ("div", Json::num(v.div as f64)),
+                    ("sqrt", Json::num(v.sqrt as f64)),
+                    ("max", Json::num(v.max as f64)),
+                ]),
+            ),
+            (
+                "dram",
+                Json::obj(vec![
+                    (
+                        "device",
+                        Json::str(match d.device {
+                            DramDevice::Ddr4 => "ddr4",
+                            DramDevice::Hbm2 => "hbm2",
+                        }),
+                    ),
+                    ("channels", Json::num(d.channels as f64)),
+                    ("banks_per_channel", Json::num(d.banks_per_channel as f64)),
+                    ("row_bytes", Json::num(d.row_bytes as f64)),
+                    ("bandwidth_gbps", Json::num(d.bandwidth_gbps)),
+                    ("t_cl_ns", Json::num(d.t_cl_ns)),
+                    ("t_rcd_ns", Json::num(d.t_rcd_ns)),
+                    ("t_ras_ns", Json::num(d.t_ras_ns)),
+                    ("t_wr_ns", Json::num(d.t_wr_ns)),
+                    ("t_rp_ns", Json::num(d.t_rp_ns)),
+                    ("access_granularity", Json::num(d.access_granularity as f64)),
+                    ("queue_depth", Json::num(d.queue_depth as f64)),
+                ]),
+            ),
+            (
+                "noc",
+                Json::obj(vec![
+                    (
+                        "model",
+                        Json::str(match n.model {
+                            NocModel::Simple => "simple",
+                            NocModel::Crossbar => "crossbar",
+                        }),
+                    ),
+                    ("flit_bytes", Json::num(n.flit_bytes as f64)),
+                    ("latency", Json::num(n.latency as f64)),
+                    ("link_bytes_per_cycle", Json::num(n.link_bytes_per_cycle)),
+                    ("input_queue_flits", Json::num(n.input_queue_flits as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let dj = j.req("dram")?;
+        let nj = j.req("noc")?;
+        let vj = j.req("vector_latency")?;
+        Ok(NpuConfig {
+            name: j.req("name")?.as_str()?.to_string(),
+            core_freq_ghz: j.req("core_freq_ghz")?.as_f64()?,
+            num_cores: j.req("num_cores")?.as_usize()?,
+            systolic_width: j.req("systolic_width")?.as_usize()?,
+            systolic_height: j.req("systolic_height")?.as_usize()?,
+            vector_lanes: j.req("vector_lanes")?.as_usize()?,
+            vector_alus_per_lane: j.req("vector_alus_per_lane")?.as_usize()?,
+            spad_kb: j.req("spad_kb")?.as_usize()?,
+            acc_kb: j.req("acc_kb")?.as_usize()?,
+            element_bytes: j.req("element_bytes")?.as_usize()?,
+            acc_element_bytes: j.req("acc_element_bytes")?.as_usize()?,
+            dma_max_inflight: j.req("dma_max_inflight")?.as_usize()?,
+            vector_latency: VectorLatency {
+                add: vj.req("add")?.as_u64()?,
+                mul: vj.req("mul")?.as_u64()?,
+                gelu: vj.req("gelu")?.as_u64()?,
+                exp: vj.req("exp")?.as_u64()?,
+                div: vj.req("div")?.as_u64()?,
+                sqrt: vj.req("sqrt")?.as_u64()?,
+                max: vj.req("max")?.as_u64()?,
+            },
+            dram: DramConfig {
+                device: match dj.req("device")?.as_str()? {
+                    "ddr4" => DramDevice::Ddr4,
+                    "hbm2" => DramDevice::Hbm2,
+                    other => anyhow::bail!("unknown dram device '{other}'"),
+                },
+                channels: dj.req("channels")?.as_usize()?,
+                banks_per_channel: dj.req("banks_per_channel")?.as_usize()?,
+                row_bytes: dj.req("row_bytes")?.as_u64()?,
+                bandwidth_gbps: dj.req("bandwidth_gbps")?.as_f64()?,
+                t_cl_ns: dj.req("t_cl_ns")?.as_f64()?,
+                t_rcd_ns: dj.req("t_rcd_ns")?.as_f64()?,
+                t_ras_ns: dj.req("t_ras_ns")?.as_f64()?,
+                t_wr_ns: dj.req("t_wr_ns")?.as_f64()?,
+                t_rp_ns: dj.req("t_rp_ns")?.as_f64()?,
+                access_granularity: dj.req("access_granularity")?.as_u64()?,
+                queue_depth: dj.req("queue_depth")?.as_usize()?,
+            },
+            noc: NocConfig {
+                model: match nj.req("model")?.as_str()? {
+                    "simple" => NocModel::Simple,
+                    "crossbar" => NocModel::Crossbar,
+                    other => anyhow::bail!("unknown noc model '{other}'"),
+                },
+                flit_bytes: nj.req("flit_bytes")?.as_u64()?,
+                latency: nj.req("latency")?.as_u64()?,
+                link_bytes_per_cycle: nj.req("link_bytes_per_cycle")?.as_f64()?,
+                input_queue_flits: nj.req("input_queue_flits")?.as_usize()?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobile_matches_table2() {
+        let c = NpuConfig::mobile();
+        assert_eq!(c.num_cores, 4);
+        assert_eq!(c.systolic_width, 8);
+        assert_eq!(c.spad_kb, 64);
+        assert_eq!(c.acc_kb, 16);
+        assert_eq!(c.dram.channels, 1);
+        assert!((c.dram.bandwidth_gbps - 12.0).abs() < 1e-9);
+        assert_eq!(c.dram.t_cl_ns as u64, 22);
+    }
+
+    #[test]
+    fn server_matches_table2() {
+        let c = NpuConfig::server();
+        assert_eq!(c.systolic_width, 128);
+        assert_eq!(c.spad_kb, 32 * 1024);
+        assert_eq!(c.acc_kb, 4 * 1024);
+        assert_eq!(c.dram.device, DramDevice::Hbm2);
+        assert!((c.dram.bandwidth_gbps - 614.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = NpuConfig::server();
+        let j = c.to_json();
+        let c2 = NpuConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.name, "server");
+        assert_eq!(c2.systolic_width, c.systolic_width);
+        assert_eq!(c2.dram.channels, c.dram.channels);
+    }
+
+    #[test]
+    fn ns_conversion_at_1ghz_is_identity() {
+        let c = NpuConfig::mobile();
+        assert_eq!(c.ns_to_cycles(22.0), 22);
+        assert_eq!(c.ns_to_cycles(56.0), 56);
+    }
+
+    #[test]
+    fn dram_channel_bandwidth() {
+        let c = NpuConfig::server();
+        let bpc = c.dram.bytes_per_cycle_per_channel(c.core_freq_ghz);
+        assert!((bpc - 614.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_macs() {
+        assert_eq!(NpuConfig::mobile().peak_macs_per_cycle(), 64);
+        assert_eq!(NpuConfig::server().peak_macs_per_cycle(), 16384);
+    }
+}

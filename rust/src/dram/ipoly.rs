@@ -1,0 +1,95 @@
+//! IPOLY pseudo-random memory interleaving [Rau, ISCA'91].
+//!
+//! The channel index is the residue of the block-address polynomial modulo
+//! an irreducible polynomial over GF(2) of degree `k` (for `2^k` channels).
+//! Unlike modulo-2^k interleaving, IPOLY spreads power-of-two strides
+//! across all channels, which is exactly the access pattern tiled GEMM
+//! DMAs produce. The paper uses this scheme for channel load-balancing
+//! (§II-B).
+
+/// Irreducible polynomials over GF(2), degree 1..=6, low bits (implicit
+/// leading 1). E.g. degree 4: x^4 + x + 1 -> 0b0011.
+const IPOLY: [u64; 7] = [
+    0,      // degree 0 (unused)
+    0b1,    // x + 1
+    0b11,   // x^2 + x + 1
+    0b011,  // x^3 + x + 1
+    0b0011, // x^4 + x + 1
+    0b00101, // x^5 + x^2 + 1
+    0b000011, // x^6 + x + 1
+];
+
+/// Reduce the polynomial `addr` modulo the degree-`k` irreducible
+/// polynomial; the k-bit residue is the channel index.
+pub fn ipoly_hash(addr: u64, k: u32) -> u64 {
+    debug_assert!(k >= 1 && (k as usize) < IPOLY.len(), "unsupported channel count");
+    let poly = IPOLY[k as usize] | (1 << k); // add the leading term
+    let mut rem = addr;
+    // Polynomial long division: clear bits from the top down to degree k.
+    let mut bit = 63 - rem.leading_zeros().min(63) as i64;
+    while bit >= k as i64 {
+        if rem == 0 {
+            break;
+        }
+        bit = 63 - rem.leading_zeros() as i64;
+        if bit < k as i64 {
+            break;
+        }
+        rem ^= poly << (bit - k as i64);
+    }
+    rem & ((1 << k) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residue_in_range() {
+        for k in 1..=6u32 {
+            for a in 0..10_000u64 {
+                assert!(ipoly_hash(a, k) < (1 << k));
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_addresses_cover_all_channels() {
+        for k in [1u32, 2, 3, 4] {
+            let n = 1u64 << k;
+            let mut seen = vec![0u64; n as usize];
+            for a in 0..(n * 64) {
+                seen[ipoly_hash(a, k) as usize] += 1;
+            }
+            for (ch, &c) in seen.iter().enumerate() {
+                assert!(c > 0, "k={k}: channel {ch} never hit");
+            }
+        }
+    }
+
+    #[test]
+    fn power_of_two_stride_balances() {
+        // The motivating property: stride 2^k accesses hit all channels
+        // (modulo interleaving would hit exactly one).
+        let k = 4u32;
+        let n = 1u64 << k;
+        let mut seen = vec![0u64; n as usize];
+        for i in 0..1024u64 {
+            seen[ipoly_hash(i * n, k) as usize] += 1;
+        }
+        let max = *seen.iter().max().unwrap();
+        let min = *seen.iter().min().unwrap();
+        // Balanced to within 2x (exactly uniform for ideal IPOLY).
+        assert!(max <= 2 * min.max(1), "unbalanced: {seen:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(ipoly_hash(12345, 4), ipoly_hash(12345, 4));
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(ipoly_hash(0, 4), 0);
+    }
+}

@@ -1,0 +1,328 @@
+//! JSON serialization for graphs — an ONNX-GraphProto-shaped interchange
+//! format, so models exported from other frameworks (via a small converter)
+//! can be simulated without recompiling the simulator.
+//!
+//! The on-disk schema intentionally mirrors ONNX: a list of `node`s with an
+//! `op_type` string + attribute object, tensor tables with shapes and a
+//! weight/activation kind (ONNX initializers), and graph `input`/`output`
+//! lists.
+
+use super::{Activation, Graph, Node, OpKind, TensorInfo, TensorKind};
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+fn activation_str(a: Activation) -> &'static str {
+    match a {
+        Activation::None => "none",
+        Activation::Relu => "relu",
+        Activation::Gelu => "gelu",
+    }
+}
+
+fn activation_from(s: &str) -> Result<Activation> {
+    Ok(match s {
+        "none" => Activation::None,
+        "relu" => Activation::Relu,
+        "gelu" => Activation::Gelu,
+        other => bail!("unknown activation '{other}'"),
+    })
+}
+
+/// Serialize an op to (op_type, attributes).
+fn op_to_json(op: &OpKind) -> Json {
+    let attrs = match op {
+        OpKind::MatMul { activation } => {
+            Json::obj(vec![("activation", Json::str(activation_str(*activation)))])
+        }
+        OpKind::Conv { out_channels, kernel, stride, padding, activation, fused_bn, fused_skip } => {
+            Json::obj(vec![
+                ("out_channels", Json::num(*out_channels as f64)),
+                ("kernel", Json::usize_arr(kernel)),
+                ("stride", Json::usize_arr(stride)),
+                ("padding", Json::usize_arr(padding)),
+                ("activation", Json::str(activation_str(*activation))),
+                ("fused_bn", Json::Bool(*fused_bn)),
+                ("fused_skip", Json::Bool(*fused_skip)),
+            ])
+        }
+        OpKind::LayerNorm { fused_skip } => {
+            Json::obj(vec![("fused_skip", Json::Bool(*fused_skip))])
+        }
+        OpKind::MaxPool { kernel, stride, padding } => Json::obj(vec![
+            ("kernel", Json::usize_arr(kernel)),
+            ("stride", Json::usize_arr(stride)),
+            ("padding", Json::usize_arr(padding)),
+        ]),
+        OpKind::FusedAttention { heads, kv_heads, head_dim, seq_q, seq_kv } => Json::obj(vec![
+            ("heads", Json::num(*heads as f64)),
+            ("kv_heads", Json::num(*kv_heads as f64)),
+            ("head_dim", Json::num(*head_dim as f64)),
+            ("seq_q", Json::num(*seq_q as f64)),
+            ("seq_kv", Json::num(*seq_kv as f64)),
+        ]),
+        _ => Json::Obj(vec![]),
+    };
+    Json::obj(vec![("op_type", Json::str(op.op_type())), ("attrs", attrs)])
+}
+
+fn op_from_json(j: &Json) -> Result<OpKind> {
+    let ty = j.req("op_type")?.as_str()?;
+    let a = j.req("attrs")?;
+    Ok(match ty {
+        "MatMul" => OpKind::MatMul {
+            activation: activation_from(a.req("activation")?.as_str()?)?,
+        },
+        "Conv" => {
+            let arr2 = |key: &str| -> Result<[usize; 2]> {
+                let v = a.req(key)?.as_usize_arr()?;
+                if v.len() != 2 {
+                    bail!("'{key}' must have 2 entries");
+                }
+                Ok([v[0], v[1]])
+            };
+            OpKind::Conv {
+                out_channels: a.req("out_channels")?.as_usize()?,
+                kernel: arr2("kernel")?,
+                stride: arr2("stride")?,
+                padding: arr2("padding")?,
+                activation: activation_from(a.req("activation")?.as_str()?)?,
+                fused_bn: a.req("fused_bn")?.as_bool()?,
+                fused_skip: a.req("fused_skip")?.as_bool()?,
+            }
+        }
+        "BatchNormalization" => OpKind::BatchNorm,
+        "LayerNormalization" => OpKind::LayerNorm { fused_skip: a.req("fused_skip")?.as_bool()? },
+        "Softmax" => OpKind::Softmax,
+        "Gelu" => OpKind::Gelu,
+        "Relu" => OpKind::Relu,
+        "Add" => OpKind::Add,
+        "Mul" => OpKind::Mul,
+        "MaxPool" => {
+            let arr2 = |key: &str| -> Result<[usize; 2]> {
+                let v = a.req(key)?.as_usize_arr()?;
+                Ok([v[0], v[1]])
+            };
+            OpKind::MaxPool { kernel: arr2("kernel")?, stride: arr2("stride")?, padding: arr2("padding")? }
+        }
+        "GlobalAveragePool" => OpKind::GlobalAvgPool,
+        "FusedAttention" => OpKind::FusedAttention {
+            heads: a.req("heads")?.as_usize()?,
+            kv_heads: a.req("kv_heads")?.as_usize()?,
+            head_dim: a.req("head_dim")?.as_usize()?,
+            seq_q: a.req("seq_q")?.as_usize()?,
+            seq_kv: a.req("seq_kv")?.as_usize()?,
+        },
+        "Reshape" => OpKind::Reshape,
+        "Flatten" => OpKind::Flatten,
+        "Gather" => OpKind::Gather,
+        other => bail!("unknown op_type '{other}'"),
+    })
+}
+
+/// Serialize a graph to pretty JSON.
+pub fn to_json(g: &Graph) -> String {
+    let tensors = Json::Arr(
+        g.tensors
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::str(&t.name)),
+                    ("shape", Json::usize_arr(&t.shape)),
+                    (
+                        "kind",
+                        Json::str(match t.kind {
+                            TensorKind::Activation => "activation",
+                            TensorKind::Weight => "weight",
+                        }),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let nodes = Json::Arr(
+        g.nodes
+            .iter()
+            .map(|n| {
+                let mut obj = vec![("name".to_string(), Json::str(&n.name))];
+                if let Json::Obj(op_pairs) = op_to_json(&n.op) {
+                    obj.extend(op_pairs);
+                }
+                obj.push((
+                    "inputs".to_string(),
+                    Json::usize_arr(&n.inputs),
+                ));
+                obj.push((
+                    "outputs".to_string(),
+                    Json::usize_arr(&n.outputs),
+                ));
+                Json::Obj(obj)
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("name", Json::str(&g.name)),
+        ("tensors", tensors),
+        ("nodes", nodes),
+        ("inputs", Json::usize_arr(&g.inputs)),
+        ("outputs", Json::usize_arr(&g.outputs)),
+    ])
+    .pretty()
+}
+
+/// Parse a graph from JSON, then validate structure and shapes.
+pub fn from_json(text: &str) -> Result<Graph> {
+    let j = Json::parse(text)?;
+    let mut g = Graph::new(j.req("name")?.as_str()?);
+    for t in j.req("tensors")?.as_arr()? {
+        let kind = match t.req("kind")?.as_str()? {
+            "activation" => TensorKind::Activation,
+            "weight" => TensorKind::Weight,
+            other => bail!("unknown tensor kind '{other}'"),
+        };
+        g.tensors.push(TensorInfo {
+            name: t.req("name")?.as_str()?.to_string(),
+            shape: t.req("shape")?.as_usize_arr()?,
+            kind,
+        });
+    }
+    for (i, n) in j.req("nodes")?.as_arr()?.iter().enumerate() {
+        g.nodes.push(Node {
+            id: i,
+            name: n.req("name")?.as_str()?.to_string(),
+            op: op_from_json(n)?,
+            inputs: n.req("inputs")?.as_usize_arr()?,
+            outputs: n.req("outputs")?.as_usize_arr()?,
+        });
+    }
+    g.inputs = j.req("inputs")?.as_usize_arr()?;
+    g.outputs = j.req("outputs")?.as_usize_arr()?;
+    g.validate()?;
+    g.infer_shapes()?;
+    Ok(g)
+}
+
+/// Load and validate a graph from a file.
+pub fn load(path: &str) -> Result<Graph> {
+    from_json(&std::fs::read_to_string(path)?)
+}
+
+/// Save a graph to a file.
+pub fn save(g: &Graph, path: &str) -> Result<()> {
+    std::fs::write(path, to_json(g))?;
+    Ok(())
+}
+
+/// Human-readable model card: op histogram, parameter count, FLOPs.
+pub fn model_card(g: &Graph, element_bytes: usize) -> String {
+    let params: u64 = g
+        .tensors
+        .iter()
+        .filter(|t| t.kind == TensorKind::Weight)
+        .map(|t| t.numel())
+        .sum();
+    format!(
+        "{}\n  params: {:.2}M ({:.1} MiB @ {}B/elem)\n  flops/inference: {:.3} G\n",
+        super::optimizer::summarize(g),
+        params as f64 / 1e6,
+        (params as f64 * element_bytes as f64) / (1024.0 * 1024.0),
+        element_bytes,
+        g.flops() as f64 / 1e9,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.activation("x", &[2, 8]);
+        let w = g.weight("w", &[8, 4]);
+        let y = g.activation("y", &[2, 4]);
+        g.node("mm", OpKind::MatMul { activation: Activation::Gelu }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = tiny();
+        let j = to_json(&g);
+        let g2 = from_json(&j).unwrap();
+        assert_eq!(g2.name, "tiny");
+        assert_eq!(g2.nodes.len(), 1);
+        assert_eq!(g2.tensors.len(), 3);
+        assert_eq!(g2.nodes[0].op, OpKind::MatMul { activation: Activation::Gelu });
+    }
+
+    #[test]
+    fn conv_attrs_roundtrip() {
+        let mut g = Graph::new("c");
+        let x = g.activation("x", &[1, 3, 8, 8]);
+        let w = g.weight("w", &[16, 3, 3, 3]);
+        let y = g.activation("y", &[1, 16, 4, 4]);
+        let op = OpKind::Conv {
+            out_channels: 16,
+            kernel: [3, 3],
+            stride: [2, 2],
+            padding: [1, 1],
+            activation: Activation::Relu,
+            fused_bn: true,
+            fused_skip: false,
+        };
+        g.node("conv", op.clone(), &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let g2 = from_json(&to_json(&g)).unwrap();
+        assert_eq!(g2.nodes[0].op, op);
+    }
+
+    #[test]
+    fn attention_attrs_roundtrip() {
+        let mut g = Graph::new("a");
+        let x = g.activation("x", &[2, 1, 64]);
+        let y = g.activation("y", &[2, 1, 64]);
+        let op = OpKind::FusedAttention { heads: 8, kv_heads: 2, head_dim: 8, seq_q: 1, seq_kv: 512 };
+        g.node("attn", op.clone(), &[x], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let g2 = from_json(&to_json(&g)).unwrap();
+        assert_eq!(g2.nodes[0].op, op);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let g = tiny();
+        let path = std::env::temp_dir().join("onnxim_graph_test.json");
+        save(&g, path.to_str().unwrap()).unwrap();
+        let g2 = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(g2.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn invalid_json_rejected() {
+        assert!(from_json("{not json").is_err());
+    }
+
+    #[test]
+    fn corrupted_shapes_rejected() {
+        let mut g = tiny();
+        g.tensors[1].shape = vec![9, 4]; // breaks K match
+        let j = to_json(&g);
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let j = to_json(&tiny()).replace("MatMul", "Bogus");
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn model_card_mentions_params() {
+        let card = model_card(&tiny(), 2);
+        assert!(card.contains("params"));
+        assert!(card.contains("flops"));
+    }
+}

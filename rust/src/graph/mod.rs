@@ -1,0 +1,514 @@
+//! ONNX-like dataflow graph IR.
+//!
+//! The paper takes ONNX protobuf graphs through the ONNX Runtime's
+//! optimization flow. This image has no `onnx` package, so we provide a
+//! native IR with the same semantics: named tensors with shapes, operator
+//! nodes with attributes, topological execution order, shape inference,
+//! and a JSON serialization that mirrors the ONNX GraphProto structure
+//! (see DESIGN.md §3 for the substitution rationale).
+
+pub mod json;
+pub mod optimizer;
+
+use std::collections::HashMap;
+
+pub type TensorId = usize;
+pub type NodeId = usize;
+
+/// Where a tensor's storage comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Produced by a node or fed as a graph input.
+    Activation,
+    /// A weight/bias initializer, resident in DRAM before execution.
+    Weight,
+}
+
+/// A tensor in the graph: name, shape, and kind.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: TensorKind,
+}
+
+impl TensorInfo {
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+}
+
+/// Activation functions that can be fused into a producing op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    Gelu,
+}
+
+/// Operator set. A deliberately ONNX-shaped superset of what the paper's
+/// evaluation needs: GEMM/MatMul, Conv, pooling, normalization, attention,
+/// and element-wise ops, plus fused variants produced by the optimizer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Batched matrix multiply: `[.., M, K] x [.., K, N] -> [.., M, N]`.
+    /// Covers GEMV when `M == 1` (the LLM generation-phase bottleneck).
+    MatMul { activation: Activation },
+    /// 2D convolution, NCHW. `fused_bn` / `fused_skip` are set by the
+    /// optimizer (§II-A: conv can fuse batch-norm and/or skip connections).
+    Conv {
+        out_channels: usize,
+        kernel: [usize; 2],
+        stride: [usize; 2],
+        padding: [usize; 2],
+        activation: Activation,
+        fused_bn: bool,
+        fused_skip: bool,
+    },
+    /// Batch normalization (inference: scale+shift).
+    BatchNorm,
+    /// Layer normalization; `fused_skip` set by the optimizer
+    /// (§II-A: LN can fuse with a skip connection).
+    LayerNorm { fused_skip: bool },
+    Softmax,
+    Gelu,
+    Relu,
+    /// Element-wise add (skip connections).
+    Add,
+    /// Element-wise multiply.
+    Mul,
+    MaxPool { kernel: [usize; 2], stride: [usize; 2], padding: [usize; 2] },
+    GlobalAvgPool,
+    /// Fused multi-head attention over a KV cache (produced by the MHA
+    /// fusion pass, §II-A: "different heads of multi-head attention can be
+    /// fused"). `seq_q` is the query length (1 in generation), `seq_kv`
+    /// the KV-cache length — dynamic shapes per §I.
+    FusedAttention {
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        seq_q: usize,
+        seq_kv: usize,
+    },
+    /// Shape-only ops (no compute, no data movement at tile level).
+    Reshape,
+    Flatten,
+    /// Embedding row gather.
+    Gather,
+}
+
+impl OpKind {
+    /// ONNX-style op_type string for serialization and reporting.
+    pub fn op_type(&self) -> &'static str {
+        match self {
+            OpKind::MatMul { .. } => "MatMul",
+            OpKind::Conv { .. } => "Conv",
+            OpKind::BatchNorm => "BatchNormalization",
+            OpKind::LayerNorm { .. } => "LayerNormalization",
+            OpKind::Softmax => "Softmax",
+            OpKind::Gelu => "Gelu",
+            OpKind::Relu => "Relu",
+            OpKind::Add => "Add",
+            OpKind::Mul => "Mul",
+            OpKind::MaxPool { .. } => "MaxPool",
+            OpKind::GlobalAvgPool => "GlobalAveragePool",
+            OpKind::FusedAttention { .. } => "FusedAttention",
+            OpKind::Reshape => "Reshape",
+            OpKind::Flatten => "Flatten",
+            OpKind::Gather => "Gather",
+        }
+    }
+
+    /// True for ops that generate no tile work (pure metadata).
+    pub fn is_shape_only(&self) -> bool {
+        matches!(self, OpKind::Reshape | OpKind::Flatten)
+    }
+}
+
+/// An operator node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+/// The dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Graph { name: name.into(), ..Default::default() }
+    }
+
+    /// Add a tensor; returns its id.
+    pub fn tensor(&mut self, name: &str, shape: &[usize], kind: TensorKind) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(TensorInfo { name: name.into(), shape: shape.to_vec(), kind });
+        id
+    }
+
+    pub fn activation(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.tensor(name, shape, TensorKind::Activation)
+    }
+
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.tensor(name, shape, TensorKind::Weight)
+    }
+
+    /// Add a node; returns its id.
+    pub fn node(&mut self, name: &str, op: OpKind, inputs: &[TensorId], outputs: &[TensorId]) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            op,
+            inputs: inputs.to_vec(),
+            outputs: outputs.to_vec(),
+        });
+        id
+    }
+
+    /// Map: tensor id -> producing node id (graph inputs/weights have none).
+    pub fn producers(&self) -> HashMap<TensorId, NodeId> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            for &t in &n.outputs {
+                m.insert(t, n.id);
+            }
+        }
+        m
+    }
+
+    /// Map: tensor id -> consuming node ids.
+    pub fn consumers(&self) -> HashMap<TensorId, Vec<NodeId>> {
+        let mut m: HashMap<TensorId, Vec<NodeId>> = HashMap::new();
+        for n in &self.nodes {
+            for &t in &n.inputs {
+                m.entry(t).or_default().push(n.id);
+            }
+        }
+        m
+    }
+
+    /// Topological order of node ids. Returns an error on cycles.
+    pub fn topo_order(&self) -> anyhow::Result<Vec<NodeId>> {
+        let producers = self.producers();
+        let mut indegree: Vec<usize> = vec![0; self.nodes.len()];
+        let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &t in &n.inputs {
+                if let Some(&p) = producers.get(&t) {
+                    indegree[n.id] += 1;
+                    succs[p].push(n.id);
+                }
+            }
+        }
+        let mut queue: Vec<NodeId> =
+            (0..self.nodes.len()).filter(|&i| indegree[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &s in &succs[id] {
+                indegree[s] -= 1;
+                if indegree[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if order.len() != self.nodes.len() {
+            anyhow::bail!("graph '{}' contains a cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Total weight bytes (for DRAM layout / footprint reporting).
+    pub fn weight_bytes(&self, element_bytes: usize) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.numel() * element_bytes as u64)
+            .sum()
+    }
+
+    /// Validate structural invariants: tensor ids in range, every node
+    /// output unique, every activation input produced or a graph input.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let producers = self.producers();
+        let mut seen_out = std::collections::HashSet::new();
+        for n in &self.nodes {
+            for &t in n.inputs.iter().chain(n.outputs.iter()) {
+                if t >= self.tensors.len() {
+                    anyhow::bail!("node {} references unknown tensor {}", n.name, t);
+                }
+            }
+            for &t in &n.outputs {
+                if !seen_out.insert(t) {
+                    anyhow::bail!("tensor {} has multiple producers", self.tensors[t].name);
+                }
+            }
+        }
+        for n in &self.nodes {
+            for &t in &n.inputs {
+                let info = &self.tensors[t];
+                if info.kind == TensorKind::Activation
+                    && !producers.contains_key(&t)
+                    && !self.inputs.contains(&t)
+                {
+                    anyhow::bail!(
+                        "activation tensor '{}' consumed by '{}' has no producer",
+                        info.name,
+                        n.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Infer/verify the output shape of `node` from its input shapes.
+    /// Returns the expected output shape.
+    pub fn infer_node_shape(&self, node: &Node) -> anyhow::Result<Vec<usize>> {
+        let shape_of = |t: TensorId| -> &Vec<usize> { &self.tensors[t].shape };
+        let out = match &node.op {
+            OpKind::MatMul { .. } => {
+                let a = shape_of(node.inputs[0]);
+                let b = shape_of(node.inputs[1]);
+                let (m, ka) = (a[a.len() - 2], a[a.len() - 1]);
+                let (kb, n) = (b[b.len() - 2], b[b.len() - 1]);
+                if ka != kb {
+                    anyhow::bail!("matmul K mismatch in {}: {} vs {}", node.name, ka, kb);
+                }
+                let mut s = a[..a.len() - 2].to_vec();
+                s.push(m);
+                s.push(n);
+                s
+            }
+            OpKind::Conv { out_channels, kernel, stride, padding, .. } => {
+                let x = shape_of(node.inputs[0]); // NCHW
+                let (h, w) = (x[2], x[3]);
+                let oh = (h + 2 * padding[0] - kernel[0]) / stride[0] + 1;
+                let ow = (w + 2 * padding[1] - kernel[1]) / stride[1] + 1;
+                vec![x[0], *out_channels, oh, ow]
+            }
+            OpKind::MaxPool { kernel, stride, padding } => {
+                let x = shape_of(node.inputs[0]);
+                let oh = (x[2] + 2 * padding[0] - kernel[0]) / stride[0] + 1;
+                let ow = (x[3] + 2 * padding[1] - kernel[1]) / stride[1] + 1;
+                vec![x[0], x[1], oh, ow]
+            }
+            OpKind::GlobalAvgPool => {
+                let x = shape_of(node.inputs[0]);
+                vec![x[0], x[1], 1, 1]
+            }
+            OpKind::FusedAttention { heads, head_dim, seq_q, .. } => {
+                let x = shape_of(node.inputs[0]);
+                // [batch, seq_q, heads*head_dim]
+                vec![x[0], *seq_q, heads * head_dim]
+            }
+            OpKind::Reshape | OpKind::Flatten | OpKind::Gather => {
+                shape_of(node.outputs[0]).clone()
+            }
+            // Element-wise & normalization: shape of first input.
+            _ => shape_of(node.inputs[0]).clone(),
+        };
+        Ok(out)
+    }
+
+    /// Run shape inference over the whole graph, checking consistency with
+    /// declared output shapes.
+    pub fn infer_shapes(&self) -> anyhow::Result<()> {
+        for &nid in &self.topo_order()? {
+            let node = &self.nodes[nid];
+            let expect = self.infer_node_shape(node)?;
+            let got = &self.tensors[node.outputs[0]].shape;
+            if &expect != got {
+                anyhow::bail!(
+                    "shape mismatch at {} ({}): inferred {:?}, declared {:?}",
+                    node.name,
+                    node.op.op_type(),
+                    expect,
+                    got
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total FLOPs (2*MACs for matmul/conv; elementwise counted once).
+    pub fn flops(&self) -> u64 {
+        self.nodes.iter().map(|n| self.node_flops(n)).sum()
+    }
+
+    /// FLOPs for one node.
+    pub fn node_flops(&self, n: &Node) -> u64 {
+        match &n.op {
+            OpKind::MatMul { .. } => {
+                let a = &self.tensors[n.inputs[0]].shape;
+                let b = &self.tensors[n.inputs[1]].shape;
+                let batch: u64 =
+                    a[..a.len() - 2].iter().map(|&d| d as u64).product::<u64>().max(1);
+                let (m, k) = (a[a.len() - 2] as u64, a[a.len() - 1] as u64);
+                let nn = b[b.len() - 1] as u64;
+                2 * batch * m * k * nn
+            }
+            OpKind::Conv { out_channels, kernel, .. } => {
+                let x = &self.tensors[n.inputs[0]].shape;
+                let o = &self.tensors[n.outputs[0]].shape;
+                let in_c = x[1] as u64;
+                let spatial = (o[2] * o[3]) as u64;
+                2 * x[0] as u64
+                    * *out_channels as u64
+                    * spatial
+                    * in_c
+                    * (kernel[0] * kernel[1]) as u64
+            }
+            OpKind::FusedAttention { heads, head_dim, seq_q, seq_kv, .. } => {
+                let x = &self.tensors[n.inputs[0]].shape;
+                let batch = x[0] as u64;
+                // QK^T + PV per head.
+                2 * batch
+                    * *heads as u64
+                    * (*seq_q as u64)
+                    * (*seq_kv as u64)
+                    * (*head_dim as u64)
+                    * 2
+            }
+            _ => self.tensors[n.outputs[0]].numel(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny MLP graph: x @ w1 -> gelu -> @ w2.
+    fn mlp() -> Graph {
+        let mut g = Graph::new("mlp");
+        let x = g.activation("x", &[1, 4, 16]);
+        let w1 = g.weight("w1", &[16, 32]);
+        let h = g.activation("h", &[1, 4, 32]);
+        let hg = g.activation("hg", &[1, 4, 32]);
+        let w2 = g.weight("w2", &[32, 8]);
+        let y = g.activation("y", &[1, 4, 8]);
+        g.node("fc1", OpKind::MatMul { activation: Activation::None }, &[x, w1], &[h]);
+        g.node("act", OpKind::Gelu, &[h], &[hg]);
+        g.node("fc2", OpKind::MatMul { activation: Activation::None }, &[hg, w2], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let g = mlp();
+        let order = g.topo_order().unwrap();
+        let pos = |id: NodeId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(0) < pos(1));
+        assert!(pos(1) < pos(2));
+    }
+
+    #[test]
+    fn validate_ok_and_shape_inference() {
+        let g = mlp();
+        g.validate().unwrap();
+        g.infer_shapes().unwrap();
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let mut g = mlp();
+        g.tensors[2].shape = vec![1, 4, 31]; // corrupt h
+        assert!(g.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn matmul_k_mismatch_detected() {
+        let mut g = Graph::new("bad");
+        let x = g.activation("x", &[2, 3]);
+        let w = g.weight("w", &[4, 5]);
+        let y = g.activation("y", &[2, 5]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        assert!(g.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new("cyc");
+        let a = g.activation("a", &[1]);
+        let b = g.activation("b", &[1]);
+        g.node("n1", OpKind::Relu, &[a], &[b]);
+        g.node("n2", OpKind::Relu, &[b], &[a]);
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn dangling_input_detected() {
+        let mut g = Graph::new("dangling");
+        let a = g.activation("a", &[1]);
+        let b = g.activation("b", &[1]);
+        g.node("n", OpKind::Relu, &[a], &[b]);
+        // `a` is not a graph input and has no producer.
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let mut g = Graph::new("conv");
+        let x = g.activation("x", &[1, 3, 224, 224]);
+        let w = g.weight("w", &[64, 3, 7, 7]);
+        let y = g.activation("y", &[1, 64, 112, 112]);
+        g.node(
+            "conv1",
+            OpKind::Conv {
+                out_channels: 64,
+                kernel: [7, 7],
+                stride: [2, 2],
+                padding: [3, 3],
+                activation: Activation::None,
+                fused_bn: false,
+                fused_skip: false,
+            },
+            &[x, w],
+            &[y],
+        );
+        g.inputs = vec![x];
+        g.infer_shapes().unwrap();
+    }
+
+    #[test]
+    fn flops_matmul() {
+        let g = mlp();
+        // fc1: 2*1*4*16*32, act: 128 elems, fc2: 2*1*4*32*8
+        assert_eq!(g.flops(), 2 * 4 * 16 * 32 + 128 + 2 * 4 * 32 * 8);
+    }
+
+    #[test]
+    fn weight_bytes_counted() {
+        let g = mlp();
+        assert_eq!(g.weight_bytes(1), 16 * 32 + 32 * 8);
+        assert_eq!(g.weight_bytes(2), 2 * (16 * 32 + 32 * 8));
+    }
+
+    #[test]
+    fn duplicate_producer_detected() {
+        let mut g = Graph::new("dup");
+        let a = g.activation("a", &[1]);
+        let b = g.activation("b", &[1]);
+        g.node("n1", OpKind::Relu, &[a], &[b]);
+        g.node("n2", OpKind::Relu, &[a], &[b]);
+        g.inputs = vec![a];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,513 @@
+//! Graph optimization flow.
+//!
+//! Mirrors the ONNX Runtime offline optimization levels the paper exploits
+//! (§II-A): *basic* = DCE + constant-tensor elimination + shape-op
+//! elision; *extended* = operator fusion:
+//!
+//! - `Conv + BatchNorm` -> `Conv{fused_bn}` (BN folded into weights)
+//! - `Conv + Add(skip)` -> `Conv{fused_skip}` (skip read during writeback)
+//! - `Conv/MatMul + Relu/Gelu` -> fused activation
+//! - `LayerNorm + Add(skip)` -> `LayerNorm{fused_skip}`
+//! - per-head attention subgraphs -> `FusedAttention` (heads fused)
+//!
+//! Passes run to fixpoint; each returns the number of rewrites applied.
+
+use super::{Activation, Graph, NodeId, OpKind, TensorId};
+use std::collections::HashMap;
+
+/// Optimization level, mirroring ONNX Runtime's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// No rewrites.
+    None,
+    /// DCE + shape-op elision.
+    Basic,
+    /// Basic + operator fusion.
+    Extended,
+}
+
+/// Summary of what the optimizer did.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct OptReport {
+    pub dce_removed: usize,
+    pub shape_ops_elided: usize,
+    pub conv_bn_fused: usize,
+    pub skip_fused: usize,
+    pub activation_fused: usize,
+    pub ln_skip_fused: usize,
+}
+
+impl OptReport {
+    pub fn total(&self) -> usize {
+        self.dce_removed
+            + self.shape_ops_elided
+            + self.conv_bn_fused
+            + self.skip_fused
+            + self.activation_fused
+            + self.ln_skip_fused
+    }
+}
+
+/// Run the optimization flow at `level`, rewriting `g` in place.
+pub fn optimize(g: &mut Graph, level: OptLevel) -> OptReport {
+    let mut report = OptReport::default();
+    if level == OptLevel::None {
+        return report;
+    }
+    loop {
+        let mut changed = 0;
+        if level >= OptLevel::Extended {
+            changed += apply_and(&mut report.conv_bn_fused, fuse_conv_bn(g));
+            changed += apply_and(&mut report.activation_fused, fuse_activation(g));
+            changed += apply_and(&mut report.skip_fused, fuse_conv_skip(g));
+            changed += apply_and(&mut report.ln_skip_fused, fuse_ln_skip(g));
+        }
+        changed += apply_and(&mut report.shape_ops_elided, elide_shape_ops(g));
+        changed += apply_and(&mut report.dce_removed, dce(g));
+        if changed == 0 {
+            break;
+        }
+    }
+    report
+}
+
+fn apply_and(counter: &mut usize, n: usize) -> usize {
+    *counter += n;
+    n
+}
+
+/// Tensors reachable (backwards) from the graph outputs.
+fn live_nodes(g: &Graph) -> Vec<bool> {
+    let producers = g.producers();
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = g
+        .outputs
+        .iter()
+        .filter_map(|t| producers.get(t).copied())
+        .collect();
+    while let Some(id) = stack.pop() {
+        if live[id] {
+            continue;
+        }
+        live[id] = true;
+        for &t in &g.nodes[id].inputs {
+            if let Some(&p) = producers.get(&t) {
+                stack.push(p);
+            }
+        }
+    }
+    live
+}
+
+/// Dead-code elimination: drop nodes not contributing to graph outputs.
+fn dce(g: &mut Graph) -> usize {
+    let live = live_nodes(g);
+    let before = g.nodes.len();
+    let mut idx = 0;
+    g.nodes.retain(|_| {
+        let keep = live[idx];
+        idx += 1;
+        keep
+    });
+    for (i, n) in g.nodes.iter_mut().enumerate() {
+        n.id = i;
+    }
+    before - g.nodes.len()
+}
+
+/// Remove Reshape/Flatten nodes by rewiring consumers to their input.
+fn elide_shape_ops(g: &mut Graph) -> usize {
+    let mut rewrites: HashMap<TensorId, TensorId> = HashMap::new();
+    let mut removed = Vec::new();
+    for n in &g.nodes {
+        if n.op.is_shape_only() && !g.outputs.contains(&n.outputs[0]) {
+            rewrites.insert(n.outputs[0], n.inputs[0]);
+            removed.push(n.id);
+        }
+    }
+    if removed.is_empty() {
+        return 0;
+    }
+    // Resolve chains (reshape-of-reshape).
+    let resolve = |mut t: TensorId, rw: &HashMap<TensorId, TensorId>| {
+        while let Some(&s) = rw.get(&t) {
+            t = s;
+        }
+        t
+    };
+    for n in &mut g.nodes {
+        for t in &mut n.inputs {
+            *t = resolve(*t, &rewrites);
+        }
+    }
+    let removed_set: std::collections::HashSet<_> = removed.into_iter().collect();
+    let count = removed_set.len();
+    let mut idx = 0;
+    g.nodes.retain(|_| {
+        let keep = !removed_set.contains(&idx);
+        idx += 1;
+        keep
+    });
+    for (i, n) in g.nodes.iter_mut().enumerate() {
+        n.id = i;
+    }
+    count
+}
+
+/// Find the single consumer of `tensor`, if exactly one exists.
+fn single_consumer(g: &Graph, tensor: TensorId) -> Option<NodeId> {
+    let mut found = None;
+    for n in &g.nodes {
+        if n.inputs.contains(&tensor) {
+            if found.is_some() {
+                return None;
+            }
+            found = Some(n.id);
+        }
+    }
+    found
+}
+
+/// Fuse Conv + BatchNorm: BN's scale/shift folds into conv weights/bias at
+/// graph level (timing: eliminates the BN pass over the tensor entirely).
+fn fuse_conv_bn(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    loop {
+        let found = g.nodes.iter().find_map(|n| {
+            let out = match n.op {
+                OpKind::Conv { fused_bn: false, .. } => n.outputs[0],
+                _ => return None,
+            };
+            if g.outputs.contains(&out) {
+                return None;
+            }
+            let bn_id = single_consumer(g, out)?;
+            matches!(g.nodes[bn_id].op, OpKind::BatchNorm).then_some((n.id, bn_id))
+        });
+        let Some((conv_id, bn_id)) = found else { return fused };
+        let bn_out = g.nodes[bn_id].outputs[0];
+        if let OpKind::Conv { fused_bn, .. } = &mut g.nodes[conv_id].op {
+            *fused_bn = true;
+        }
+        g.nodes[conv_id].outputs[0] = bn_out;
+        remove_node(g, bn_id);
+        fused += 1;
+    }
+}
+
+/// Fuse a following element-wise Add into a Conv (skip connection): the
+/// conv reads the residual during accumulator writeback.
+fn fuse_conv_skip(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    loop {
+        let found = g.nodes.iter().find_map(|n| {
+            let out = match n.op {
+                OpKind::Conv { fused_skip: false, .. } => n.outputs[0],
+                _ => return None,
+            };
+            if g.outputs.contains(&out) {
+                return None;
+            }
+            let add_id = single_consumer(g, out)?;
+            if !matches!(g.nodes[add_id].op, OpKind::Add) {
+                return None;
+            }
+            let other: Vec<TensorId> = g.nodes[add_id]
+                .inputs
+                .iter()
+                .copied()
+                .filter(|&t| t != out)
+                .collect();
+            (other.len() == 1).then(|| (n.id, add_id, other[0]))
+        });
+        let Some((conv_id, add_id, residual)) = found else { return fused };
+        let add_out = g.nodes[add_id].outputs[0];
+        if let OpKind::Conv { fused_skip, .. } = &mut g.nodes[conv_id].op {
+            *fused_skip = true;
+        }
+        g.nodes[conv_id].inputs.push(residual);
+        g.nodes[conv_id].outputs[0] = add_out;
+        remove_node(g, add_id);
+        fused += 1;
+    }
+}
+
+/// Fuse Relu/Gelu into the producing Conv/MatMul.
+fn fuse_activation(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    loop {
+        let found = g.nodes.iter().find_map(|n| {
+            let fusable = matches!(
+                n.op,
+                OpKind::Conv { activation: Activation::None, .. }
+                    | OpKind::MatMul { activation: Activation::None }
+            );
+            if !fusable || g.outputs.contains(&n.outputs[0]) {
+                return None;
+            }
+            let act_id = single_consumer(g, n.outputs[0])?;
+            let act = match g.nodes[act_id].op {
+                OpKind::Relu => Activation::Relu,
+                OpKind::Gelu => Activation::Gelu,
+                _ => return None,
+            };
+            Some((n.id, act_id, act))
+        });
+        let Some((pid, act_id, act)) = found else { return fused };
+        let act_out = g.nodes[act_id].outputs[0];
+        match &mut g.nodes[pid].op {
+            OpKind::Conv { activation, .. } => *activation = act,
+            OpKind::MatMul { activation } => *activation = act,
+            _ => unreachable!(),
+        }
+        g.nodes[pid].outputs[0] = act_out;
+        remove_node(g, act_id);
+        fused += 1;
+    }
+}
+
+/// Fuse Add(skip) + LayerNorm: the LN reads both residual inputs in one
+/// pass (§II-A: "a layer normalization can be fused with a skip
+/// connection").
+fn fuse_ln_skip(g: &mut Graph) -> usize {
+    let mut fused = 0;
+    loop {
+        let found = g.nodes.iter().find_map(|n| {
+            if !matches!(n.op, OpKind::Add) || g.outputs.contains(&n.outputs[0]) {
+                return None;
+            }
+            let ln_id = single_consumer(g, n.outputs[0])?;
+            matches!(g.nodes[ln_id].op, OpKind::LayerNorm { fused_skip: false })
+                .then_some((n.id, ln_id))
+        });
+        let Some((add_id, ln_id)) = found else { return fused };
+        let out = g.nodes[add_id].outputs[0];
+        let add_inputs = g.nodes[add_id].inputs.clone();
+        g.nodes[ln_id].op = OpKind::LayerNorm { fused_skip: true };
+        let mut new_inputs = add_inputs;
+        new_inputs.extend(g.nodes[ln_id].inputs.iter().copied().filter(|&t| t != out));
+        g.nodes[ln_id].inputs = new_inputs;
+        remove_node(g, add_id);
+        fused += 1;
+    }
+}
+
+fn remove_node(g: &mut Graph, id: NodeId) {
+    g.nodes.remove(id);
+    for (i, n) in g.nodes.iter_mut().enumerate() {
+        n.id = i;
+    }
+}
+
+/// Convenience: nodes of a given op_type (for tests/reporting).
+pub fn count_ops(g: &Graph, op_type: &str) -> usize {
+    g.nodes.iter().filter(|n| n.op.op_type() == op_type).count()
+}
+
+/// Pretty one-line summary of a graph for logs.
+pub fn summarize(g: &Graph) -> String {
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    for n in &g.nodes {
+        *counts.entry(n.op.op_type()).or_default() += 1;
+    }
+    let mut parts: Vec<String> =
+        counts.into_iter().map(|(k, v)| format!("{k}x{v}")).collect();
+    parts.sort();
+    format!("{} [{} nodes: {}]", g.name, g.nodes.len(), parts.join(" "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TensorKind;
+
+    fn conv(g: &mut Graph, name: &str, x: TensorId, c: usize, out_shape: &[usize]) -> TensorId {
+        let w = g.tensor(&format!("{name}.w"), &[c, 3, 3, 3], TensorKind::Weight);
+        let y = g.activation(&format!("{name}.out"), out_shape);
+        g.node(
+            name,
+            OpKind::Conv {
+                out_channels: c,
+                kernel: [3, 3],
+                stride: [1, 1],
+                padding: [1, 1],
+                activation: Activation::None,
+                fused_bn: false,
+                fused_skip: false,
+            },
+            &[x, w],
+            &[y],
+        );
+        y
+    }
+
+    #[test]
+    fn conv_bn_relu_fuses_to_one_node() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 3, 8, 8]);
+        let c = conv(&mut g, "conv", x, 16, &[1, 16, 8, 8]);
+        let bn = g.activation("bn.out", &[1, 16, 8, 8]);
+        g.node("bn", OpKind::BatchNorm, &[c], &[bn]);
+        let r = g.activation("relu.out", &[1, 16, 8, 8]);
+        g.node("relu", OpKind::Relu, &[bn], &[r]);
+        g.inputs = vec![x];
+        g.outputs = vec![r];
+
+        let rep = optimize(&mut g, OptLevel::Extended);
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(rep.conv_bn_fused, 1);
+        assert_eq!(rep.activation_fused, 1);
+        match &g.nodes[0].op {
+            OpKind::Conv { fused_bn, activation, .. } => {
+                assert!(*fused_bn);
+                assert_eq!(*activation, Activation::Relu);
+            }
+            _ => panic!("expected conv"),
+        }
+        assert_eq!(g.nodes[0].outputs[0], r);
+    }
+
+    #[test]
+    fn conv_skip_fusion() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 16, 8, 8]);
+        let c = conv(&mut g, "conv", x, 16, &[1, 16, 8, 8]);
+        let sum = g.activation("sum", &[1, 16, 8, 8]);
+        g.node("add", OpKind::Add, &[c, x], &[sum]);
+        g.inputs = vec![x];
+        g.outputs = vec![sum];
+
+        let rep = optimize(&mut g, OptLevel::Extended);
+        assert_eq!(rep.skip_fused, 1);
+        assert_eq!(g.nodes.len(), 1);
+        // Conv now consumes the residual too.
+        assert!(g.nodes[0].inputs.contains(&x));
+    }
+
+    #[test]
+    fn ln_skip_fusion() {
+        let mut g = Graph::new("t");
+        let a = g.activation("a", &[1, 4, 32]);
+        let b = g.activation("b", &[1, 4, 32]);
+        let s = g.activation("s", &[1, 4, 32]);
+        g.node("add", OpKind::Add, &[a, b], &[s]);
+        let y = g.activation("y", &[1, 4, 32]);
+        g.node("ln", OpKind::LayerNorm { fused_skip: false }, &[s], &[y]);
+        g.inputs = vec![a, b];
+        g.outputs = vec![y];
+
+        let rep = optimize(&mut g, OptLevel::Extended);
+        assert_eq!(rep.ln_skip_fused, 1);
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].op, OpKind::LayerNorm { fused_skip: true });
+        assert!(g.nodes[0].inputs.contains(&a) && g.nodes[0].inputs.contains(&b));
+    }
+
+    #[test]
+    fn dce_removes_dead_branch() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[8]);
+        let y = g.activation("y", &[8]);
+        let dead = g.activation("dead", &[8]);
+        g.node("live", OpKind::Relu, &[x], &[y]);
+        g.node("dead", OpKind::Gelu, &[x], &[dead]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let rep = optimize(&mut g, OptLevel::Basic);
+        assert_eq!(rep.dce_removed, 1);
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].name, "live");
+    }
+
+    #[test]
+    fn shape_ops_elided_and_rewired() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 64, 1, 1]);
+        let flat = g.activation("flat", &[1, 64]);
+        g.node("flatten", OpKind::Flatten, &[x], &[flat]);
+        let w = g.weight("w", &[64, 10]);
+        let y = g.activation("y", &[1, 10]);
+        g.node("fc", OpKind::MatMul { activation: Activation::None }, &[flat, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let rep = optimize(&mut g, OptLevel::Basic);
+        assert_eq!(rep.shape_ops_elided, 1);
+        assert_eq!(g.nodes.len(), 1);
+        assert_eq!(g.nodes[0].inputs[0], x);
+    }
+
+    #[test]
+    fn none_level_is_identity() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[8]);
+        let y = g.activation("y", &[8]);
+        g.node("relu", OpKind::Relu, &[x], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let before = g.nodes.len();
+        let rep = optimize(&mut g, OptLevel::None);
+        assert_eq!(rep.total(), 0);
+        assert_eq!(g.nodes.len(), before);
+    }
+
+    #[test]
+    fn basic_level_does_not_fuse() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 3, 8, 8]);
+        let c = conv(&mut g, "conv", x, 16, &[1, 16, 8, 8]);
+        let bn = g.activation("bn.out", &[1, 16, 8, 8]);
+        g.node("bn", OpKind::BatchNorm, &[c], &[bn]);
+        g.inputs = vec![x];
+        g.outputs = vec![bn];
+        let rep = optimize(&mut g, OptLevel::Basic);
+        assert_eq!(rep.conv_bn_fused, 0);
+        assert_eq!(g.nodes.len(), 2);
+    }
+
+    #[test]
+    fn fusion_skipped_when_intermediate_is_graph_output() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 3, 8, 8]);
+        let c = conv(&mut g, "conv", x, 16, &[1, 16, 8, 8]);
+        let bn = g.activation("bn.out", &[1, 16, 8, 8]);
+        g.node("bn", OpKind::BatchNorm, &[c], &[bn]);
+        g.inputs = vec![x];
+        g.outputs = vec![c, bn]; // conv output observable -> must not fuse
+        let rep = optimize(&mut g, OptLevel::Extended);
+        assert_eq!(rep.conv_bn_fused, 0);
+    }
+
+    #[test]
+    fn fusion_skipped_with_multiple_consumers() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 3, 8, 8]);
+        let c = conv(&mut g, "conv", x, 16, &[1, 16, 8, 8]);
+        let bn = g.activation("bn.out", &[1, 16, 8, 8]);
+        g.node("bn", OpKind::BatchNorm, &[c], &[bn]);
+        let r = g.activation("r", &[1, 16, 8, 8]);
+        g.node("relu2", OpKind::Relu, &[c], &[r]); // second consumer of conv out
+        g.inputs = vec![x];
+        g.outputs = vec![bn, r];
+        let rep = optimize(&mut g, OptLevel::Extended);
+        assert_eq!(rep.conv_bn_fused, 0);
+        assert_eq!(g.nodes.len(), 3);
+    }
+
+    #[test]
+    fn optimizer_preserves_validity() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 16, 8, 8]);
+        let c1 = conv(&mut g, "c1", x, 16, &[1, 16, 8, 8]);
+        let bn = g.activation("bn", &[1, 16, 8, 8]);
+        g.node("bn", OpKind::BatchNorm, &[c1], &[bn]);
+        let sum = g.activation("sum", &[1, 16, 8, 8]);
+        g.node("add", OpKind::Add, &[bn, x], &[sum]);
+        let r = g.activation("r", &[1, 16, 8, 8]);
+        g.node("relu", OpKind::Relu, &[sum], &[r]);
+        g.inputs = vec![x];
+        g.outputs = vec![r];
+        optimize(&mut g, OptLevel::Extended);
+        g.validate().unwrap();
+        g.topo_order().unwrap();
+    }
+}

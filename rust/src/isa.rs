@@ -1,0 +1,228 @@
+//! The NPU core ISA.
+//!
+//! An extension of Gemmini's ISA (per §II-A of the paper): `MVIN`/`MVOUT`
+//! DMA instructions, `GEMM_PRELOAD`/`GEMM` systolic-array instructions,
+//! `IM2COL`, and vector operations (add, mul, GELU, exp, ...) with
+//! activation functions.
+//!
+//! Tile operation templates emit sequences of [`Instr`] with explicit
+//! intra-tile dependency edges (`deps`), which the core's instruction
+//! scheduler uses for hazard checking. Dependencies are emitted by the
+//! lowering (which knows the dataflow exactly) rather than recovered from
+//! address-range overlap at simulation time — one of the dynamic-instruction
+//! optimizations §I credits for simulation speed.
+
+/// Vector-unit operator classes. Latency per class comes from
+/// [`crate::config::VectorLatency`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VecOp {
+    Add,
+    Mul,
+    Gelu,
+    Relu,
+    Exp,
+    Div,
+    Sqrt,
+    Max,
+    /// Reduction (sum/max over an axis) — used by softmax and layernorm.
+    Reduce,
+}
+
+/// Which functional unit an instruction occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Dma,
+    Systolic,
+    Vector,
+}
+
+/// One tile-level instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Opcode {
+    /// DMA load: DRAM -> scratchpad (or accumulator, for biases).
+    Mvin { dram_addr: u64, bytes: u64 },
+    /// DMA store: accumulator/scratchpad -> DRAM.
+    Mvout { dram_addr: u64, bytes: u64 },
+    /// Load a weight tile into the systolic array's PE registers.
+    /// Occupies the array for `rows` cycles (weights stream in row by row).
+    GemmPreload { rows: u64, cols: u64 },
+    /// Weight-stationary matmul: an `l x rows` input streamed against the
+    /// preloaded `rows x cols` weights. Latency `l + width + height - 1`.
+    Gemm { l: u64, rows: u64, cols: u64, accumulate: bool },
+    /// Image-to-column transformation, performed by the DMA/scratchpad
+    /// datapath at word granularity.
+    Im2col { bytes: u64 },
+    /// Vector-unit operation over `elems` elements.
+    Vector { op: VecOp, elems: u64 },
+}
+
+impl Opcode {
+    /// The functional unit this opcode occupies.
+    pub fn unit(&self) -> Unit {
+        match self {
+            Opcode::Mvin { .. } | Opcode::Mvout { .. } | Opcode::Im2col { .. } => Unit::Dma,
+            Opcode::GemmPreload { .. } | Opcode::Gemm { .. } => Unit::Systolic,
+            Opcode::Vector { .. } => Unit::Vector,
+        }
+    }
+
+    /// Number of DRAM bytes this instruction moves (0 for compute).
+    pub fn dram_bytes(&self) -> u64 {
+        match self {
+            Opcode::Mvin { bytes, .. } | Opcode::Mvout { bytes, .. } => *bytes,
+            _ => 0,
+        }
+    }
+
+    /// True for instructions that write results back to DRAM.
+    pub fn is_store(&self) -> bool {
+        matches!(self, Opcode::Mvout { .. })
+    }
+
+    /// MAC count of a GEMM instruction (for utilization stats).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Opcode::Gemm { l, rows, cols, .. } => l * rows * cols,
+            _ => 0,
+        }
+    }
+}
+
+/// An instruction plus its intra-tile dependencies (indices into the tile's
+/// instruction list).
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub op: Opcode,
+    /// Indices of instructions within the same tile that must complete
+    /// before this one may issue (data hazards).
+    pub deps: Vec<u32>,
+}
+
+impl Instr {
+    pub fn new(op: Opcode) -> Self {
+        Instr { op, deps: Vec::new() }
+    }
+
+    pub fn with_deps(op: Opcode, deps: Vec<u32>) -> Self {
+        Instr { op, deps }
+    }
+}
+
+/// Analytic latency model for compute instructions (§II-B "Core
+/// implementation"). DMA latency is *not* analytic — it emerges from the
+/// cycle-level NoC + DRAM models.
+pub struct LatencyModel {
+    pub systolic_width: u64,
+    pub systolic_height: u64,
+    /// Elements the vector unit processes per cycle (lanes * ALUs/lane).
+    pub vector_elems_per_cycle: u64,
+    pub vec_lat: crate::config::VectorLatency,
+    /// Scratchpad word size delivered per cycle (bytes) — bounds im2col.
+    pub spad_word_bytes: u64,
+}
+
+impl LatencyModel {
+    pub fn from_config(c: &crate::config::NpuConfig) -> Self {
+        LatencyModel {
+            systolic_width: c.systolic_width as u64,
+            systolic_height: c.systolic_height as u64,
+            vector_elems_per_cycle: (c.vector_lanes * c.vector_alus_per_lane) as u64,
+            vec_lat: c.vector_latency.clone(),
+            spad_word_bytes: (c.systolic_width * c.element_bytes) as u64,
+        }
+    }
+
+    /// Deterministic compute latency in cycles; `None` for DMA ops whose
+    /// latency is produced by the memory system.
+    pub fn compute_latency(&self, op: &Opcode) -> Option<u64> {
+        match op {
+            // Weights stream into the array one row per cycle.
+            Opcode::GemmPreload { rows, .. } => Some((*rows).max(1)),
+            // The paper's formula: l + width + height - 1, where l is the
+            // streamed input dimension.
+            Opcode::Gemm { l, .. } => {
+                Some(l + self.systolic_width + self.systolic_height - 1)
+            }
+            Opcode::Vector { op, elems } => {
+                let per = self.vector_elems_per_cycle.max(1);
+                let batches = elems.div_ceil(per);
+                let op_lat = match op {
+                    VecOp::Add | VecOp::Max | VecOp::Reduce => self.vec_lat.add,
+                    VecOp::Mul => self.vec_lat.mul,
+                    VecOp::Gelu | VecOp::Relu => self.vec_lat.gelu,
+                    VecOp::Exp => self.vec_lat.exp,
+                    VecOp::Div => self.vec_lat.div,
+                    VecOp::Sqrt => self.vec_lat.sqrt,
+                };
+                // Pipelined vector unit: fill latency + one batch per cycle.
+                Some(op_lat + batches.max(1) - 1)
+            }
+            Opcode::Im2col { bytes } => {
+                Some(bytes.div_ceil(self.spad_word_bytes.max(1)).max(1))
+            }
+            Opcode::Mvin { .. } | Opcode::Mvout { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+
+    fn lm() -> LatencyModel {
+        LatencyModel::from_config(&NpuConfig::mobile())
+    }
+
+    #[test]
+    fn gemm_latency_formula() {
+        // Paper: l + width + height - 1. Mobile: 8x8.
+        let lat = lm()
+            .compute_latency(&Opcode::Gemm { l: 100, rows: 8, cols: 8, accumulate: false })
+            .unwrap();
+        assert_eq!(lat, 100 + 8 + 8 - 1);
+    }
+
+    #[test]
+    fn preload_latency_is_rows() {
+        let lat = lm()
+            .compute_latency(&Opcode::GemmPreload { rows: 8, cols: 8 })
+            .unwrap();
+        assert_eq!(lat, 8);
+    }
+
+    #[test]
+    fn vector_latency_scales_with_elems() {
+        let m = lm(); // 8 lanes * 16 alus = 128 elems/cycle
+        let l1 = m.compute_latency(&Opcode::Vector { op: VecOp::Add, elems: 128 }).unwrap();
+        let l2 = m.compute_latency(&Opcode::Vector { op: VecOp::Add, elems: 1280 }).unwrap();
+        assert_eq!(l1, 1);
+        assert_eq!(l2, 10);
+    }
+
+    #[test]
+    fn gelu_slower_than_add() {
+        let m = lm();
+        let a = m.compute_latency(&Opcode::Vector { op: VecOp::Add, elems: 256 }).unwrap();
+        let g = m.compute_latency(&Opcode::Vector { op: VecOp::Gelu, elems: 256 }).unwrap();
+        assert!(g > a);
+    }
+
+    #[test]
+    fn dma_has_no_analytic_latency() {
+        assert!(lm().compute_latency(&Opcode::Mvin { dram_addr: 0, bytes: 64 }).is_none());
+    }
+
+    #[test]
+    fn unit_mapping() {
+        assert_eq!(Opcode::Mvin { dram_addr: 0, bytes: 1 }.unit(), Unit::Dma);
+        assert_eq!(Opcode::Gemm { l: 1, rows: 1, cols: 1, accumulate: false }.unit(), Unit::Systolic);
+        assert_eq!(Opcode::Vector { op: VecOp::Add, elems: 1 }.unit(), Unit::Vector);
+    }
+
+    #[test]
+    fn macs_counted() {
+        assert_eq!(Opcode::Gemm { l: 4, rows: 8, cols: 8, accumulate: true }.macs(), 256);
+        assert_eq!(Opcode::Mvin { dram_addr: 0, bytes: 64 }.macs(), 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! # ONNXim-RS
+//!
+//! A fast, cycle-level multi-core NPU simulator — a Rust reproduction of
+//! *"ONNXim: A Fast, Cycle-level Multi-core NPU Simulator"* (Ham et al., 2024).
+//!
+//! The simulator models inference-oriented multi-core NPUs with
+//! weight-stationary systolic arrays. Following the paper's key insight,
+//! **compute** latency is deterministic and modeled analytically
+//! (`l + width + height - 1` for the systolic array), while **shared
+//! resources** — DRAM and the NoC — are modeled cycle-by-cycle, because
+//! contention across cores is non-deterministic.
+//!
+//! ## Layers
+//!
+//! - [`graph`] — ONNX-like dataflow graph IR, shape inference, and the
+//!   optimization flow (operator fusion, DCE, constant folding).
+//! - [`models`] — builders for the paper's evaluation models (ResNet-50,
+//!   GPT-3 Small prefill/decode, Llama-3 with GQA/MHA).
+//! - [`lowering`] — graph ops → tile-level instruction lists over the
+//!   Gemmini-style [`isa`].
+//! - [`core`] — the NPU core timing model (instruction scheduler, systolic
+//!   array, vector unit, scratchpad double-buffering, DMA engine).
+//! - [`dram`] — cycle-level DRAM (DDR4/HBM2 timing, FR-FCFS, IPOLY hashing).
+//! - [`noc`] — simple latency-bandwidth NoC and a flit-level crossbar.
+//! - [`scheduler`] — the global tile scheduler with multi-tenant policies.
+//! - [`sim`] — the top-level simulator loop and statistics.
+//! - [`tenant`] — multi-tenant request traces.
+//! - [`baseline`] — an Accel-sim-like fine-grained comparator and a
+//!   Gemmini-RTL-like cycle-exact reference core for validation.
+//! - [`runtime`] — PJRT-based functional execution of AOT-compiled XLA
+//!   artifacts (the L1/L2 Pallas+JAX path).
+
+pub mod baseline;
+pub mod config;
+pub mod core;
+pub mod dram;
+pub mod graph;
+pub mod isa;
+pub mod lowering;
+pub mod models;
+pub mod noc;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod tenant;
+pub mod util;
+
+/// A simulation timestamp in core clock cycles.
+pub type Cycle = u64;
+
+/// Sentinel for "no scheduled event".
+pub const NEVER: Cycle = u64::MAX;

@@ -1,0 +1,445 @@
+//! GEMM / GEMV / fused-attention tile templates.
+//!
+//! A batched `[B, M, K] x [K, N]` matmul lowers to one tile per
+//! `(batch, m-tile, n-tile)` output block; each tile runs the full k-loop
+//! with the output block resident in the accumulator (weight-stationary
+//! dataflow, §II-B):
+//!
+//! ```text
+//! for kt in 0..K/Tk:
+//!   MVIN  A[m0:,kt:]           (scratchpad)
+//!   MVIN  B[kt:,n0:]           (scratchpad)
+//!   GEMM_PRELOAD  B-tile       (into PE array; dep: its MVIN)
+//!   GEMM  l=Tm                 (dep: A MVIN, preload, previous GEMM)
+//! [VECTOR activation]          (dep: last GEMM)
+//! MVOUT C[m0:,n0:]             (dep: last compute)
+//! ```
+//!
+//! DMA addresses are the tile's starting DRAM address with the tile's full
+//! byte size; the 64 B request stream is generated contiguously from there
+//! (a locality approximation — volume and channel spread are exact; see
+//! DESIGN.md §6).
+
+use super::tiling::choose_gemm_tiling;
+use super::{AddressMap, JobRef, LoweringParams, Tile};
+use crate::graph::{Activation, Graph, Node, OpKind};
+use crate::isa::{Instr, Opcode, VecOp};
+
+/// Shape helper: (batch, M, K) of the LHS and N of the RHS.
+fn matmul_dims(g: &Graph, node: &Node) -> (u64, u64, u64, u64) {
+    let a = &g.tensors[node.inputs[0]].shape;
+    let b = &g.tensors[node.inputs[1]].shape;
+    let batch: u64 = a[..a.len() - 2].iter().map(|&d| d as u64).product::<u64>().max(1);
+    let m = a[a.len() - 2] as u64;
+    let k = a[a.len() - 1] as u64;
+    let n = b[b.len() - 1] as u64;
+    (batch, m, k, n)
+}
+
+/// Lower a (batched) MatMul node. Covers GEMV when `M == 1`.
+pub fn lower_matmul(
+    g: &Graph,
+    node: &Node,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+    activation: Activation,
+) -> Vec<Tile> {
+    let (batch, m, k, n) = matmul_dims(g, node);
+    let t = choose_gemm_tiling(m, k, n, p);
+    let eb = p.element_bytes;
+    let (a_id, b_id, c_id) = (node.inputs[0], node.inputs[1], node.outputs[0]);
+
+    let mut tiles = Vec::new();
+    let mut tile_idx = 0;
+    for b in 0..batch {
+        let a_base = b * m * k;
+        let c_base = b * m * n;
+        for m0 in (0..m).step_by(t.tm as usize) {
+            let tm = t.tm.min(m - m0);
+            for n0 in (0..n).step_by(t.tn as usize) {
+                let tn = t.tn.min(n - n0);
+                let mut instrs: Vec<Instr> = Vec::new();
+                let mut last_gemm: Option<u32> = None;
+                for k0 in (0..k).step_by(t.tk as usize) {
+                    let tk = t.tk.min(k - k0);
+                    let ia = instrs.len() as u32;
+                    instrs.push(Instr::new(Opcode::Mvin {
+                        dram_addr: amap.addr_at(a_id, a_base + m0 * k + k0),
+                        bytes: tm * tk * eb,
+                    }));
+                    let ib = instrs.len() as u32;
+                    instrs.push(Instr::new(Opcode::Mvin {
+                        dram_addr: amap.addr_at(b_id, k0 * n + n0),
+                        bytes: tk * tn * eb,
+                    }));
+                    let ip = instrs.len() as u32;
+                    instrs.push(Instr::with_deps(
+                        Opcode::GemmPreload { rows: tk, cols: tn },
+                        vec![ib],
+                    ));
+                    let mut deps = vec![ia, ip];
+                    if let Some(lg) = last_gemm {
+                        deps.push(lg); // accumulate ordering
+                    }
+                    let ig = instrs.len() as u32;
+                    instrs.push(Instr::with_deps(
+                        Opcode::Gemm { l: tm, rows: tk, cols: tn, accumulate: k0 > 0 },
+                        deps,
+                    ));
+                    last_gemm = Some(ig);
+                }
+                let mut last = last_gemm.expect("k loop nonempty");
+                if activation != Activation::None {
+                    let op = if activation == Activation::Relu { VecOp::Relu } else { VecOp::Gelu };
+                    let iv = instrs.len() as u32;
+                    instrs.push(Instr::with_deps(
+                        Opcode::Vector { op, elems: tm * tn },
+                        vec![last],
+                    ));
+                    last = iv;
+                }
+                instrs.push(Instr::with_deps(
+                    Opcode::Mvout {
+                        dram_addr: amap.addr_at(c_id, c_base + m0 * n + n0),
+                        bytes: tm * tn * eb,
+                    },
+                    vec![last],
+                ));
+                tiles.push(Tile {
+                    job: JobRef { request_id, node_id: node.id, tile_idx },
+                    instrs,
+                    spad_bytes: (t.tm * t.tk + t.tk * t.tn) * eb,
+                    acc_bytes: t.tm * t.tn * p.acc_element_bytes,
+                });
+                tile_idx += 1;
+            }
+        }
+    }
+    tiles
+}
+
+/// Lower a fused multi-head attention node over a KV cache.
+///
+/// Inputs: `[q_proj, k_cache, v_cache]`; the KV cache tensors have shape
+/// `[batch, kv_heads, seq_kv, head_dim]`. With GQA (`kv_heads < heads`),
+/// each loaded K/V chunk is reused by `heads/kv_heads` query heads — the
+/// memory-traffic reduction the paper's Fig. 5 case study measures.
+///
+/// One tile per `(batch, kv_head)`: QK^T over kv chunks, softmax on the
+/// vector unit, then PV over kv chunks.
+pub fn lower_attention(
+    g: &Graph,
+    node: &Node,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+) -> Vec<Tile> {
+    let OpKind::FusedAttention { heads, kv_heads, head_dim, seq_q, seq_kv } = node.op else {
+        panic!("lower_attention on non-attention node");
+    };
+    let (heads, kv_heads, head_dim, seq_q, seq_kv) =
+        (heads as u64, kv_heads as u64, head_dim as u64, seq_q as u64, seq_kv as u64);
+    let group = heads / kv_heads.max(1);
+    let eb = p.element_bytes;
+    let x = &g.tensors[node.inputs[0]].shape;
+    let batch = x[0] as u64;
+    let (q_id, k_id, v_id, o_id) =
+        (node.inputs[0], node.inputs[1], node.inputs[2], node.outputs[0]);
+
+    // KV chunking: K chunk [chunk, head_dim] + V chunk + group q/o vectors
+    // must fit the scratchpad partition.
+    let q_bytes = group * seq_q * head_dim * eb;
+    let budget = p.spad_tile_bytes.saturating_sub(2 * q_bytes).max(head_dim * eb);
+    let max_chunk = (budget / (2 * head_dim * eb)).max(1);
+    let chunk = seq_kv.min(max_chunk);
+
+    let mut tiles = Vec::new();
+    let mut tile_idx = 0;
+    for b in 0..batch {
+        for kvh in 0..kv_heads {
+            let mut instrs: Vec<Instr> = Vec::new();
+            // Load the group's query vectors.
+            let mut q_deps = Vec::new();
+            for h in 0..group {
+                let head = kvh * group + h;
+                let iq = instrs.len() as u32;
+                instrs.push(Instr::new(Opcode::Mvin {
+                    dram_addr: amap
+                        .addr_at(q_id, (b * heads + head) * seq_q * head_dim),
+                    bytes: seq_q * head_dim * eb,
+                }));
+                q_deps.push(iq);
+            }
+            // QK^T: stream K chunks once, reused by all heads in the group.
+            let mut qk_gemms = Vec::new();
+            let kv_base = (b * kv_heads + kvh) * seq_kv * head_dim;
+            for c0 in (0..seq_kv).step_by(chunk as usize) {
+                let cl = chunk.min(seq_kv - c0);
+                let ik = instrs.len() as u32;
+                instrs.push(Instr::new(Opcode::Mvin {
+                    dram_addr: amap.addr_at(k_id, kv_base + c0 * head_dim),
+                    bytes: cl * head_dim * eb,
+                }));
+                let ip = instrs.len() as u32;
+                instrs.push(Instr::with_deps(
+                    Opcode::GemmPreload { rows: head_dim, cols: cl },
+                    vec![ik],
+                ));
+                for (h, &qd) in q_deps.iter().enumerate() {
+                    let _ = h;
+                    let ig = instrs.len() as u32;
+                    instrs.push(Instr::with_deps(
+                        Opcode::Gemm { l: seq_q, rows: head_dim, cols: cl, accumulate: false },
+                        vec![qd, ip],
+                    ));
+                    qk_gemms.push(ig);
+                }
+            }
+            // Softmax on the vector unit: exp + reduce + div per row.
+            let sm_elems = group * seq_q * seq_kv;
+            let ie = instrs.len() as u32;
+            instrs.push(Instr::with_deps(
+                Opcode::Vector { op: VecOp::Exp, elems: sm_elems },
+                qk_gemms.clone(),
+            ));
+            let ir = instrs.len() as u32;
+            instrs.push(Instr::with_deps(
+                Opcode::Vector { op: VecOp::Reduce, elems: sm_elems },
+                vec![ie],
+            ));
+            let id = instrs.len() as u32;
+            instrs.push(Instr::with_deps(
+                Opcode::Vector { op: VecOp::Div, elems: sm_elems },
+                vec![ir],
+            ));
+            // PV: stream V chunks once, reused by the group.
+            let mut pv_gemms = Vec::new();
+            for c0 in (0..seq_kv).step_by(chunk as usize) {
+                let cl = chunk.min(seq_kv - c0);
+                let iv = instrs.len() as u32;
+                instrs.push(Instr::new(Opcode::Mvin {
+                    dram_addr: amap.addr_at(v_id, kv_base + c0 * head_dim),
+                    bytes: cl * head_dim * eb,
+                }));
+                let ip = instrs.len() as u32;
+                instrs.push(Instr::with_deps(
+                    Opcode::GemmPreload { rows: cl, cols: head_dim },
+                    vec![iv],
+                ));
+                for _ in 0..group {
+                    let ig = instrs.len() as u32;
+                    instrs.push(Instr::with_deps(
+                        Opcode::Gemm { l: seq_q, rows: cl, cols: head_dim, accumulate: c0 > 0 },
+                        vec![id, ip],
+                    ));
+                    pv_gemms.push(ig);
+                }
+            }
+            // Write the group's outputs.
+            for h in 0..group {
+                let head = kvh * group + h;
+                instrs.push(Instr::with_deps(
+                    Opcode::Mvout {
+                        dram_addr: amap
+                            .addr_at(o_id, (b * heads + head) * seq_q * head_dim),
+                        bytes: seq_q * head_dim * eb,
+                    },
+                    pv_gemms.clone(),
+                ));
+            }
+            tiles.push(Tile {
+                job: JobRef { request_id, node_id: node.id, tile_idx },
+                instrs,
+                spad_bytes: (2 * chunk * head_dim + 2 * group * seq_q * head_dim) * eb,
+                acc_bytes: (group * seq_q * seq_kv * p.acc_element_bytes)
+                    .min(p.acc_tile_bytes),
+            });
+            tile_idx += 1;
+        }
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::graph::TensorKind;
+
+    fn mk_matmul(b: usize, m: usize, k: usize, n: usize) -> (Graph, Node) {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[b, m, k]);
+        let w = g.weight("w", &[k, n]);
+        let y = g.activation("y", &[b, m, n]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let node = g.nodes[0].clone();
+        (g, node)
+    }
+
+    fn lower(b: usize, m: usize, k: usize, n: usize, cfg: &NpuConfig) -> Vec<Tile> {
+        let (g, node) = mk_matmul(b, m, k, n);
+        let p = LoweringParams::from_config(cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        lower_matmul(&g, &node, &amap, &p, 0, Activation::None)
+    }
+
+    #[test]
+    fn macs_conserved() {
+        // Total MACs across tiles == M*K*N exactly (no duplicated or lost
+        // work), for awkward non-multiple sizes too.
+        for (m, k, n) in [(64, 64, 64), (100, 200, 300), (7, 13, 29), (1, 512, 512)] {
+            let tiles = lower(1, m, k, n, &NpuConfig::mobile());
+            let macs: u64 = tiles.iter().map(|t| t.macs()).sum();
+            assert_eq!(macs, (m * k * n) as u64, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn output_bytes_conserved() {
+        let (m, k, n) = (100, 64, 72);
+        let tiles = lower(1, m, k, n, &NpuConfig::mobile());
+        let out_bytes: u64 = tiles
+            .iter()
+            .flat_map(|t| &t.instrs)
+            .filter(|i| i.op.is_store())
+            .map(|i| i.op.dram_bytes())
+            .sum();
+        assert_eq!(out_bytes, (m * n) as u64 * 1);
+        let _ = k;
+    }
+
+    #[test]
+    fn batch_multiplies_tiles() {
+        let t1 = lower(1, 64, 64, 64, &NpuConfig::mobile()).len();
+        let t4 = lower(4, 64, 64, 64, &NpuConfig::mobile()).len();
+        assert_eq!(t4, 4 * t1);
+    }
+
+    #[test]
+    fn deps_valid_and_gemm_after_mvin() {
+        let tiles = lower(1, 256, 256, 256, &NpuConfig::mobile());
+        for t in &tiles {
+            t.validate().unwrap();
+            // Every GEMM depends (transitively) on at least one MVIN.
+            for (i, ins) in t.instrs.iter().enumerate() {
+                if matches!(ins.op, Opcode::Gemm { .. }) {
+                    assert!(!ins.deps.is_empty(), "gemm {i} has no deps");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn footprints_fit_partition() {
+        for cfg in [NpuConfig::mobile(), NpuConfig::server()] {
+            let p = LoweringParams::from_config(&cfg);
+            let tiles = lower(1, 1024, 1024, 1024, &cfg);
+            for t in &tiles {
+                assert!(t.spad_bytes <= p.spad_tile_bytes, "{}", cfg.name);
+                assert!(t.acc_bytes <= p.acc_tile_bytes, "{}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn server_lowers_large_gemm_to_few_tiles() {
+        let tiles = lower(1, 4096, 4096, 4096, &NpuConfig::server());
+        // 32MB spad fits huge tiles; tile count must be small (Fig 2).
+        assert!(tiles.len() <= 64, "{} tiles", tiles.len());
+    }
+
+    #[test]
+    fn activation_fused_adds_vector_op() {
+        let (g, node) = mk_matmul(1, 64, 64, 64);
+        let cfg = NpuConfig::mobile();
+        let p = LoweringParams::from_config(&cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let tiles = lower_matmul(&g, &node, &amap, &p, 0, Activation::Gelu);
+        assert!(tiles.iter().any(|t| t
+            .instrs
+            .iter()
+            .any(|i| matches!(i.op, Opcode::Vector { op: VecOp::Gelu, .. }))));
+    }
+
+    fn mk_attention(
+        batch: usize,
+        heads: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        seq_kv: usize,
+    ) -> (Graph, Node) {
+        let mut g = Graph::new("attn");
+        let q = g.activation("q", &[batch, 1, heads * head_dim]);
+        let k = g.weight("k_cache", &[batch, kv_heads, seq_kv, head_dim]);
+        let v = g.weight("v_cache", &[batch, kv_heads, seq_kv, head_dim]);
+        let o = g.activation("o", &[batch, 1, heads * head_dim]);
+        g.node(
+            "attn",
+            OpKind::FusedAttention { heads, kv_heads, head_dim, seq_q: 1, seq_kv },
+            &[q, k, v],
+            &[o],
+        );
+        g.inputs = vec![q];
+        g.outputs = vec![o];
+        let n = g.nodes[0].clone();
+        (g, n)
+    }
+
+    #[test]
+    fn gqa_reads_less_kv_than_mha() {
+        let cfg = NpuConfig::server();
+        let p = LoweringParams::from_config(&cfg);
+        // MHA: 32 heads, 32 kv heads. GQA: 32 heads, 8 kv heads.
+        let (gm, nm) = mk_attention(1, 32, 32, 128, 1024);
+        let (gg, ng) = mk_attention(1, 32, 8, 128, 1024);
+        let am = AddressMap::build(&gm, cfg.element_bytes, 0);
+        let ag = AddressMap::build(&gg, cfg.element_bytes, 0);
+        let tm = lower_attention(&gm, &nm, &am, &p, 0);
+        let tg = lower_attention(&gg, &ng, &ag, &p, 0);
+        let bytes = |ts: &[Tile]| -> u64 { ts.iter().map(|t| t.dram_bytes()).sum() };
+        let (bm, bg) = (bytes(&tm), bytes(&tg));
+        assert!(
+            bg * 3 < bm,
+            "GQA traffic {bg} should be ~4x less than MHA {bm}"
+        );
+        // Compute (MACs) identical: same head count.
+        let macs = |ts: &[Tile]| -> u64 { ts.iter().map(|t| t.macs()).sum() };
+        assert_eq!(macs(&tm), macs(&tg));
+    }
+
+    #[test]
+    fn attention_macs_match_formula() {
+        let (g, n) = mk_attention(2, 8, 8, 64, 256);
+        let cfg = NpuConfig::server();
+        let p = LoweringParams::from_config(&cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let tiles = lower_attention(&g, &n, &amap, &p, 0);
+        let macs: u64 = tiles.iter().map(|t| t.macs()).sum();
+        // QK^T + PV: 2 * batch * heads * seq_q * seq_kv * head_dim.
+        assert_eq!(macs, 2 * 2 * 8 * 256 * 64);
+    }
+
+    #[test]
+    fn attention_tiles_per_batch_and_kv_head() {
+        let (g, n) = mk_attention(3, 8, 2, 64, 128);
+        let cfg = NpuConfig::server();
+        let p = LoweringParams::from_config(&cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let tiles = lower_attention(&g, &n, &amap, &p, 0);
+        assert_eq!(tiles.len(), 3 * 2);
+        for t in &tiles {
+            t.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn kv_weights_not_activations() {
+        // KV cache must be Weight-kind so the address map places it like
+        // resident model state.
+        let (g, _) = mk_attention(1, 8, 8, 64, 128);
+        assert_eq!(g.tensors[1].kind, TensorKind::Weight);
+    }
+}

@@ -1,0 +1,273 @@
+//! Lowering: graph operator nodes → tile-level instruction lists.
+//!
+//! Mirrors §II-A of the paper: "The ONNX operations in the DNN's optimized
+//! graph are lowered to tensor tile-level operations using our tile
+//! operation templates. Dependencies between tile operations are preserved
+//! based on the input and output tensors. The tile sizes are chosen using
+//! heuristics from prior work [Gemmini] that maximizes the utilization of
+//! on-chip scratchpad memory."
+//!
+//! Each [`Tile`] is a self-contained instruction sequence (MVIN → compute →
+//! MVOUT) with explicit intra-tile dependencies; inter-tile dependencies
+//! are carried at node granularity by the global scheduler.
+
+pub mod conv;
+pub mod gemm;
+pub mod tiling;
+pub mod vector;
+
+use crate::graph::{Graph, Node, OpKind, TensorId, TensorKind};
+use crate::isa::Instr;
+use std::collections::HashMap;
+
+/// Identifies the work a tile belongs to (request → node → tile index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobRef {
+    pub request_id: usize,
+    pub node_id: usize,
+    pub tile_idx: usize,
+}
+
+/// A tile-level operation: the unit of work the global scheduler dispatches
+/// to NPU cores.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub job: JobRef,
+    pub instrs: Vec<Instr>,
+    /// Scratchpad footprint in bytes (for admission into a spad partition).
+    pub spad_bytes: u64,
+    /// Accumulator footprint in bytes.
+    pub acc_bytes: u64,
+}
+
+impl Tile {
+    /// Total DRAM traffic of this tile (bytes moved by MVIN/MVOUT).
+    pub fn dram_bytes(&self) -> u64 {
+        self.instrs.iter().map(|i| i.op.dram_bytes()).sum()
+    }
+
+    /// Total MACs of this tile.
+    pub fn macs(&self) -> u64 {
+        self.instrs.iter().map(|i| i.op.macs()).sum()
+    }
+
+    /// Basic well-formedness: deps point backwards and in range.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, instr) in self.instrs.iter().enumerate() {
+            for &d in &instr.deps {
+                if d as usize >= i {
+                    anyhow::bail!(
+                        "tile {:?}: instr {} has forward/self dep {}",
+                        self.job,
+                        i,
+                        d
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Assigns every tensor a DRAM base address. Weights for all requests of a
+/// model share one allocation (they are read-only); activations are
+/// per-request. A bump allocator is sufficient: the simulator models
+/// traffic, not liveness-based reuse (same as ONNXim).
+#[derive(Debug, Clone)]
+pub struct AddressMap {
+    base: HashMap<TensorId, u64>,
+    next: u64,
+    pub element_bytes: u64,
+}
+
+impl AddressMap {
+    /// Lay out all graph tensors contiguously from `start`.
+    pub fn build(g: &Graph, element_bytes: usize, start: u64) -> Self {
+        let mut m = AddressMap {
+            base: HashMap::new(),
+            next: start,
+            element_bytes: element_bytes as u64,
+        };
+        // Weights first (stable layout shared across batch), then activations.
+        for t in 0..g.tensors.len() {
+            if g.tensors[t].kind == TensorKind::Weight {
+                m.alloc(t, g.tensors[t].numel() * element_bytes as u64);
+            }
+        }
+        for t in 0..g.tensors.len() {
+            if g.tensors[t].kind == TensorKind::Activation {
+                m.alloc(t, g.tensors[t].numel() * element_bytes as u64);
+            }
+        }
+        m
+    }
+
+    fn alloc(&mut self, t: TensorId, bytes: u64) {
+        // 64 B aligned (DRAM access granularity).
+        let aligned = self.next.div_ceil(64) * 64;
+        self.base.insert(t, aligned);
+        self.next = aligned + bytes;
+    }
+
+    pub fn addr(&self, t: TensorId) -> u64 {
+        *self.base.get(&t).expect("tensor has no address")
+    }
+
+    /// Address of a sub-range of a tensor, given an element offset.
+    pub fn addr_at(&self, t: TensorId, elem_offset: u64) -> u64 {
+        self.addr(t) + elem_offset * self.element_bytes
+    }
+
+    /// Total allocated footprint in bytes.
+    pub fn footprint(&self) -> u64 {
+        self.next
+    }
+}
+
+/// Per-core hardware parameters the lowering needs (a subset of
+/// [`crate::config::NpuConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LoweringParams {
+    pub systolic_width: u64,
+    pub systolic_height: u64,
+    pub element_bytes: u64,
+    pub acc_element_bytes: u64,
+    /// Usable scratchpad bytes per tile (half of a core's scratchpad: the
+    /// other half belongs to the concurrently-running tile, §II-B).
+    pub spad_tile_bytes: u64,
+    /// Usable accumulator bytes per tile.
+    pub acc_tile_bytes: u64,
+}
+
+impl LoweringParams {
+    pub fn from_config(c: &crate::config::NpuConfig) -> Self {
+        LoweringParams {
+            systolic_width: c.systolic_width as u64,
+            systolic_height: c.systolic_height as u64,
+            element_bytes: c.element_bytes as u64,
+            acc_element_bytes: c.acc_element_bytes as u64,
+            spad_tile_bytes: c.spad_bytes() / 2,
+            acc_tile_bytes: c.acc_bytes() / 2,
+        }
+    }
+}
+
+/// Lower one graph node into its tile list.
+///
+/// `request_id` tags tiles for multi-tenant accounting; `amap` supplies
+/// DRAM addresses so DMA instructions carry real (contention-relevant)
+/// addresses.
+pub fn lower_node(
+    g: &Graph,
+    node: &Node,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+) -> Vec<Tile> {
+    let tiles = match &node.op {
+        OpKind::MatMul { activation } => {
+            gemm::lower_matmul(g, node, amap, p, request_id, *activation)
+        }
+        OpKind::Conv { .. } => conv::lower_conv(g, node, amap, p, request_id),
+        OpKind::FusedAttention { .. } => gemm::lower_attention(g, node, amap, p, request_id),
+        OpKind::MaxPool { .. } | OpKind::GlobalAvgPool => {
+            vector::lower_pool(g, node, amap, p, request_id)
+        }
+        OpKind::BatchNorm
+        | OpKind::LayerNorm { .. }
+        | OpKind::Softmax
+        | OpKind::Gelu
+        | OpKind::Relu
+        | OpKind::Add
+        | OpKind::Mul
+        | OpKind::Gather => vector::lower_elementwise(g, node, amap, p, request_id),
+        OpKind::Reshape | OpKind::Flatten => Vec::new(), // shape-only: no work
+    };
+    debug_assert!(tiles.iter().all(|t| t.validate().is_ok()));
+    tiles
+}
+
+/// Lower an entire graph (topological order), returning tiles grouped per
+/// node. Used by tests and the single-request fast path.
+pub fn lower_graph(
+    g: &Graph,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+) -> anyhow::Result<Vec<(usize, Vec<Tile>)>> {
+    let mut out = Vec::new();
+    for nid in g.topo_order()? {
+        let tiles = lower_node(g, &g.nodes[nid], amap, p, request_id);
+        out.push((nid, tiles));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::graph::Activation;
+
+    #[test]
+    fn address_map_is_aligned_and_disjoint() {
+        let mut g = Graph::new("t");
+        let a = g.activation("a", &[3, 5]); // 15 elems
+        let w = g.weight("w", &[7, 11]);
+        let b = g.activation("b", &[2, 2]);
+        let m = AddressMap::build(&g, 2, 0);
+        let addrs = [(a, 15 * 2), (w, 77 * 2), (b, 8)];
+        for (t, bytes) in addrs {
+            assert_eq!(m.addr(t) % 64, 0);
+            for (u, ub) in addrs {
+                if t != u {
+                    let (s1, e1) = (m.addr(t), m.addr(t) + bytes);
+                    let (s2, e2) = (m.addr(u), m.addr(u) + ub);
+                    assert!(e1 <= s2 || e2 <= s1, "tensors {t} and {u} overlap");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weights_laid_out_before_activations() {
+        let mut g = Graph::new("t");
+        let a = g.activation("a", &[64]);
+        let w = g.weight("w", &[64]);
+        let m = AddressMap::build(&g, 1, 0);
+        assert!(m.addr(w) < m.addr(a));
+    }
+
+    #[test]
+    fn lower_graph_covers_all_compute_nodes() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 64, 64]);
+        let w = g.weight("w", &[64, 64]);
+        let y = g.activation("y", &[1, 64, 64]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        let z = g.activation("z", &[1, 64, 64]);
+        g.node("act", OpKind::Gelu, &[y], &[z]);
+        g.inputs = vec![x];
+        g.outputs = vec![z];
+
+        let p = LoweringParams::from_config(&NpuConfig::mobile());
+        let amap = AddressMap::build(&g, 1, 0);
+        let lowered = lower_graph(&g, &amap, &p, 0).unwrap();
+        assert_eq!(lowered.len(), 2);
+        assert!(lowered.iter().all(|(_, tiles)| !tiles.is_empty()));
+    }
+
+    #[test]
+    fn shape_only_nodes_produce_no_tiles() {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[4, 4]);
+        let y = g.activation("y", &[16]);
+        g.node("reshape", OpKind::Reshape, &[x], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let p = LoweringParams::from_config(&NpuConfig::mobile());
+        let amap = AddressMap::build(&g, 1, 0);
+        let lowered = lower_graph(&g, &amap, &p, 0).unwrap();
+        assert!(lowered[0].1.is_empty());
+    }
+}

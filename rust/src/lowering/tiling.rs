@@ -1,0 +1,179 @@
+//! Tile-size selection heuristic.
+//!
+//! Chooses GEMM tile dimensions (Tm, Tk, Tn) that maximize scratchpad
+//! utilization (the Gemmini heuristic the paper cites): larger tiles mean
+//! more reuse of each DMA'd operand, fewer dynamic tile operations, and —
+//! critically for simulation speed — fewer simulated instructions.
+//!
+//! Constraints:
+//! - `(Tm*Tk + Tk*Tn) * eb  <= spad_tile_bytes` — both input operands of
+//!   one k-step resident in this tile's scratchpad partition,
+//! - `Tm*Tn * acc_eb        <= acc_tile_bytes` — the output tile lives in
+//!   the accumulator across the k loop,
+//! - Tm, Tk multiples of the systolic height, Tn multiples of the width
+//!   (up to the problem size), so the array is fully utilized.
+//!
+//! Among feasible shapes, minimize total DRAM traffic:
+//! `ceil(M/Tm)*ceil(N/Tn)*ceil(K/Tk)*(Tm*Tk + Tk*Tn) + M*N` (writes).
+
+use super::LoweringParams;
+
+/// A chosen GEMM tiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTiling {
+    pub tm: u64,
+    pub tk: u64,
+    pub tn: u64,
+}
+
+impl GemmTiling {
+    pub fn tiles(&self, m: u64, k: u64, n: u64) -> u64 {
+        m.div_ceil(self.tm) * k.div_ceil(self.tk) * n.div_ceil(self.tn)
+    }
+}
+
+/// Pick tile sizes for an `M x K x N` GEMM.
+pub fn choose_gemm_tiling(m: u64, k: u64, n: u64, p: &LoweringParams) -> GemmTiling {
+    let h = p.systolic_height;
+    let w = p.systolic_width;
+    let eb = p.element_bytes;
+    let acc_eb = p.acc_element_bytes;
+
+    // Candidate tile dims: powers-of-two multiples of the array dims,
+    // clipped to the problem size.
+    let candidates = |q: u64, limit: u64| -> Vec<u64> {
+        let mut v = Vec::new();
+        let mut t = q;
+        loop {
+            v.push(t.min(limit.max(1)));
+            if t >= limit {
+                break;
+            }
+            t *= 2;
+        }
+        v.dedup();
+        v
+    };
+
+    let tms = candidates(h, m);
+    let tns = candidates(w, n);
+    let tks = candidates(h, k);
+
+    let mut best: Option<(u64, GemmTiling)> = None;
+    for &tm in &tms {
+        for &tn in &tns {
+            if tm * tn * acc_eb > p.acc_tile_bytes {
+                continue;
+            }
+            for &tk in &tks {
+                if (tm * tk + tk * tn) * eb > p.spad_tile_bytes {
+                    continue;
+                }
+                let t = GemmTiling { tm, tk, tn };
+                let reads =
+                    m.div_ceil(tm) * n.div_ceil(tn) * k.div_ceil(tk) * (tm * tk + tk * tn) * eb;
+                let traffic = reads + m * n * acc_eb;
+                // Prefer lower traffic; tie-break on fewer tiles.
+                let key = (traffic, t.tiles(m, k, n));
+                if best.map_or(true, |(bk, bt)| key < (bk, bt.tiles(m, k, n))) {
+                    best = Some((key.0, t));
+                }
+            }
+        }
+    }
+
+    best.map(|(_, t)| t).unwrap_or_else(|| {
+        // Degenerate scratchpads (tiny spad in tests): fall back to a
+        // single-array-step tile, clamped to the problem.
+        GemmTiling { tm: h.min(m.max(1)), tk: h.min(k.max(1)), tn: w.min(n.max(1)) }
+    })
+}
+
+/// Elements per chunk for element-wise ops: as much of the tensor as fits
+/// in the scratchpad partition, leaving room for `operands` inputs plus one
+/// output.
+pub fn elementwise_chunk_elems(p: &LoweringParams, operands: u64) -> u64 {
+    (p.spad_tile_bytes / (p.element_bytes * (operands + 1))).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+
+    fn params(cfg: &NpuConfig) -> LoweringParams {
+        LoweringParams::from_config(cfg)
+    }
+
+    #[test]
+    fn tiles_fit_constraints_mobile() {
+        let p = params(&NpuConfig::mobile());
+        for (m, k, n) in [(64, 64, 64), (1, 4096, 4096), (512, 512, 512), (7, 13, 29)] {
+            let t = choose_gemm_tiling(m, k, n, &p);
+            assert!((t.tm * t.tk + t.tk * t.tn) * p.element_bytes <= p.spad_tile_bytes);
+            assert!(t.tm * t.tn * p.acc_element_bytes <= p.acc_tile_bytes);
+            assert!(t.tm >= 1 && t.tk >= 1 && t.tn >= 1);
+        }
+    }
+
+    #[test]
+    fn tiles_fit_constraints_server() {
+        let p = params(&NpuConfig::server());
+        for (m, k, n) in [(4096, 4096, 4096), (1, 8192, 8192), (128, 128, 128)] {
+            let t = choose_gemm_tiling(m, k, n, &p);
+            assert!((t.tm * t.tk + t.tk * t.tn) * p.element_bytes <= p.spad_tile_bytes);
+            assert!(t.tm * t.tn * p.acc_element_bytes <= p.acc_tile_bytes);
+        }
+    }
+
+    #[test]
+    fn bigger_array_means_fewer_tiles() {
+        // The paper's Fig-2 speedup mechanism: Server NPU tiles a big GEMM
+        // into far fewer tile ops than Mobile.
+        let pm = params(&NpuConfig::mobile());
+        let ps = params(&NpuConfig::server());
+        let (m, k, n) = (2048, 2048, 2048);
+        let tiles_m = choose_gemm_tiling(m, k, n, &pm).tiles(m, k, n);
+        let tiles_s = choose_gemm_tiling(m, k, n, &ps).tiles(m, k, n);
+        assert!(
+            tiles_s * 8 <= tiles_m,
+            "server tiles ({tiles_s}) should be far fewer than mobile ({tiles_m})"
+        );
+    }
+
+    #[test]
+    fn gemv_gets_unit_tm() {
+        let p = params(&NpuConfig::server());
+        let t = choose_gemm_tiling(1, 4096, 4096, &p);
+        assert_eq!(t.tm, 1);
+    }
+
+    #[test]
+    fn small_problem_single_tile() {
+        let p = params(&NpuConfig::server());
+        let t = choose_gemm_tiling(64, 64, 64, &p);
+        assert_eq!(t.tiles(64, 64, 64), 1);
+    }
+
+    #[test]
+    fn utilization_is_high_for_large_gemm() {
+        // Scratchpad utilization should be substantial (that's the point
+        // of the heuristic) for a large square GEMM.
+        let p = params(&NpuConfig::server());
+        let t = choose_gemm_tiling(8192, 8192, 8192, &p);
+        let used = (t.tm * t.tk + t.tk * t.tn) * p.element_bytes;
+        assert!(
+            used * 2 > p.spad_tile_bytes,
+            "spad utilization {used}/{} too low with tiling {t:?}",
+            p.spad_tile_bytes
+        );
+    }
+
+    #[test]
+    fn elementwise_chunk_nonzero_and_bounded() {
+        let p = params(&NpuConfig::mobile());
+        let c = elementwise_chunk_elems(&p, 2);
+        assert!(c >= 1);
+        assert!(c * 3 * p.element_bytes <= p.spad_tile_bytes);
+    }
+}

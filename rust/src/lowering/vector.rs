@@ -1,0 +1,263 @@
+//! Vector-unit op templates: element-wise ops, normalization, softmax,
+//! pooling — the "emerging operators" the paper lists among its advantages
+//! over GEMM/Conv-only simulators (§I: layer normalization and skip
+//! connections "can collectively take up a significant portion of
+//! runtime").
+//!
+//! Each op streams the tensor through the scratchpad in chunks: MVIN
+//! operand chunk(s) → vector instruction sequence → MVOUT.
+
+use super::tiling::elementwise_chunk_elems;
+use super::{AddressMap, JobRef, LoweringParams, Tile};
+use crate::graph::{Graph, Node, OpKind, TensorKind};
+use crate::isa::{Instr, Opcode, VecOp};
+
+/// The vector instruction sequence (per chunk) for an op kind.
+/// LayerNorm: mean reduce, var reduce (mul+reduce), sqrt, div, scale-add.
+/// Softmax: max reduce, exp, sum reduce, div.
+fn vec_sequence(op: &OpKind, elems: u64) -> Vec<Opcode> {
+    match op {
+        OpKind::LayerNorm { .. } => vec![
+            Opcode::Vector { op: VecOp::Reduce, elems },
+            Opcode::Vector { op: VecOp::Mul, elems },
+            Opcode::Vector { op: VecOp::Reduce, elems },
+            Opcode::Vector { op: VecOp::Sqrt, elems: elems.div_ceil(64) },
+            Opcode::Vector { op: VecOp::Div, elems },
+            Opcode::Vector { op: VecOp::Add, elems },
+        ],
+        OpKind::BatchNorm => vec![
+            Opcode::Vector { op: VecOp::Mul, elems },
+            Opcode::Vector { op: VecOp::Add, elems },
+        ],
+        OpKind::Softmax => vec![
+            Opcode::Vector { op: VecOp::Max, elems },
+            Opcode::Vector { op: VecOp::Exp, elems },
+            Opcode::Vector { op: VecOp::Reduce, elems },
+            Opcode::Vector { op: VecOp::Div, elems },
+        ],
+        OpKind::Gelu => vec![Opcode::Vector { op: VecOp::Gelu, elems }],
+        OpKind::Relu => vec![Opcode::Vector { op: VecOp::Relu, elems }],
+        OpKind::Add => vec![Opcode::Vector { op: VecOp::Add, elems }],
+        OpKind::Mul => vec![Opcode::Vector { op: VecOp::Mul, elems }],
+        OpKind::Gather => vec![], // pure data movement
+        _ => vec![Opcode::Vector { op: VecOp::Add, elems }],
+    }
+}
+
+/// Number of *data* inputs an element-wise node reads (activations and, for
+/// fused-skip LN, both residuals; Gather reads the embedding table rows it
+/// touches, not the whole table).
+fn data_inputs(g: &Graph, node: &Node) -> Vec<usize> {
+    match node.op {
+        OpKind::Gather => vec![],
+        _ => node
+            .inputs
+            .iter()
+            .copied()
+            .filter(|&t| g.tensors[t].kind == TensorKind::Activation)
+            .collect(),
+    }
+}
+
+/// Lower an element-wise / normalization node.
+pub fn lower_elementwise(
+    g: &Graph,
+    node: &Node,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+) -> Vec<Tile> {
+    let out_id = node.outputs[0];
+    let total = g.tensors[out_id].numel();
+    let inputs = data_inputs(g, node);
+    let n_in = inputs.len().max(1) as u64;
+    let chunk = elementwise_chunk_elems(p, n_in).min(total);
+    let eb = p.element_bytes;
+
+    let mut tiles = Vec::new();
+    let mut tile_idx = 0;
+    for c0 in (0..total).step_by(chunk as usize) {
+        let cl = chunk.min(total - c0);
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut in_deps = Vec::new();
+        for &inp in &inputs {
+            let i = instrs.len() as u32;
+            instrs.push(Instr::new(Opcode::Mvin {
+                dram_addr: amap.addr_at(inp, c0),
+                bytes: cl * eb,
+            }));
+            in_deps.push(i);
+        }
+        let mut last_deps = in_deps;
+        for op in vec_sequence(&node.op, cl) {
+            let i = instrs.len() as u32;
+            instrs.push(Instr::with_deps(op, last_deps.clone()));
+            last_deps = vec![i];
+        }
+        instrs.push(Instr::with_deps(
+            Opcode::Mvout { dram_addr: amap.addr_at(out_id, c0), bytes: cl * eb },
+            last_deps,
+        ));
+        tiles.push(Tile {
+            job: JobRef { request_id, node_id: node.id, tile_idx },
+            instrs,
+            spad_bytes: cl * (n_in + 1) * eb,
+            acc_bytes: 0,
+        });
+        tile_idx += 1;
+    }
+    tiles
+}
+
+/// Lower pooling: window reduction on the vector unit. GlobalAvgPool reads
+/// the whole feature map and writes one value per channel; MaxPool reads
+/// the input and writes the pooled output.
+pub fn lower_pool(
+    g: &Graph,
+    node: &Node,
+    amap: &AddressMap,
+    p: &LoweringParams,
+    request_id: usize,
+) -> Vec<Tile> {
+    let in_id = node.inputs[0];
+    let out_id = node.outputs[0];
+    let in_total = g.tensors[in_id].numel();
+    let out_total = g.tensors[out_id].numel();
+    let eb = p.element_bytes;
+    let chunk = elementwise_chunk_elems(p, 1).min(in_total);
+
+    let mut tiles = Vec::new();
+    let mut tile_idx = 0;
+    let out_per_chunk = (out_total * chunk).div_ceil(in_total).max(1);
+    let mut out_off = 0;
+    for c0 in (0..in_total).step_by(chunk as usize) {
+        let cl = chunk.min(in_total - c0);
+        let ol = out_per_chunk.min(out_total.saturating_sub(out_off)).max(1);
+        let instrs = vec![
+            Instr::new(Opcode::Mvin { dram_addr: amap.addr_at(in_id, c0), bytes: cl * eb }),
+            Instr::with_deps(Opcode::Vector { op: VecOp::Max, elems: cl }, vec![0]),
+            Instr::with_deps(
+                Opcode::Mvout { dram_addr: amap.addr_at(out_id, out_off), bytes: ol * eb },
+                vec![1],
+            ),
+        ];
+        out_off += ol;
+        tiles.push(Tile {
+            job: JobRef { request_id, node_id: node.id, tile_idx },
+            instrs,
+            spad_bytes: cl * 2 * eb,
+            acc_bytes: 0,
+        });
+        tile_idx += 1;
+    }
+    tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+
+    fn lower_op(op: OpKind, shape: &[usize], n_inputs: usize, cfg: &NpuConfig) -> Vec<Tile> {
+        let mut g = Graph::new("t");
+        let ins: Vec<_> = (0..n_inputs)
+            .map(|i| g.activation(&format!("x{i}"), shape))
+            .collect();
+        let y = g.activation("y", shape);
+        g.node("op", op, &ins, &[y]);
+        g.inputs = ins.clone();
+        g.outputs = vec![y];
+        let node = g.nodes[0].clone();
+        let p = LoweringParams::from_config(cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        lower_elementwise(&g, &node, &amap, &p, 0)
+    }
+
+    #[test]
+    fn gelu_traffic_is_read_plus_write() {
+        let tiles = lower_op(OpKind::Gelu, &[1, 1024], 1, &NpuConfig::mobile());
+        let bytes: u64 = tiles.iter().map(|t| t.dram_bytes()).sum();
+        assert_eq!(bytes, 2 * 1024);
+    }
+
+    #[test]
+    fn add_reads_both_operands() {
+        let tiles = lower_op(OpKind::Add, &[1, 1000], 2, &NpuConfig::mobile());
+        let bytes: u64 = tiles.iter().map(|t| t.dram_bytes()).sum();
+        assert_eq!(bytes, 3 * 1000);
+    }
+
+    #[test]
+    fn layernorm_has_multi_step_sequence() {
+        let tiles = lower_op(OpKind::LayerNorm { fused_skip: false }, &[1, 512], 1, &NpuConfig::mobile());
+        let vops = tiles[0]
+            .instrs
+            .iter()
+            .filter(|i| matches!(i.op, Opcode::Vector { .. }))
+            .count();
+        assert!(vops >= 5, "LN should need multiple vector steps, got {vops}");
+    }
+
+    #[test]
+    fn fused_ln_skip_reads_both_residuals() {
+        let cfg = NpuConfig::mobile();
+        let mut g = Graph::new("t");
+        let a = g.activation("a", &[1, 256]);
+        let b = g.activation("b", &[1, 256]);
+        let y = g.activation("y", &[1, 256]);
+        g.node("ln", OpKind::LayerNorm { fused_skip: true }, &[a, b], &[y]);
+        g.inputs = vec![a, b];
+        g.outputs = vec![y];
+        let node = g.nodes[0].clone();
+        let p = LoweringParams::from_config(&cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let tiles = lower_elementwise(&g, &node, &amap, &p, 0);
+        let reads: u64 = tiles
+            .iter()
+            .flat_map(|t| &t.instrs)
+            .filter(|i| matches!(i.op, Opcode::Mvin { .. }))
+            .map(|i| i.op.dram_bytes())
+            .sum();
+        assert_eq!(reads, 2 * 256);
+    }
+
+    #[test]
+    fn large_tensor_chunks_fit_spad() {
+        let cfg = NpuConfig::mobile();
+        let p = LoweringParams::from_config(&cfg);
+        let tiles = lower_op(OpKind::Gelu, &[1, 1_000_000], 1, &cfg);
+        assert!(tiles.len() > 1);
+        for t in &tiles {
+            assert!(t.spad_bytes <= p.spad_tile_bytes);
+            t.validate().unwrap();
+        }
+        // Coverage: total bytes = in + out.
+        let bytes: u64 = tiles.iter().map(|t| t.dram_bytes()).sum();
+        assert_eq!(bytes, 2 * 1_000_000);
+    }
+
+    #[test]
+    fn pool_reduces_output() {
+        let cfg = NpuConfig::mobile();
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 64, 7, 7]);
+        let y = g.activation("y", &[1, 64, 1, 1]);
+        g.node("gap", OpKind::GlobalAvgPool, &[x], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let node = g.nodes[0].clone();
+        let p = LoweringParams::from_config(&cfg);
+        let amap = AddressMap::build(&g, cfg.element_bytes, 0);
+        let tiles = lower_pool(&g, &node, &amap, &p, 0);
+        let reads: u64 = tiles
+            .iter()
+            .flat_map(|t| &t.instrs)
+            .filter(|i| matches!(i.op, Opcode::Mvin { .. }))
+            .map(|i| i.op.dram_bytes())
+            .sum();
+        assert_eq!(reads, 64 * 49);
+        for t in &tiles {
+            t.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! `onnxim` CLI — the simulator's leader entrypoint.
+//!
+//! Subcommands:
+//!   sim       Simulate one model:   onnxim sim --model resnet50 --batch 4
+//!                                   [--config mobile|server|<path.json>]
+//!                                   [--policy fcfs|time-shared|spatial]
+//!                                   [--noc simple|crossbar] [--cores N]
+//!   trace     Simulate a multi-tenant trace JSON: onnxim trace --trace t.json
+//!   graph     Export a model graph: onnxim graph --model gpt3-small-decode
+//!                                   [--optimize] [--out g.json]
+//!   validate  Core-model validation vs the RTL reference (Fig. 3b).
+//!   verify    Load artifacts/ and check functional numerics (L1/L2/L3).
+//!
+//! Argument parsing is hand-rolled (no clap in the offline vendor set).
+
+use onnxim::baseline::rtl_ref;
+use onnxim::config::{NocModel, NpuConfig};
+use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
+use onnxim::models;
+use onnxim::scheduler::{Fcfs, Policy, Spatial, TimeShared};
+use onnxim::sim::{NoDriver, Simulator};
+use onnxim::tenant::Trace;
+use onnxim::util::stats::{correlation, mape};
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn parse_args(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("warning: ignoring positional arg '{}'", args[i]);
+            i += 1;
+        }
+    }
+    map
+}
+
+fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
+    let mut cfg = match opts.get("config").map(String::as_str) {
+        None | Some("server") => NpuConfig::server(),
+        Some("mobile") => NpuConfig::mobile(),
+        Some(path) => NpuConfig::from_json_file(path)?,
+    };
+    if let Some(noc) = opts.get("noc") {
+        cfg.noc.model = match noc.as_str() {
+            "simple" => NocModel::Simple,
+            "crossbar" => NocModel::Crossbar,
+            other => anyhow::bail!("unknown noc model '{other}'"),
+        };
+    }
+    if let Some(cores) = opts.get("cores") {
+        cfg.num_cores = cores.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn make_policy(opts: &HashMap<String, String>, num_cores: usize) -> anyhow::Result<Box<dyn Policy>> {
+    Ok(match opts.get("policy").map(String::as_str) {
+        None | Some("fcfs") => Box::new(Fcfs::new()),
+        Some("time-shared") => Box::new(TimeShared::new()),
+        Some("spatial") => {
+            // --partition "0,1,1,1": tenant per core.
+            let map: Vec<usize> = match opts.get("partition") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| x.trim().parse())
+                    .collect::<Result<_, _>>()?,
+                None => (0..num_cores).map(|c| usize::from(c > 0)).collect(),
+            };
+            Box::new(Spatial::new(map))
+        }
+        Some(other) => anyhow::bail!("unknown policy '{other}'"),
+    })
+}
+
+fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = load_config(&opts)?;
+    let model = opts.get("model").map(String::as_str).unwrap_or("mlp");
+    let batch: usize = opts.get("batch").map(|b| b.parse()).transpose()?.unwrap_or(1);
+    let mut graph = models::by_name(model, batch)?;
+    let report_opt = optimize(&mut graph, OptLevel::Extended);
+    println!("model: {}", summarize(&graph));
+    println!("optimizer: {} rewrites", report_opt.total());
+    let policy = make_policy(&opts, cfg.num_cores)?;
+    println!(
+        "config: {} ({} cores, {} NoC)",
+        cfg.name,
+        cfg.num_cores,
+        match cfg.noc.model {
+            NocModel::Simple => "simple",
+            NocModel::Crossbar => "crossbar",
+        }
+    );
+    let mut sim = Simulator::new(cfg, policy);
+    sim.add_request(graph, 0, 0);
+    let t0 = std::time::Instant::now();
+    let report = sim.run(&mut NoDriver);
+    let wall = t0.elapsed();
+    println!("{}", report.summary());
+    println!(
+        "simulation wall-clock: {:.2}s ({:.2}M cycles/s)",
+        wall.as_secs_f64(),
+        report.total_cycles as f64 / wall.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_trace(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = load_config(&opts)?;
+    let path = opts
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace <file.json> required"))?;
+    let trace = Trace::load(path)?;
+    let policy = make_policy(&opts, cfg.num_cores)?;
+    let mut sim = Simulator::new(cfg, policy);
+    for e in &trace.entries {
+        for _ in 0..e.count {
+            let mut g = models::by_name(&e.model, e.batch)?;
+            optimize(&mut g, OptLevel::Extended);
+            sim.add_request(g, e.arrival, e.tenant);
+        }
+    }
+    let report = sim.run(&mut NoDriver);
+    println!("{}", report.summary());
+    for (i, lat) in report.request_latency.iter().enumerate() {
+        if let Some(l) = lat {
+            println!("  request {i}: {l} cycles ({:.3} ms)", *l as f64 / 1e6);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_graph(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let model = opts.get("model").map(String::as_str).unwrap_or("mlp");
+    let batch: usize = opts.get("batch").map(|b| b.parse()).transpose()?.unwrap_or(1);
+    let mut g = models::by_name(model, batch)?;
+    if opts.contains_key("optimize") {
+        let r = optimize(&mut g, OptLevel::Extended);
+        eprintln!("optimizer: {} rewrites", r.total());
+    }
+    let json = onnxim::graph::json::to_json(&g);
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, json)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_validate(_opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = NpuConfig::mobile();
+    let pairs = rtl_ref::run_validation(&cfg);
+    let (model, reference): (Vec<f64>, Vec<f64>) = pairs.into_iter().unzip();
+    println!(
+        "core-model validation vs cycle-exact RTL reference ({} workloads):",
+        model.len()
+    );
+    println!("  MAE         = {:.3}%  (paper: 0.23%)", mape(&model, &reference));
+    println!("  correlation = {:.5} (paper: 0.99)", correlation(&model, &reference));
+    Ok(())
+}
+
+fn cmd_verify(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = opts.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let rt = onnxim::runtime::FunctionalRuntime::load(dir)?;
+    println!("loaded {} artifacts from {dir}/", rt.artifacts.len());
+    for (name, err) in rt.verify_all()? {
+        let ok = if err < 1e-3 { "OK " } else { "FAIL" };
+        println!("  [{ok}] {name}: max |err| = {err:.2e}");
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: onnxim <sim|trace|graph|validate|verify> [--flags]");
+        eprintln!("see rust/src/main.rs header for the full flag list");
+        return ExitCode::FAILURE;
+    };
+    let opts = parse_args(&args[1..]);
+    let result = match cmd.as_str() {
+        "sim" => cmd_sim(opts),
+        "trace" => cmd_trace(opts),
+        "graph" => cmd_graph(opts),
+        "validate" => cmd_validate(opts),
+        "verify" => cmd_verify(opts),
+        other => {
+            eprintln!("unknown command '{other}'");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

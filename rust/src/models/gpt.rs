@@ -1,0 +1,291 @@
+//! Decoder-only transformer builders: GPT-3 Small and Llama-3-8B.
+//!
+//! Two phases, as in the paper (§III-A): *prefill* ("GPT-3(S)": the whole
+//! prompt in one pass, compute-bound) and *decode* ("GPT-3(G)": one token
+//! against a KV cache, GEMV/memory-bound — §II-E's attention case study).
+//! The KV-cache length is a builder parameter, giving the dynamic input
+//! shapes §I calls out for LLM generation.
+//!
+//! Graphs are built with per-layer: LN → QKV projection → FusedAttention
+//! (already head-fused, as the ONNX Runtime flow produces) → output
+//! projection → skip → LN → FFN (gelu) → skip. The LN+skip pairs are left
+//! unfused for the optimizer.
+
+use crate::graph::{Activation, Graph, OpKind, TensorId};
+
+/// Transformer architecture description.
+#[derive(Debug, Clone)]
+pub struct TransformerCfg {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    /// KV heads: == heads for MHA; < heads for GQA.
+    pub kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl TransformerCfg {
+    /// GPT-3 Small: 12 layers, d=768, 12 heads, d_ff=3072 (Brown et al.).
+    pub fn gpt3_small() -> Self {
+        TransformerCfg {
+            name: "gpt3-small".into(),
+            layers: 12,
+            d_model: 768,
+            heads: 12,
+            kv_heads: 12,
+            d_ff: 3072,
+            vocab: 50257,
+        }
+    }
+
+    /// Llama-3-8B: 32 layers, d=4096, 32 heads, 8 KV heads (GQA) or 32
+    /// (the paper's modified MHA variant), d_ff=14336.
+    pub fn llama3_8b(gqa: bool) -> Self {
+        TransformerCfg {
+            name: if gqa { "llama3-8b-gqa".into() } else { "llama3-8b-mha".into() },
+            layers: 32,
+            d_model: 4096,
+            heads: 32,
+            kv_heads: if gqa { 8 } else { 32 },
+            d_ff: 14336,
+            vocab: 128256,
+        }
+    }
+
+    /// Scale the layer count (for tractable case studies; layers are
+    /// homogeneous so per-layer behaviour is preserved — see
+    /// EXPERIMENTS.md for where this is used).
+    pub fn with_layers(mut self, layers: usize) -> Self {
+        self.layers = layers;
+        self
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Approximate parameter count (weights only).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let kv = (self.kv_heads * self.head_dim()) as u64;
+        let per_layer = d * d + 2 * d * kv + d * d + 3 * d * self.d_ff as u64;
+        per_layer * self.layers as u64 + d * self.vocab as u64
+    }
+}
+
+struct B<'g> {
+    g: &'g mut Graph,
+    n: usize,
+}
+
+impl<'g> B<'g> {
+    fn fresh(&mut self, tag: &str) -> String {
+        self.n += 1;
+        format!("{tag}_{}", self.n)
+    }
+
+    fn matmul(&mut self, x: TensorId, cols: usize, act: Activation, tag: &str) -> TensorId {
+        let name = self.fresh(tag);
+        let xs = self.g.tensors[x].shape.clone();
+        let k = *xs.last().unwrap();
+        let w = self.g.weight(&format!("{name}.w"), &[k, cols]);
+        let mut out_shape = xs;
+        *out_shape.last_mut().unwrap() = cols;
+        let y = self.g.activation(&format!("{name}.out"), &out_shape);
+        self.g.node(&name, OpKind::MatMul { activation: act }, &[x, w], &[y]);
+        y
+    }
+
+    fn ln(&mut self, x: TensorId) -> TensorId {
+        let name = self.fresh("ln");
+        let shape = self.g.tensors[x].shape.clone();
+        let y = self.g.activation(&format!("{name}.out"), &shape);
+        self.g.node(&name, OpKind::LayerNorm { fused_skip: false }, &[x], &[y]);
+        y
+    }
+
+    fn add(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        let name = self.fresh("skip");
+        let shape = self.g.tensors[a].shape.clone();
+        let y = self.g.activation(&format!("{name}.out"), &shape);
+        self.g.node(&name, OpKind::Add, &[a, b], &[y]);
+        y
+    }
+}
+
+/// Build a decoder-only transformer graph.
+///
+/// `seq_q` — query tokens this pass (prompt length for prefill, 1 for
+/// decode). `seq_kv` — total KV length attended to (== seq_q for prefill;
+/// cache length for decode).
+pub fn transformer(batch: usize, seq_q: usize, seq_kv: usize, cfg: &TransformerCfg) -> Graph {
+    let mut g = Graph::new(&format!(
+        "{}-b{batch}-q{seq_q}-kv{seq_kv}",
+        cfg.name
+    ));
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let kv_d = cfg.kv_heads * hd;
+
+    let x = g.activation("tokens", &[batch, seq_q, d]);
+    g.inputs = vec![x];
+    let mut b = B { g: &mut g, n: 0 };
+    let mut cur = x;
+
+    for layer in 0..cfg.layers {
+        // --- Attention block ---
+        let normed = b.ln(cur);
+        let q = b.matmul(normed, d, Activation::None, "q_proj");
+        // K/V projections for the *new* tokens (written into the cache).
+        let _k_new = b.matmul(normed, kv_d, Activation::None, "k_proj");
+        let _v_new = b.matmul(normed, kv_d, Activation::None, "v_proj");
+        // KV cache tensors (resident, read by attention).
+        let k_cache = b.g.weight(
+            &format!("l{layer}.k_cache"),
+            &[batch, cfg.kv_heads, seq_kv, hd],
+        );
+        let v_cache = b.g.weight(
+            &format!("l{layer}.v_cache"),
+            &[batch, cfg.kv_heads, seq_kv, hd],
+        );
+        let attn_name = b.fresh("attn");
+        let attn_out = b.g.activation(&format!("{attn_name}.out"), &[batch, seq_q, d]);
+        b.g.node(
+            &attn_name,
+            OpKind::FusedAttention {
+                heads: cfg.heads,
+                kv_heads: cfg.kv_heads,
+                head_dim: hd,
+                seq_q,
+                seq_kv,
+            },
+            &[q, k_cache, v_cache],
+            &[attn_out],
+        );
+        let proj = b.matmul(attn_out, d, Activation::None, "o_proj");
+        let res1 = b.add(proj, cur);
+
+        // --- FFN block ---
+        let normed2 = b.ln(res1);
+        let ff1 = b.matmul(normed2, cfg.d_ff, Activation::Gelu, "ff1");
+        let ff2 = b.matmul(ff1, d, Activation::None, "ff2");
+        cur = b.add(ff2, res1);
+    }
+
+    // Final LN + LM head.
+    let normed = b.ln(cur);
+    let logits = b.matmul(normed, cfg.vocab, Activation::None, "lm_head");
+    g.outputs = vec![logits];
+    g
+}
+
+/// GPT-3 Small prefill ("GPT-3(S)"): the whole prompt in one pass.
+pub fn gpt3_small_prefill(batch: usize, prompt: usize) -> Graph {
+    transformer(batch, prompt, prompt, &TransformerCfg::gpt3_small())
+}
+
+/// GPT-3 Small decode ("GPT-3(G)"): one token against a KV cache.
+pub fn gpt3_small_decode(batch: usize, kv_len: usize) -> Graph {
+    transformer(batch, 1, kv_len, &TransformerCfg::gpt3_small())
+}
+
+/// Llama-3 decode step with the given KV length.
+pub fn llama3(batch: usize, kv_len: usize, cfg: &TransformerCfg) -> Graph {
+    transformer(batch, 1, kv_len, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimizer::{optimize, OptLevel};
+
+    #[test]
+    fn gpt3_small_valid_both_phases() {
+        for g in [gpt3_small_prefill(1, 512), gpt3_small_decode(1, 512)] {
+            g.validate().unwrap();
+            g.infer_shapes().unwrap();
+        }
+    }
+
+    #[test]
+    fn gpt3_small_param_count() {
+        // GPT-3 Small is ~125M params (incl. embeddings ~163M with vocab
+        // head; weights-only here).
+        let p = TransformerCfg::gpt3_small().params();
+        assert!((100_000_000..200_000_000).contains(&p), "params = {p}");
+    }
+
+    #[test]
+    fn llama3_8b_param_count() {
+        let p = TransformerCfg::llama3_8b(true).params();
+        assert!(
+            (6_500_000_000..8_500_000_000).contains(&p),
+            "params = {p}"
+        );
+    }
+
+    #[test]
+    fn decode_flops_much_smaller_than_prefill() {
+        let fp = gpt3_small_prefill(1, 512).flops();
+        let fd = gpt3_small_decode(1, 512).flops();
+        assert!(fd * 50 < fp, "decode {fd} vs prefill {fp}");
+    }
+
+    #[test]
+    fn gqa_and_mha_same_compute_different_kv() {
+        let gqa = llama3(1, 1023, &TransformerCfg::llama3_8b(true).with_layers(2));
+        let mha = llama3(1, 1023, &TransformerCfg::llama3_8b(false).with_layers(2));
+        // KV cache footprint: MHA has 4x the KV weights of GQA (32 vs 8
+        // kv heads).
+        let kv_bytes = |g: &Graph| -> u64 {
+            g.tensors
+                .iter()
+                .filter(|t| t.name.contains("cache"))
+                .map(|t| t.numel())
+                .sum()
+        };
+        assert_eq!(kv_bytes(&mha), 4 * kv_bytes(&gqa));
+        // Attention FLOPs identical (same head count).
+        let attn_flops = |g: &Graph| -> u64 {
+            g.nodes
+                .iter()
+                .filter(|n| n.op.op_type() == "FusedAttention")
+                .map(|n| g.node_flops(n))
+                .sum()
+        };
+        assert_eq!(attn_flops(&gqa), attn_flops(&mha));
+    }
+
+    #[test]
+    fn kv_length_grows_attention_work() {
+        let short = gpt3_small_decode(1, 128);
+        let long = gpt3_small_decode(1, 1024);
+        let attn = |g: &Graph| -> u64 {
+            g.nodes
+                .iter()
+                .filter(|n| n.op.op_type() == "FusedAttention")
+                .map(|n| g.node_flops(n))
+                .sum()
+        };
+        assert_eq!(attn(&long), 8 * attn(&short));
+    }
+
+    #[test]
+    fn optimizer_fuses_ln_skips() {
+        let mut g = gpt3_small_decode(1, 64);
+        let report = optimize(&mut g, OptLevel::Extended);
+        assert!(report.ln_skip_fused > 0);
+        g.validate().unwrap();
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn node_count_scales_with_layers() {
+        let g2 = transformer(1, 1, 64, &TransformerCfg::gpt3_small().with_layers(2));
+        let g4 = transformer(1, 1, 64, &TransformerCfg::gpt3_small().with_layers(4));
+        let per_layer = (g4.nodes.len() - g2.nodes.len()) / 2;
+        assert!(per_layer >= 9, "per-layer nodes = {per_layer}");
+    }
+}

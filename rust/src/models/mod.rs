@@ -1,0 +1,85 @@
+//! Model zoo: builders for the paper's evaluation models.
+//!
+//! - [`resnet`] — ResNet-50 (Fig. 3a, Fig. 4 co-runner), built with
+//!   explicit Conv/BN/ReLU/Add nodes so the optimizer's fusion flow has
+//!   real work to do (as ONNX Runtime does for the paper).
+//! - [`gpt`] — decoder-only transformers: GPT-3 Small (Fig. 3a prefill
+//!   "GPT-3(S)" / decode "GPT-3(G)", Fig. 4) and Llama-3-8B with GQA or
+//!   MHA (Fig. 5), with dynamic KV-cache length (§I's dynamic shapes).
+//!
+//! [`by_name`] resolves trace model names.
+
+pub mod gpt;
+pub mod resnet;
+
+use crate::graph::Graph;
+pub use gpt::{gpt3_small_decode, gpt3_small_prefill, llama3, TransformerCfg};
+pub use resnet::resnet50;
+
+/// Resolve a model name from a trace file into a graph.
+///
+/// Recognized: `resnet50`, `gpt3-small-prefill` (512-token prompt),
+/// `gpt3-small-decode` (512-token KV), `llama3-8b-gqa`, `llama3-8b-mha`
+/// (1023-token KV), `mlp` (tiny smoke model).
+pub fn by_name(name: &str, batch: usize) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "resnet50" => resnet50(batch),
+        "gpt3-small-prefill" => gpt3_small_prefill(batch, 512),
+        "gpt3-small-decode" => gpt3_small_decode(batch, 512),
+        "llama3-8b-gqa" => llama3(batch, 1023, &TransformerCfg::llama3_8b(true)),
+        "llama3-8b-mha" => llama3(batch, 1023, &TransformerCfg::llama3_8b(false)),
+        "mlp" => mlp(batch, 256, 4),
+        other => anyhow::bail!("unknown model '{other}'"),
+    })
+}
+
+/// A small MLP for smoke tests and the quickstart example.
+pub fn mlp(batch: usize, dim: usize, layers: usize) -> Graph {
+    use crate::graph::{Activation, OpKind};
+    let mut g = Graph::new(&format!("mlp-b{batch}-d{dim}-l{layers}"));
+    let mut cur = g.activation("x", &[batch, dim]);
+    g.inputs = vec![cur];
+    for i in 0..layers {
+        let w = g.weight(&format!("fc{i}.w"), &[dim, dim]);
+        let h = g.activation(&format!("fc{i}.out"), &[batch, dim]);
+        let act = if i + 1 < layers { Activation::Gelu } else { Activation::None };
+        g.node(&format!("fc{i}"), OpKind::MatMul { activation: act }, &[cur, w], &[h]);
+        cur = h;
+    }
+    g.outputs = vec![cur];
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_resolves_all_names() {
+        for name in [
+            "resnet50",
+            "gpt3-small-prefill",
+            "gpt3-small-decode",
+            "llama3-8b-gqa",
+            "llama3-8b-mha",
+            "mlp",
+        ] {
+            let g = by_name(name, 1).unwrap();
+            g.validate().unwrap();
+            g.infer_shapes().unwrap();
+            assert!(!g.nodes.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        assert!(by_name("alexnet", 1).is_err());
+    }
+
+    #[test]
+    fn mlp_flops_scale_with_batch() {
+        let f1 = mlp(1, 128, 2).flops();
+        let f8 = mlp(8, 128, 2).flops();
+        assert!(f8 > 7 * f1 && f8 <= 8 * f1);
+    }
+}

@@ -1,0 +1,238 @@
+//! ResNet-50 builder (He et al., 2015), NCHW, 224x224 input.
+//!
+//! Built un-fused — separate Conv, BatchNorm, ReLU and Add nodes — so the
+//! graph optimizer performs the same conv+BN / conv+skip / activation
+//! fusions ONNX Runtime applies in the paper's flow (§II-A).
+
+use crate::graph::{Activation, Graph, OpKind, TensorId};
+
+struct B<'g> {
+    g: &'g mut Graph,
+    n: usize,
+}
+
+impl<'g> B<'g> {
+    fn fresh(&mut self, tag: &str) -> String {
+        self.n += 1;
+        format!("{tag}_{}", self.n)
+    }
+
+    fn conv(
+        &mut self,
+        x: TensorId,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> TensorId {
+        let name = self.fresh("conv");
+        let xs = self.g.tensors[x].shape.clone();
+        let oh = (xs[2] + 2 * pad - k) / stride + 1;
+        let ow = (xs[3] + 2 * pad - k) / stride + 1;
+        let w = self.g.weight(&format!("{name}.w"), &[out_c, in_c, k, k]);
+        let y = self.g.activation(&format!("{name}.out"), &[xs[0], out_c, oh, ow]);
+        self.g.node(
+            &name,
+            OpKind::Conv {
+                out_channels: out_c,
+                kernel: [k, k],
+                stride: [stride, stride],
+                padding: [pad, pad],
+                activation: Activation::None,
+                fused_bn: false,
+                fused_skip: false,
+            },
+            &[x, w],
+            &[y],
+        );
+        y
+    }
+
+    fn bn(&mut self, x: TensorId) -> TensorId {
+        let name = self.fresh("bn");
+        let shape = self.g.tensors[x].shape.clone();
+        let y = self.g.activation(&format!("{name}.out"), &shape);
+        self.g.node(&name, OpKind::BatchNorm, &[x], &[y]);
+        y
+    }
+
+    fn relu(&mut self, x: TensorId) -> TensorId {
+        let name = self.fresh("relu");
+        let shape = self.g.tensors[x].shape.clone();
+        let y = self.g.activation(&format!("{name}.out"), &shape);
+        self.g.node(&name, OpKind::Relu, &[x], &[y]);
+        y
+    }
+
+    fn add(&mut self, a: TensorId, b: TensorId) -> TensorId {
+        let name = self.fresh("add");
+        let shape = self.g.tensors[a].shape.clone();
+        let y = self.g.activation(&format!("{name}.out"), &shape);
+        self.g.node(&name, OpKind::Add, &[a, b], &[y]);
+        y
+    }
+
+    fn conv_bn_relu(
+        &mut self,
+        x: TensorId,
+        in_c: usize,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> TensorId {
+        let c = self.conv(x, in_c, out_c, k, stride, pad);
+        let b = self.bn(c);
+        self.relu(b)
+    }
+
+    /// Bottleneck block: 1x1 reduce -> 3x3 -> 1x1 expand (+ projection
+    /// shortcut when shape changes), final add + relu.
+    fn bottleneck(&mut self, x: TensorId, in_c: usize, mid_c: usize, stride: usize) -> TensorId {
+        let out_c = mid_c * 4;
+        let a = self.conv_bn_relu(x, in_c, mid_c, 1, 1, 0);
+        let b = self.conv_bn_relu(a, mid_c, mid_c, 3, stride, 1);
+        let c = self.conv(b, mid_c, out_c, 1, 1, 0);
+        let c = self.bn(c);
+        let shortcut = if in_c != out_c || stride != 1 {
+            let s = self.conv(x, in_c, out_c, 1, stride, 0);
+            self.bn(s)
+        } else {
+            x
+        };
+        let sum = self.add(c, shortcut);
+        self.relu(sum)
+    }
+}
+
+/// Build ResNet-50 for the given batch size (224x224x3 input, 1000-way
+/// classifier).
+pub fn resnet50(batch: usize) -> Graph {
+    let mut g = Graph::new(&format!("resnet50-b{batch}"));
+    let x = g.activation("input", &[batch, 3, 224, 224]);
+    g.inputs = vec![x];
+    let mut b = B { g: &mut g, n: 0 };
+
+    // Stem: 7x7/2 conv + BN + ReLU + 3x3/2 maxpool.
+    let stem = b.conv_bn_relu(x, 3, 64, 7, 2, 3);
+    let pool_name = b.fresh("maxpool");
+    let ps = b.g.tensors[stem].shape.clone();
+    let pooled = b.g.activation(
+        &format!("{pool_name}.out"),
+        &[ps[0], ps[1], (ps[2] + 2 - 3) / 2 + 1, (ps[3] + 2 - 3) / 2 + 1],
+    );
+    b.g.node(
+        &pool_name,
+        OpKind::MaxPool { kernel: [3, 3], stride: [2, 2], padding: [1, 1] },
+        &[stem],
+        &[pooled],
+    );
+
+    // Stages: [3, 4, 6, 3] bottlenecks with widths 64/128/256/512.
+    let mut cur = pooled;
+    let mut in_c = 64;
+    for (stage, (mid_c, blocks)) in [(64usize, 3usize), (128, 4), (256, 6), (512, 3)]
+        .into_iter()
+        .enumerate()
+    {
+        for blk in 0..blocks {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            cur = b.bottleneck(cur, in_c, mid_c, stride);
+            in_c = mid_c * 4;
+        }
+    }
+
+    // Head: global average pool -> flatten -> FC(1000).
+    let gap_name = b.fresh("gap");
+    let cs = b.g.tensors[cur].shape.clone();
+    let gap = b.g.activation(&format!("{gap_name}.out"), &[cs[0], cs[1], 1, 1]);
+    b.g.node(&gap_name, OpKind::GlobalAvgPool, &[cur], &[gap]);
+    let flat = b.g.activation("flatten.out", &[batch, 2048]);
+    b.g.node("flatten", OpKind::Flatten, &[gap], &[flat]);
+    let w_fc = b.g.weight("fc.w", &[2048, 1000]);
+    let logits = b.g.activation("logits", &[batch, 1000]);
+    b.g.node(
+        "fc",
+        OpKind::MatMul { activation: Activation::None },
+        &[flat, w_fc],
+        &[logits],
+    );
+    g.outputs = vec![logits];
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimizer::{optimize, OptLevel};
+    use crate::graph::TensorKind;
+
+    #[test]
+    fn structurally_valid() {
+        let g = resnet50(1);
+        g.validate().unwrap();
+        g.infer_shapes().unwrap();
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn parameter_count_close_to_reference() {
+        // ResNet-50 has ~25.6M parameters (conv + fc; we omit BN params
+        // since BN folds into conv).
+        let g = resnet50(1);
+        let params: u64 = g
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.numel())
+            .sum();
+        assert!(
+            (23_000_000..27_000_000).contains(&params),
+            "params = {params}"
+        );
+    }
+
+    #[test]
+    fn flops_close_to_reference() {
+        // ResNet-50 is ~4.1G MACs at batch 1; we count FLOPs = 2*MACs,
+        // so ~8.2 GFLOPs, conv-dominated.
+        let g = resnet50(1);
+        let flops = g.flops();
+        assert!(
+            (7_000_000_000..9_000_000_000).contains(&flops),
+            "flops = {flops}"
+        );
+    }
+
+    #[test]
+    fn optimizer_fuses_all_bns_and_relus() {
+        let mut g = resnet50(1);
+        let convs_before = g.nodes.iter().filter(|n| n.op.op_type() == "Conv").count();
+        let report = optimize(&mut g, OptLevel::Extended);
+        // 53 convs, each followed by BN -> all fused.
+        assert_eq!(report.conv_bn_fused, convs_before);
+        assert!(report.activation_fused > 0);
+        assert!(report.skip_fused > 0, "residual adds should fuse into convs");
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.op.op_type() == "BatchNormalization").count(),
+            0
+        );
+        g.validate().unwrap();
+        g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn conv_count_is_53() {
+        let g = resnet50(1);
+        let convs = g.nodes.iter().filter(|n| n.op.op_type() == "Conv").count();
+        assert_eq!(convs, 53); // 1 stem + 16 blocks * 3 + 4 projections
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let f1 = resnet50(1).flops();
+        let f4 = resnet50(4).flops();
+        assert!(f4 >= 4 * f1 * 99 / 100 && f4 <= 4 * f1);
+    }
+}

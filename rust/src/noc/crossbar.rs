@@ -1,0 +1,406 @@
+//! Flit-level cycle-accurate crossbar NoC (the paper's Booksim-backed
+//! model, specialized to the `cores × channels` crossbar of Table II).
+//!
+//! Input-queued, wormhole-switched: packets are split into 64-bit flits; a
+//! packet holds its output port from head to tail flit (no interleaving);
+//! each output port arbitrates among competing inputs round-robin. Input
+//! queues are bounded (credit-based backpressure to the DMA engines).
+//! Delivered packets incur an additional fixed pipeline latency.
+//!
+//! This model exposes the contention the simple model hides: two cores
+//! bursting to the same memory channel serialize at the output port, and
+//! head-of-line blocking delays victims sharing an input queue.
+
+use super::{request_bytes, response_bytes, Noc};
+use crate::config::NocConfig;
+use crate::dram::{DramSystem, MemRequest, MemResponse};
+use crate::{Cycle, NEVER};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+#[derive(Debug, Clone, Copy)]
+struct Packet<T> {
+    payload: T,
+    dest: usize,
+    flits_left: u64,
+}
+
+/// One direction of the crossbar, generic over the payload.
+struct Switch<T> {
+    /// Per-input queues, bounded in flits.
+    inputs: Vec<VecDeque<Packet<T>>>,
+    input_flits: Vec<u64>,
+    max_queue_flits: u64,
+    /// Per-output wormhole lock: which input currently owns the output.
+    out_lock: Vec<Option<usize>>,
+    /// Round-robin arbitration pointer per output.
+    rr: Vec<usize>,
+    /// Packets in the output pipeline: (delivery cycle, seq, payload).
+    pipeline: BinaryHeap<Reverse<(Cycle, u64, PacketOut<T>)>>,
+    latency: u64,
+    seq: u64,
+    delivered: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PacketOut<T> {
+    payload: T,
+    dest: usize,
+}
+
+// Heap ordering only uses (cycle, seq); payload comparison never runs but
+// Ord requires it — order by seq which is unique.
+impl<T: Copy> PartialEq for PacketOut<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.dest == other.dest
+    }
+}
+impl<T: Copy> Eq for PacketOut<T> {}
+impl<T: Copy> PartialOrd for PacketOut<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T: Copy> Ord for PacketOut<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dest.cmp(&other.dest)
+    }
+}
+
+impl<T: Copy> Switch<T> {
+    fn new(num_in: usize, num_out: usize, max_queue_flits: u64, latency: u64) -> Self {
+        Switch {
+            inputs: (0..num_in).map(|_| VecDeque::new()).collect(),
+            input_flits: vec![0; num_in],
+            max_queue_flits,
+            out_lock: vec![None; num_out],
+            rr: vec![0; num_out],
+            pipeline: BinaryHeap::new(),
+            latency,
+            seq: 0,
+            delivered: 0,
+        }
+    }
+
+    fn try_inject(&mut self, input: usize, payload: T, dest: usize, flits: u64) -> bool {
+        if self.input_flits[input] + flits > self.max_queue_flits {
+            return false;
+        }
+        self.input_flits[input] += flits;
+        self.inputs[input].push_back(Packet { payload, dest, flits_left: flits });
+        true
+    }
+
+    /// Force-inject (elastic buffer) — used for memory-side responses.
+    fn inject(&mut self, input: usize, payload: T, dest: usize, flits: u64) {
+        self.input_flits[input] += flits;
+        self.inputs[input].push_back(Packet { payload, dest, flits_left: flits });
+    }
+
+    /// One switch cycle: every output moves at most one flit.
+    fn tick(&mut self, now: Cycle) {
+        let num_in = self.inputs.len();
+        for out in 0..self.out_lock.len() {
+            // Allocate the output if free: round-robin over inputs whose
+            // head packet targets it.
+            if self.out_lock[out].is_none() {
+                for k in 0..num_in {
+                    let i = (self.rr[out] + k) % num_in;
+                    if let Some(head) = self.inputs[i].front() {
+                        if head.dest == out {
+                            self.out_lock[out] = Some(i);
+                            self.rr[out] = (i + 1) % num_in;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Move one flit on the locked connection.
+            if let Some(i) = self.out_lock[out] {
+                let head = self.inputs[i].front_mut().expect("locked input has head");
+                debug_assert_eq!(head.dest, out);
+                head.flits_left -= 1;
+                self.input_flits[i] -= 1;
+                if head.flits_left == 0 {
+                    let pkt = self.inputs[i].pop_front().unwrap();
+                    self.seq += 1;
+                    self.pipeline.push(Reverse((
+                        now + self.latency,
+                        self.seq,
+                        PacketOut { payload: pkt.payload, dest: pkt.dest },
+                    )));
+                    self.out_lock[out] = None;
+                }
+            }
+        }
+    }
+
+    /// Pop packets whose pipeline delay has elapsed.
+    fn drain(&mut self, now: Cycle, out: &mut Vec<(usize, T)>) {
+        while let Some(Reverse((t, _, _))) = self.pipeline.peek() {
+            if *t > now {
+                break;
+            }
+            let Reverse((_, _, pkt)) = self.pipeline.pop().unwrap();
+            self.delivered += 1;
+            out.push((pkt.dest, pkt.payload));
+        }
+    }
+
+    fn busy(&self) -> bool {
+        !self.pipeline.is_empty() || self.inputs.iter().any(|q| !q.is_empty())
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        if self.inputs.iter().any(|q| !q.is_empty()) {
+            return now + 1;
+        }
+        self.pipeline.peek().map_or(NEVER, |Reverse((t, _, _))| *t)
+    }
+}
+
+/// The full crossbar NoC: a request switch (cores → channels) and a
+/// response switch (channels → cores).
+pub struct CrossbarNoc {
+    req_net: Switch<MemRequest>,
+    resp_net: Switch<MemResponse>,
+    /// Requests delivered by the switch but stalled on DRAM queue space.
+    req_staged: Vec<VecDeque<MemRequest>>,
+    flit_bytes: u64,
+    access_granularity: u64,
+    scratch_req: Vec<(usize, MemRequest)>,
+    scratch_resp: Vec<(usize, MemResponse)>,
+}
+
+impl CrossbarNoc {
+    pub fn new(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
+        CrossbarNoc {
+            req_net: Switch::new(
+                num_cores,
+                num_channels,
+                cfg.input_queue_flits as u64,
+                cfg.latency,
+            ),
+            resp_net: Switch::new(
+                num_channels,
+                num_cores,
+                u64::MAX / 2, // elastic on the memory side
+                cfg.latency,
+            ),
+            req_staged: (0..num_channels).map(|_| VecDeque::new()).collect(),
+            flit_bytes: cfg.flit_bytes,
+            access_granularity: 64,
+            scratch_req: Vec::new(),
+            scratch_resp: Vec::new(),
+        }
+    }
+
+    fn flits(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.flit_bytes).max(1)
+    }
+}
+
+impl Noc for CrossbarNoc {
+    fn try_inject_request(&mut self, _now: Cycle, req: MemRequest) -> bool {
+        // Destination channel is computed from the address the same way
+        // the DRAM system does; the switch needs it for arbitration.
+        let flits = self.flits(request_bytes(&req, self.access_granularity));
+        // channel_of requires the DramSystem; to keep the switch
+        // self-contained we recompute the IPOLY hash directly.
+        let nch = self.req_staged.len();
+        let dest = if nch == 1 {
+            0
+        } else {
+            crate::dram::ipoly::ipoly_hash(
+                req.addr / self.access_granularity,
+                nch.trailing_zeros(),
+            ) as usize
+        };
+        self.req_net.try_inject(req.core, req, dest, flits)
+    }
+
+    fn inject_response(&mut self, _now: Cycle, resp: MemResponse, from_channel: usize) {
+        let flits = self.flits(response_bytes(&resp, self.access_granularity));
+        let dest = resp.core;
+        self.resp_net.inject(from_channel, resp, dest, flits);
+    }
+
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut Vec<MemResponse>) {
+        self.req_net.tick(now);
+        self.resp_net.tick(now);
+
+        self.scratch_req.clear();
+        self.req_net.drain(now, &mut self.scratch_req);
+        for (ch, req) in self.scratch_req.drain(..) {
+            self.req_staged[ch].push_back(req);
+        }
+        for (ch, staged) in self.req_staged.iter_mut().enumerate() {
+            while !staged.is_empty() && dram.can_accept(ch) {
+                dram.enqueue(staged.pop_front().unwrap());
+            }
+        }
+
+        self.scratch_resp.clear();
+        self.resp_net.drain(now, &mut self.scratch_resp);
+        for (_core, resp) in self.scratch_resp.drain(..) {
+            responses_out.push(resp);
+        }
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        if self.req_staged.iter().any(|s| !s.is_empty()) {
+            return now + 1;
+        }
+        self.req_net.next_event(now).min(self.resp_net.next_event(now))
+    }
+
+    fn idle(&self) -> bool {
+        !self.req_net.busy()
+            && !self.resp_net.busy()
+            && self.req_staged.iter().all(|s| s.is_empty())
+    }
+
+    fn delivered(&self) -> (u64, u64) {
+        (self.req_net.delivered, self.resp_net.delivered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NocConfig;
+    use crate::noc::testutil::roundtrip;
+
+    fn mk(cores: usize, chans: usize) -> CrossbarNoc {
+        CrossbarNoc::new(&NocConfig::crossbar(), cores, chans)
+    }
+
+    fn req(id: u64, addr: u64, core: usize) -> MemRequest {
+        MemRequest { id, addr, is_write: false, core, issued_at: 0 }
+    }
+
+    #[test]
+    fn single_request_roundtrips() {
+        let mut noc = mk(1, 1);
+        let (resps, _) = roundtrip(&mut noc, vec![req(1, 0, 0)]);
+        assert_eq!(resps.len(), 1);
+    }
+
+    #[test]
+    fn wormhole_no_packet_interleaving() {
+        // Two multi-flit packets from different inputs to the same output
+        // must serialize: total switch time >= sum of flit counts.
+        let mut sw: Switch<u64> = Switch::new(2, 1, 1024, 0);
+        assert!(sw.try_inject(0, 100, 0, 9));
+        assert!(sw.try_inject(1, 200, 0, 9));
+        let mut out = Vec::new();
+        let mut now = 0;
+        while out.len() < 2 {
+            sw.tick(now);
+            sw.drain(now, &mut out);
+            now += 1;
+            assert!(now < 100);
+        }
+        // 18 flits through one output port, 1 flit/cycle.
+        assert!(now >= 18, "took {now} cycles; expected >= 18");
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        // Three inputs each send 10 single-flit packets to one output; all
+        // must be delivered and interleaved (not starved).
+        let mut sw: Switch<u64> = Switch::new(3, 1, 1024, 0);
+        for i in 0..3u64 {
+            for j in 0..10u64 {
+                assert!(sw.try_inject(i as usize, i * 100 + j, 0, 1));
+            }
+        }
+        let mut out = Vec::new();
+        let mut now = 0;
+        while out.len() < 30 {
+            sw.tick(now);
+            sw.drain(now, &mut out);
+            now += 1;
+            assert!(now < 100);
+        }
+        // With RR, the first 3 deliveries come from 3 distinct inputs.
+        let firsts: std::collections::HashSet<u64> =
+            out[..3].iter().map(|(_, p)| p / 100).collect();
+        assert_eq!(firsts.len(), 3, "round-robin should interleave inputs");
+    }
+
+    #[test]
+    fn injection_backpressure_bounded_queue() {
+        let mut noc = mk(1, 1);
+        let mut accepted = 0u64;
+        for i in 0..100_000 {
+            if noc.try_inject_request(0, req(i, i * 64, 0)) {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        // Queue is 64 flits; read requests are 1 flit each.
+        assert_eq!(accepted, 64);
+    }
+
+    #[test]
+    fn contention_two_cores_one_channel_slower_than_two_channels() {
+        // 2 cores -> 1 output contend; 2 cores -> 2 outputs do not.
+        let mut sw1: Switch<u64> = Switch::new(2, 1, 4096, 0);
+        let mut sw2: Switch<u64> = Switch::new(2, 2, 4096, 0);
+        for i in 0..64u64 {
+            sw1.try_inject((i % 2) as usize, i, 0, 9);
+            sw2.try_inject((i % 2) as usize, i, (i % 2) as usize, 9);
+        }
+        let time = |sw: &mut Switch<u64>| {
+            let mut out = Vec::new();
+            let mut now = 0;
+            while out.len() < 64 {
+                sw.tick(now);
+                sw.drain(now, &mut out);
+                now += 1;
+                assert!(now < 10_000);
+            }
+            now
+        };
+        let t1 = time(&mut sw1);
+        let t2 = time(&mut sw2);
+        assert!(t1 > t2, "shared output ({t1}) should be slower than disjoint ({t2})");
+        assert!(t1 >= 2 * t2 - 16, "expected ~2x serialization, got {t1} vs {t2}");
+    }
+
+    #[test]
+    fn many_requests_all_complete_multichannel() {
+        let mut noc = mk(4, 1);
+        let reqs: Vec<_> = (0..400).map(|i| req(i, i * 64, (i % 4) as usize)).collect();
+        let (resps, _) = roundtrip(&mut noc, reqs);
+        assert_eq!(resps.len(), 400);
+        assert!(noc.idle());
+    }
+
+    #[test]
+    fn crossbar_slower_or_equal_to_simple_under_contention() {
+        // The detailed model should never be faster than the idealized
+        // simple model for the same contended workload.
+        let reqs = |():()| -> Vec<MemRequest> {
+            (0..256)
+                .map(|i| MemRequest {
+                    id: i,
+                    addr: i * 64,
+                    is_write: true,
+                    core: (i % 4) as usize,
+                    issued_at: 0,
+                })
+                .collect()
+        };
+        let mut simple = crate::noc::SimpleNoc::new(&NocConfig::simple(), 4, 1);
+        let (_, t_simple) = roundtrip(&mut simple, reqs(()));
+        let mut xbar = mk(4, 1);
+        let (_, t_xbar) = roundtrip(&mut xbar, reqs(()));
+        assert!(
+            t_xbar + 8 >= t_simple,
+            "crossbar ({t_xbar}) unexpectedly much faster than simple ({t_simple})"
+        );
+    }
+}

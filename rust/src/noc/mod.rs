@@ -1,0 +1,112 @@
+//! Network-on-chip models (§II-B "Shared resources").
+//!
+//! Two models, selectable in [`crate::config::NocConfig`]:
+//!
+//! - [`SimpleNoc`] — the paper's configurable latency + bandwidth model
+//!   (the "ONNXim-SN" variant): per-link serialization with a fixed
+//!   zero-load latency.
+//! - [`CrossbarNoc`] — a flit-level, cycle-accurate input-queued crossbar
+//!   with wormhole switching and round-robin output arbitration (the
+//!   paper's Booksim-backed model, specialized to the `cores × channels`
+//!   crossbar of Table II, 64-bit flits).
+//!
+//! Both carry memory *requests* (core → memory channel) and *responses*
+//! (channel → core) on separate physical networks, as is conventional to
+//! avoid protocol deadlock.
+
+mod crossbar;
+mod simple;
+
+pub use crossbar::CrossbarNoc;
+pub use simple::SimpleNoc;
+
+use crate::config::{NocConfig, NocModel};
+use crate::dram::{DramSystem, MemRequest, MemResponse};
+use crate::Cycle;
+
+/// Packet sizes in bytes: an 8 B header flit plus 64 B of data for
+/// payload-carrying packets (write requests, read responses).
+pub fn request_bytes(req: &MemRequest, access_granularity: u64) -> u64 {
+    if req.is_write {
+        8 + access_granularity
+    } else {
+        8
+    }
+}
+
+pub fn response_bytes(resp: &MemResponse, access_granularity: u64) -> u64 {
+    if resp.is_write {
+        8 // write ack
+    } else {
+        8 + access_granularity
+    }
+}
+
+/// Common interface for both NoC models.
+pub trait Noc {
+    /// Inject a request from a core. Returns `false` (backpressure) if the
+    /// core's injection port is full; the DMA engine must retry.
+    fn try_inject_request(&mut self, now: Cycle, req: MemRequest) -> bool;
+
+    /// Inject a response from a memory channel's controller. The MC output
+    /// buffer is modeled as elastic (responses never drop), but delivery
+    /// is serialized by the response network.
+    fn inject_response(&mut self, now: Cycle, resp: MemResponse, from_channel: usize);
+
+    /// Advance one step: move flits/packets, deliver requests into the
+    /// DRAM queues (respecting their backpressure) and completed responses
+    /// into `responses_out`.
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut Vec<MemResponse>);
+
+    /// Earliest next cycle this NoC needs a tick, or `crate::NEVER`.
+    fn next_event(&self, now: Cycle) -> Cycle;
+
+    fn idle(&self) -> bool;
+
+    /// (delivered request packets, delivered response packets) — for stats.
+    fn delivered(&self) -> (u64, u64);
+}
+
+/// Construct the configured NoC model.
+pub fn build_noc(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Box<dyn Noc> {
+    match cfg.model {
+        NocModel::Simple => Box::new(SimpleNoc::new(cfg, num_cores, num_channels)),
+        NocModel::Crossbar => Box::new(CrossbarNoc::new(cfg, num_cores, num_channels)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::DramConfig;
+
+    /// Drive a NoC + DRAM pair until all `reqs` round-trip; returns
+    /// (responses, final cycle).
+    pub fn roundtrip(noc: &mut dyn Noc, reqs: Vec<MemRequest>) -> (Vec<MemResponse>, Cycle) {
+        let cfg = DramConfig::ddr4_mobile();
+        let mut dram = DramSystem::new(&cfg, 1.0);
+        let total = reqs.len();
+        let mut pending: std::collections::VecDeque<_> = reqs.into();
+        let mut responses = Vec::new();
+        let mut dram_out = Vec::new();
+        let mut now = 0;
+        while responses.len() < total {
+            while let Some(&r) = pending.front() {
+                if noc.try_inject_request(now, r) {
+                    pending.pop_front();
+                } else {
+                    break;
+                }
+            }
+            noc.tick(now, &mut dram, &mut responses);
+            dram.tick(now, &mut dram_out);
+            for resp in dram_out.drain(..) {
+                let ch = resp.channel;
+                noc.inject_response(now, resp, ch);
+            }
+            now += 1;
+            assert!(now < 1_000_000, "noc/dram did not drain");
+        }
+        (responses, now)
+    }
+}

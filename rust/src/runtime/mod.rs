@@ -1,0 +1,258 @@
+//! PJRT functional runtime: loads the AOT-compiled XLA artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from Rust via the `xla` crate's PJRT CPU client.
+//!
+//! This is the simulator's *functional-execution mode*: the tile
+//! computations whose timing the L3 model prices are executed numerically
+//! through the same tiling (the L1 Pallas kernels, lowered under
+//! `interpret=True` into plain HLO). Python never runs at simulation time —
+//! the Rust binary is self-contained once `make artifacts` has been built.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape spec of one artifact (from `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    fn numel(shape: &[usize]) -> usize {
+        shape.iter().product()
+    }
+}
+
+/// One compiled executable plus its fixtures.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    dir: PathBuf,
+}
+
+impl Artifact {
+    /// Execute on f32 buffers. `inputs[i]` must have
+    /// `spec.input_shapes[i]` elements (row-major).
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            let shape = &self.spec.input_shapes[i];
+            if buf.len() != ArtifactSpec::numel(shape) {
+                bail!(
+                    "{}: input {i} has {} elems, shape {:?} needs {}",
+                    self.spec.name,
+                    buf.len(),
+                    shape,
+                    ArtifactSpec::numel(shape)
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+
+    /// Load the `.inN.bin` input fixtures dumped at AOT time.
+    pub fn fixture_inputs(&self) -> Result<Vec<Vec<f32>>> {
+        (0..self.spec.input_shapes.len())
+            .map(|i| read_f32_bin(&self.dir.join(format!("{}.in{i}.bin", self.spec.name))))
+            .collect()
+    }
+
+    /// Load the `.outN.bin` oracle outputs dumped at AOT time.
+    pub fn fixture_outputs(&self) -> Result<Vec<Vec<f32>>> {
+        (0..self.spec.output_shapes.len())
+            .map(|i| read_f32_bin(&self.dir.join(format!("{}.out{i}.bin", self.spec.name))))
+            .collect()
+    }
+
+    /// Run on the stored fixtures and compare against the oracle outputs.
+    /// Returns the max absolute error.
+    pub fn verify(&self) -> Result<f64> {
+        let got = self.run_f32(&self.fixture_inputs()?)?;
+        let want = self.fixture_outputs()?;
+        let mut max_err = 0.0f64;
+        for (g, w) in got.iter().zip(&want) {
+            if g.len() != w.len() {
+                bail!(
+                    "{}: output length mismatch {} vs {}",
+                    self.spec.name,
+                    g.len(),
+                    w.len()
+                );
+            }
+            for (a, b) in g.iter().zip(w) {
+                max_err = max_err.max((a - b).abs() as f64);
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+/// Reads little-endian f32 binary fixtures.
+fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: not a multiple of 4 bytes", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// The functional runtime: a PJRT CPU client plus all compiled artifacts.
+pub struct FunctionalRuntime {
+    pub client: xla::PjRtClient,
+    pub artifacts: HashMap<String, Artifact>,
+}
+
+impl FunctionalRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling each
+    /// HLO module once.
+    pub fn load(dir: &str) -> Result<Self> {
+        let dir = PathBuf::from(dir);
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("no manifest in {} — run `make artifacts`", dir.display()))?;
+        let manifest = Json::parse(&manifest_text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        let mut artifacts = HashMap::new();
+        let Json::Obj(entries) = &manifest else { bail!("manifest must be an object") };
+        for (name, spec_j) in entries {
+            let parse_shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                spec_j
+                    .req(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize_arr())
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                input_shapes: parse_shapes("inputs")?,
+                output_shapes: parse_shapes("outputs")?,
+            };
+            let hlo_path = dir.join(format!("{name}.hlo.txt"));
+            let proto =
+                xla::HloModuleProto::from_text_file(hlo_path.to_str().context("path utf8")?)
+                    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            artifacts.insert(name.clone(), Artifact { spec, exe, dir: dir.clone() });
+        }
+        Ok(FunctionalRuntime { client, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not found"))
+    }
+
+    /// Verify every artifact against its oracle fixtures; returns
+    /// (name, max_abs_err) pairs.
+    pub fn verify_all(&self) -> Result<Vec<(String, f64)>> {
+        let mut out: Vec<(String, f64)> = self
+            .artifacts
+            .iter()
+            .map(|(n, a)| a.verify().map(|e| (n.clone(), e)))
+            .collect::<Result<_>>()?;
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then(|| dir.to_string())
+    }
+
+    #[test]
+    fn read_f32_bin_roundtrip() {
+        let path = std::env::temp_dir().join("onnxim_f32_test.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), vals);
+    }
+
+    #[test]
+    fn read_f32_bin_rejects_ragged() {
+        let path = std::env::temp_dir().join("onnxim_f32_bad.bin");
+        std::fs::write(&path, [1u8, 2, 3]).unwrap();
+        assert!(read_f32_bin(&path).is_err());
+    }
+
+    // The following tests need `make artifacts` to have run; they are the
+    // Rust side of the L1/L2/L3 integration and are also exercised by
+    // examples/functional_e2e.rs.
+    #[test]
+    fn load_and_verify_all_artifacts() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = FunctionalRuntime::load(&dir).unwrap();
+        assert!(rt.artifacts.len() >= 3);
+        for (name, err) in rt.verify_all().unwrap() {
+            assert!(err < 1e-3, "{name}: max abs err {err}");
+        }
+    }
+
+    #[test]
+    fn gemm_artifact_computes_matmul() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = FunctionalRuntime::load(&dir).unwrap();
+        let gemm = rt.get("gemm").unwrap();
+        let (m, k) = (gemm.spec.input_shapes[0][0], gemm.spec.input_shapes[0][1]);
+        let n = gemm.spec.input_shapes[1][1];
+        // Identity-ish check: x = ones, w = ones -> every output = k.
+        let x = vec![1.0f32; m * k];
+        let w = vec![1.0f32; k * n];
+        let out = gemm.run_f32(&[x, w]).unwrap();
+        assert_eq!(out[0].len(), m * n);
+        for &v in &out[0] {
+            assert!((v - k as f32).abs() < 1e-3, "got {v}, want {k}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors_helpfully() {
+        let err = match FunctionalRuntime::load("/nonexistent/dir") {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

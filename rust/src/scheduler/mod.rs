@@ -1,0 +1,313 @@
+//! Global tile scheduler (§II-A "Scheduler").
+//!
+//! Tracks dependencies between operation nodes of each request's graph and
+//! the status of NPU cores. When a node's dependencies resolve, it is
+//! lowered to tile-level operations and pushed into the *ready tile
+//! queue*; when a core has a free tile slot, the active [`Policy`] picks a
+//! tile to dispatch. Independent nodes' tiles coexist in the queue and
+//! spread across cores.
+//!
+//! Multi-tenancy: [`TimeShared`] serializes requests at layer granularity
+//! (no resource contention, possible underutilization/unfairness);
+//! [`Spatial`] partitions cores among tenants (concurrent execution,
+//! DRAM/NoC interference — the paper's Fig. 4 case study). The [`Policy`]
+//! trait is the extension point the paper advertises.
+
+pub mod policy;
+
+pub use policy::{Fcfs, Policy, Spatial, TimeShared};
+
+use crate::graph::Graph;
+use crate::lowering::{lower_node, AddressMap, JobRef, LoweringParams, Tile};
+use crate::{Cycle, NEVER};
+use std::collections::VecDeque;
+
+/// One inference request instance and its execution state.
+pub struct Request {
+    pub id: usize,
+    /// Tenant/model group (used by spatial partitioning).
+    pub tenant: usize,
+    pub graph: Graph,
+    pub arrival: Cycle,
+    pub started_at: Option<Cycle>,
+    pub finished_at: Option<Cycle>,
+    amap: AddressMap,
+    /// Per-node unresolved input count.
+    indegree: Vec<usize>,
+    /// Per-node successor list.
+    succs: Vec<Vec<usize>>,
+    /// Per-node outstanding tile count (usize::MAX = not yet lowered).
+    remaining_tiles: Vec<usize>,
+    /// Ready tiles, grouped by node (front = oldest ready node) — keeps
+    /// layer boundaries visible to the time-shared policy.
+    pub ready: VecDeque<Tile>,
+    nodes_done: usize,
+    /// Tiles currently executing on cores.
+    pub tiles_in_flight: usize,
+}
+
+impl Request {
+    /// True when every node has completed.
+    pub fn done(&self) -> bool {
+        self.nodes_done == self.graph.nodes.len()
+    }
+
+    /// True when the request has been activated and has dispatchable work.
+    pub fn has_ready(&self) -> bool {
+        !self.ready.is_empty()
+    }
+}
+
+/// The global scheduler.
+pub struct GlobalScheduler {
+    pub requests: Vec<Request>,
+    params: LoweringParams,
+    policy: Box<dyn Policy>,
+    /// Request ids that completed since the last drain (for drivers).
+    completed: Vec<usize>,
+    /// DRAM address region base per request (weights + activations are laid
+    /// out per-request; tenants' regions are disjoint so contention is
+    /// real, not false sharing).
+    next_base: u64,
+}
+
+impl GlobalScheduler {
+    pub fn new(params: LoweringParams, policy: Box<dyn Policy>) -> Self {
+        GlobalScheduler { requests: Vec::new(), params, policy, completed: Vec::new(), next_base: 0 }
+    }
+
+    /// Register a request arriving at `arrival`. Returns its id.
+    pub fn add_request(&mut self, graph: Graph, arrival: Cycle, tenant: usize) -> usize {
+        let id = self.requests.len();
+        let amap = AddressMap::build(&graph, self.params.element_bytes as usize, self.next_base);
+        self.next_base = amap.footprint().div_ceil(4096) * 4096;
+
+        let n = graph.nodes.len();
+        let producers = graph.producers();
+        let mut indegree = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for node in &graph.nodes {
+            for &t in &node.inputs {
+                if let Some(&p) = producers.get(&t) {
+                    indegree[node.id] += 1;
+                    succs[p].push(node.id);
+                }
+            }
+        }
+        self.requests.push(Request {
+            id,
+            tenant,
+            graph,
+            arrival,
+            started_at: None,
+            finished_at: None,
+            amap,
+            indegree,
+            succs,
+            remaining_tiles: vec![usize::MAX; n],
+            ready: VecDeque::new(),
+            nodes_done: 0,
+            tiles_in_flight: 0,
+        });
+        id
+    }
+
+    /// Activate requests whose arrival time has passed: lower their
+    /// zero-indegree nodes into the ready queue.
+    pub fn activate_arrivals(&mut self, now: Cycle) {
+        for r in 0..self.requests.len() {
+            let req = &self.requests[r];
+            if req.arrival > now || req.started_at.is_some() {
+                continue;
+            }
+            self.requests[r].started_at = Some(now);
+            let ready_nodes: Vec<usize> = (0..self.requests[r].graph.nodes.len())
+                .filter(|&i| self.requests[r].indegree[i] == 0)
+                .collect();
+            for nid in ready_nodes {
+                self.lower_ready_node(r, nid, now);
+            }
+        }
+    }
+
+    /// Lower node `nid` of request `r` and enqueue its tiles. Shape-only
+    /// nodes complete immediately (recursively releasing successors).
+    fn lower_ready_node(&mut self, r: usize, nid: usize, now: Cycle) {
+        let req = &mut self.requests[r];
+        let tiles = lower_node(&req.graph, &req.graph.nodes[nid], &req.amap, &self.params, r);
+        if tiles.is_empty() {
+            req.remaining_tiles[nid] = 0;
+            self.complete_node(r, nid, now);
+        } else {
+            req.remaining_tiles[nid] = tiles.len();
+            req.ready.extend(tiles);
+        }
+    }
+
+    /// Mark a node complete and release successors.
+    fn complete_node(&mut self, r: usize, nid: usize, now: Cycle) {
+        self.requests[r].nodes_done += 1;
+        let succs = self.requests[r].succs[nid].clone();
+        for s in succs {
+            self.requests[r].indegree[s] -= 1;
+            if self.requests[r].indegree[s] == 0 {
+                self.lower_ready_node(r, s, now);
+            }
+        }
+        if self.requests[r].done() && self.requests[r].finished_at.is_none() {
+            self.requests[r].finished_at = Some(now);
+            self.completed.push(r);
+        }
+    }
+
+    /// A tile finished on a core.
+    pub fn on_tile_done(&mut self, job: JobRef, now: Cycle) {
+        let r = job.request_id;
+        self.requests[r].tiles_in_flight -= 1;
+        let left = &mut self.requests[r].remaining_tiles[job.node_id];
+        *left -= 1;
+        if *left == 0 {
+            self.complete_node(r, job.node_id, now);
+        }
+    }
+
+    /// Pick a tile for `core_id` per the active policy.
+    pub fn pick_tile(&mut self, core_id: usize, now: Cycle) -> Option<Tile> {
+        let t = self.policy.pick(core_id, &mut self.requests, now);
+        if let Some(ref tile) = t {
+            self.requests[tile.job.request_id].tiles_in_flight += 1;
+        }
+        t
+    }
+
+    /// True when all registered requests have completed.
+    pub fn all_done(&self) -> bool {
+        self.requests.iter().all(|r| r.done())
+    }
+
+    /// True if any activated request has dispatchable tiles.
+    pub fn has_ready_tiles(&self) -> bool {
+        self.requests.iter().any(|r| r.started_at.is_some() && r.has_ready())
+    }
+
+    /// Earliest future arrival, or NEVER.
+    pub fn next_arrival(&self, now: Cycle) -> Cycle {
+        self.requests
+            .iter()
+            .filter(|r| r.started_at.is_none() && r.arrival > now)
+            .map(|r| r.arrival)
+            .min()
+            .unwrap_or(NEVER)
+    }
+
+    /// Requests not yet activated whose arrival has passed (need a tick).
+    pub fn has_pending_activation(&self, now: Cycle) -> bool {
+        self.requests.iter().any(|r| r.started_at.is_none() && r.arrival <= now)
+    }
+
+    /// Drain ids of requests completed since the last call.
+    pub fn take_completed(&mut self, out: &mut Vec<usize>) {
+        out.append(&mut self.completed);
+    }
+
+    /// Latency of a finished request in cycles.
+    pub fn latency(&self, id: usize) -> Option<u64> {
+        let r = &self.requests[id];
+        Some(r.finished_at? - r.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::graph::{Activation, OpKind};
+
+    fn two_layer_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 64, 64]);
+        let w1 = g.weight("w1", &[64, 64]);
+        let h = g.activation("h", &[1, 64, 64]);
+        g.node("fc1", OpKind::MatMul { activation: Activation::None }, &[x, w1], &[h]);
+        let w2 = g.weight("w2", &[64, 64]);
+        let y = g.activation("y", &[1, 64, 64]);
+        g.node("fc2", OpKind::MatMul { activation: Activation::None }, &[h, w2], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    }
+
+    fn sched() -> GlobalScheduler {
+        let p = LoweringParams::from_config(&NpuConfig::mobile());
+        GlobalScheduler::new(p, Box::new(Fcfs::new()))
+    }
+
+    #[test]
+    fn dependencies_gate_lowering() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.activate_arrivals(0);
+        // Only fc1's tiles are ready; fc2 waits for fc1.
+        let ready_nodes: std::collections::HashSet<usize> =
+            s.requests[0].ready.iter().map(|t| t.job.node_id).collect();
+        assert_eq!(ready_nodes, [0usize].into_iter().collect());
+    }
+
+    #[test]
+    fn completing_all_tiles_releases_successor() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.activate_arrivals(0);
+        // Drain and "execute" all fc1 tiles.
+        let tiles: Vec<Tile> = std::iter::from_fn(|| s.pick_tile(0, 0)).collect();
+        assert!(!tiles.is_empty());
+        for t in &tiles {
+            s.on_tile_done(t.job, 10);
+        }
+        let ready_nodes: std::collections::HashSet<usize> =
+            s.requests[0].ready.iter().map(|t| t.job.node_id).collect();
+        assert!(ready_nodes.contains(&1), "fc2 should now be ready");
+    }
+
+    #[test]
+    fn request_completion_recorded() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 5, 0);
+        s.activate_arrivals(5);
+        let mut now = 10;
+        while !s.all_done() {
+            let tiles: Vec<Tile> = std::iter::from_fn(|| s.pick_tile(0, now)).collect();
+            assert!(!tiles.is_empty(), "deadlock: no tiles but not done");
+            for t in &tiles {
+                s.on_tile_done(t.job, now);
+            }
+            now += 10;
+        }
+        let mut done = Vec::new();
+        s.take_completed(&mut done);
+        assert_eq!(done, vec![0]);
+        assert!(s.latency(0).unwrap() > 0);
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 100, 0);
+        s.activate_arrivals(0);
+        assert!(!s.has_ready_tiles());
+        assert_eq!(s.next_arrival(0), 100);
+        s.activate_arrivals(100);
+        assert!(s.has_ready_tiles());
+    }
+
+    #[test]
+    fn address_regions_disjoint_across_requests() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.add_request(two_layer_graph(), 0, 1);
+        s.activate_arrivals(0);
+        let a0 = s.requests[0].amap.footprint();
+        let a1_first = s.requests[1].amap.addr(0);
+        assert!(a1_first >= a0, "request 1 tensors must not alias request 0");
+    }
+}

@@ -1,0 +1,132 @@
+//! Simulation reports: aggregate metrics the paper's figures are built
+//! from (cycles, utilization, DRAM traffic and row-locality, request
+//! latencies).
+
+use super::Simulator;
+use crate::core::CoreStats;
+use crate::dram::ChannelStats;
+
+/// Final report of one simulation.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub total_cycles: u64,
+    pub requests_completed: usize,
+    /// Per-request latency in cycles (arrival -> completion), by id.
+    pub request_latency: Vec<Option<u64>>,
+    pub core: Vec<CoreStats>,
+    pub dram: Vec<ChannelStats>,
+    pub total_macs: u64,
+    pub dram_bytes: u64,
+    /// Mean systolic-array occupancy over the run, in [0,1].
+    pub mean_core_util: f64,
+    /// Mean DRAM bandwidth utilization over the run, in [0,1].
+    pub mean_dram_util: f64,
+}
+
+impl SimReport {
+    pub(crate) fn collect(sim: &Simulator) -> Self {
+        let core: Vec<CoreStats> = sim.cores.iter().map(|c| c.stats).collect();
+        let dram = sim.dram.stats();
+        let total_cycles = sim.clock.max(1);
+        let total_macs: u64 = core.iter().map(|c| c.macs).sum();
+        let dram_bytes: u64 = dram.iter().map(|d| d.bytes).sum();
+        let busy: u64 = core.iter().map(|c| c.systolic_busy).sum();
+        let mean_core_util = busy as f64 / (total_cycles as f64 * core.len() as f64);
+        let peak_bytes = sim.cfg.dram.bandwidth_gbps / sim.cfg.core_freq_ghz * total_cycles as f64;
+        let mean_dram_util = dram_bytes as f64 / peak_bytes;
+        SimReport {
+            total_cycles,
+            requests_completed: sim
+                .sched
+                .requests
+                .iter()
+                .filter(|r| r.finished_at.is_some())
+                .count(),
+            request_latency: (0..sim.sched.requests.len())
+                .map(|i| sim.sched.latency(i))
+                .collect(),
+            core,
+            dram,
+            total_macs,
+            dram_bytes,
+            mean_core_util,
+            mean_dram_util,
+        }
+    }
+
+    /// Simulated time in milliseconds at the configured core clock.
+    pub fn simulated_ms(&self, core_freq_ghz: f64) -> f64 {
+        self.total_cycles as f64 / (core_freq_ghz * 1e6)
+    }
+
+    /// DRAM row-buffer hit rate across channels.
+    pub fn row_hit_rate(&self) -> f64 {
+        let (hits, total): (u64, u64) = self
+            .dram
+            .iter()
+            .map(|d| (d.row_hits, d.row_hits + d.row_misses + d.row_conflicts))
+            .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// One-paragraph human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} ({:.3} ms @1GHz)  requests={}  macs={:.3}G  dram={:.1}MiB  \
+             core-util={:.1}%  dram-util={:.1}%  row-hit={:.1}%",
+            self.total_cycles,
+            self.simulated_ms(1.0),
+            self.requests_completed,
+            self.total_macs as f64 / 1e9,
+            self.dram_bytes as f64 / (1024.0 * 1024.0),
+            100.0 * self.mean_core_util,
+            100.0 * self.mean_dram_util,
+            100.0 * self.row_hit_rate(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::NpuConfig;
+    use crate::graph::{Activation, Graph, OpKind};
+    use crate::scheduler::Fcfs;
+    use crate::sim::{NoDriver, Simulator};
+
+    fn run_small() -> super::SimReport {
+        let mut g = Graph::new("m");
+        let x = g.activation("x", &[1, 128, 128]);
+        let w = g.weight("w", &[128, 128]);
+        let y = g.activation("y", &[1, 128, 128]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        sim.run(&mut NoDriver)
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let r = run_small();
+        assert_eq!(r.requests_completed, 1);
+        assert!(r.mean_core_util > 0.0 && r.mean_core_util <= 1.0);
+        assert!(r.mean_dram_util > 0.0 && r.mean_dram_util <= 1.0);
+        assert!(r.row_hit_rate() >= 0.0 && r.row_hit_rate() <= 1.0);
+        assert!(r.request_latency[0].unwrap() <= r.total_cycles);
+        // Traffic accounted by DRAM must match (reads+writes) * 64B.
+        let rw: u64 = r.dram.iter().map(|d| d.reads + d.writes).sum();
+        assert_eq!(r.dram_bytes, rw * 64);
+    }
+
+    #[test]
+    fn summary_prints_key_metrics() {
+        let s = run_small().summary();
+        assert!(s.contains("cycles="));
+        assert!(s.contains("core-util="));
+    }
+}

@@ -1,0 +1,281 @@
+//! Multi-tenant workload description and drivers.
+//!
+//! §II-A: "it also takes a JSON format input that describes multiple
+//! inference requests with different models, batch sizes, and timestamps."
+//! [`Trace`] is that input; [`GenerationDriver`] provides the
+//! autoregressive LLM decode loop (token t+1's request is created when
+//! token t completes, with the KV cache grown by one — the dynamic-shape
+//! support called out in §I), and records Time-Between-Token samples for
+//! the Fig. 4 case study.
+
+use crate::graph::Graph;
+use crate::scheduler::GlobalScheduler;
+use crate::sim::Driver;
+use crate::util::json::Json;
+use crate::Cycle;
+use anyhow::Result;
+
+/// One entry of a multi-tenant trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Model name, resolved through the model zoo.
+    pub model: String,
+    pub batch: usize,
+    /// Arrival timestamp in cycles.
+    pub arrival: Cycle,
+    /// Number of back-to-back instances to issue.
+    pub count: usize,
+    /// Tenant id (used by spatial partitioning).
+    pub tenant: usize,
+}
+
+/// A multi-tenant request trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    pub fn parse(text: &str) -> Result<Trace> {
+        let j = Json::parse(text)?;
+        let mut entries = Vec::new();
+        for e in j.req("requests")?.as_arr()? {
+            entries.push(TraceEntry {
+                model: e.req("model")?.as_str()?.to_string(),
+                batch: e.req("batch")?.as_usize()?,
+                arrival: e.req("arrival")?.as_u64()?,
+                count: e.get("count").map_or(Ok(1), |v| v.as_usize())?,
+                tenant: e.get("tenant").map_or(Ok(0), |v| v.as_usize())?,
+            });
+        }
+        Ok(Trace { entries })
+    }
+
+    pub fn load(path: &str) -> Result<Trace> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![(
+            "requests",
+            Json::Arr(
+                self.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("model", Json::str(&e.model)),
+                            ("batch", Json::num(e.batch as f64)),
+                            ("arrival", Json::num(e.arrival as f64)),
+                            ("count", Json::num(e.count as f64)),
+                            ("tenant", Json::num(e.tenant as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+        .pretty()
+    }
+}
+
+/// Autoregressive generation driver: when the request for token `t`
+/// completes, it builds the decode graph for token `t+1` (KV cache one
+/// longer) and schedules it immediately. Records TBT samples in cycles.
+pub struct GenerationDriver<F: FnMut(usize) -> Graph> {
+    /// Builds the decode graph for token index `t` (0-based).
+    pub build: F,
+    pub tenant: usize,
+    pub tokens_total: usize,
+    tokens_done: usize,
+    /// Request id of the in-flight token, if any.
+    current: Option<usize>,
+    last_done_at: Option<Cycle>,
+    /// Time-between-token samples (cycles).
+    pub tbt: Vec<u64>,
+}
+
+impl<F: FnMut(usize) -> Graph> GenerationDriver<F> {
+    pub fn new(build: F, tenant: usize, tokens_total: usize) -> Self {
+        GenerationDriver {
+            build,
+            tenant,
+            tokens_total,
+            tokens_done: 0,
+            current: None,
+            last_done_at: None,
+            tbt: Vec::new(),
+        }
+    }
+
+    /// Kick off the first token's request.
+    pub fn start(&mut self, sched: &mut GlobalScheduler, now: Cycle) {
+        let g = (self.build)(0);
+        self.current = Some(sched.add_request(g, now, self.tenant));
+        self.last_done_at = Some(now);
+    }
+}
+
+impl<F: FnMut(usize) -> Graph> Driver for GenerationDriver<F> {
+    fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler) {
+        if Some(request_id) != self.current {
+            return; // another tenant's request
+        }
+        if let Some(last) = self.last_done_at {
+            self.tbt.push(now - last);
+        }
+        self.last_done_at = Some(now);
+        self.tokens_done += 1;
+        if self.tokens_done < self.tokens_total {
+            let g = (self.build)(self.tokens_done);
+            self.current = Some(sched.add_request(g, now, self.tenant));
+        } else {
+            self.current = None;
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.tokens_done >= self.tokens_total
+    }
+}
+
+/// Replays a closed-loop stream of identical requests for a tenant:
+/// when one instance finishes, the next is injected (back-to-back
+/// batch inference, e.g. the ResNet-50 co-runner in Fig. 4).
+pub struct ClosedLoopDriver<F: FnMut(usize) -> Graph> {
+    pub build: F,
+    pub tenant: usize,
+    pub instances_total: usize,
+    instances_done: usize,
+    current: Option<usize>,
+    pub completions: Vec<Cycle>,
+}
+
+impl<F: FnMut(usize) -> Graph> ClosedLoopDriver<F> {
+    pub fn new(build: F, tenant: usize, instances_total: usize) -> Self {
+        ClosedLoopDriver {
+            build,
+            tenant,
+            instances_total,
+            instances_done: 0,
+            current: None,
+            completions: Vec::new(),
+        }
+    }
+
+    pub fn start(&mut self, sched: &mut GlobalScheduler, now: Cycle) {
+        let g = (self.build)(0);
+        self.current = Some(sched.add_request(g, now, self.tenant));
+    }
+}
+
+impl<F: FnMut(usize) -> Graph> Driver for ClosedLoopDriver<F> {
+    fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler) {
+        if Some(request_id) != self.current {
+            return;
+        }
+        self.completions.push(now);
+        self.instances_done += 1;
+        if self.instances_done < self.instances_total {
+            let g = (self.build)(self.instances_done);
+            self.current = Some(sched.add_request(g, now, self.tenant));
+        } else {
+            self.current = None;
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.instances_done >= self.instances_total
+    }
+}
+
+/// Combines independent drivers (one per tenant) into one.
+pub struct MultiDriver<'a> {
+    pub drivers: Vec<&'a mut dyn Driver>,
+}
+
+impl Driver for MultiDriver<'_> {
+    fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler) {
+        for d in self.drivers.iter_mut() {
+            d.on_request_done(request_id, now, sched);
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.drivers.iter().all(|d| d.finished())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::graph::{Activation, OpKind};
+    use crate::scheduler::Fcfs;
+    use crate::sim::Simulator;
+
+    fn tiny_graph(tag: usize) -> Graph {
+        let mut g = Graph::new(&format!("tok{tag}"));
+        let x = g.activation("x", &[1, 32, 32]);
+        let w = g.weight("w", &[32, 32]);
+        let y = g.activation("y", &[1, 32, 32]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = Trace {
+            entries: vec![
+                TraceEntry { model: "resnet50".into(), batch: 4, arrival: 0, count: 2, tenant: 1 },
+                TraceEntry { model: "gpt3-small".into(), batch: 1, arrival: 100, count: 1, tenant: 0 },
+            ],
+        };
+        let t2 = Trace::parse(&t.to_json()).unwrap();
+        assert_eq!(t2.entries.len(), 2);
+        assert_eq!(t2.entries[0].model, "resnet50");
+        assert_eq!(t2.entries[1].arrival, 100);
+    }
+
+    #[test]
+    fn trace_defaults_applied() {
+        let t = Trace::parse(r#"{"requests": [{"model": "m", "batch": 1, "arrival": 0}]}"#).unwrap();
+        assert_eq!(t.entries[0].count, 1);
+        assert_eq!(t.entries[0].tenant, 0);
+    }
+
+    #[test]
+    fn generation_driver_produces_tbt_samples() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        let mut driver = GenerationDriver::new(tiny_graph, 0, 5);
+        driver.start(&mut sim.sched, 0);
+        sim.run(&mut driver);
+        assert_eq!(driver.tbt.len(), 5);
+        assert!(driver.tbt.iter().all(|&t| t > 0));
+        assert!(driver.finished());
+    }
+
+    #[test]
+    fn closed_loop_driver_runs_all_instances() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        let mut driver = ClosedLoopDriver::new(tiny_graph, 0, 3);
+        driver.start(&mut sim.sched, 0);
+        let report = sim.run(&mut driver);
+        assert_eq!(report.requests_completed, 3);
+        assert_eq!(driver.completions.len(), 3);
+        // Back-to-back: completions strictly increasing.
+        assert!(driver.completions.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn multi_driver_coordinates_two_tenants() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        let mut gen = GenerationDriver::new(tiny_graph, 0, 3);
+        let mut loopd = ClosedLoopDriver::new(tiny_graph, 1, 2);
+        gen.start(&mut sim.sched, 0);
+        loopd.start(&mut sim.sched, 0);
+        let mut multi = MultiDriver { drivers: vec![&mut gen, &mut loopd] };
+        let report = sim.run(&mut multi);
+        assert_eq!(report.requests_completed, 5);
+    }
+}

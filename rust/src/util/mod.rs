@@ -1,0 +1,11 @@
+//! Self-contained utilities: JSON codec, deterministic PRNG, and
+//! statistics helpers.
+//!
+//! The build environment is fully offline with only the `xla` crate (and
+//! `anyhow`) vendored, so the usual ecosystem crates (serde, rand,
+//! criterion, proptest) are unavailable — these small substrates replace
+//! them (see DESIGN.md §3).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

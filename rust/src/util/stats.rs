@@ -1,0 +1,154 @@
+//! Statistics helpers: percentiles, mean absolute error, correlation,
+//! and a fixed-width table printer for the benchmark harness output.
+
+/// Percentile (nearest-rank, p in [0,100]) of an unsorted slice.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    assert!(!values.is_empty(), "percentile of empty slice");
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Mean absolute percentage error of `model` against `reference`.
+pub fn mape(model: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(model.len(), reference.len());
+    assert!(!model.is_empty());
+    let s: f64 = model
+        .iter()
+        .zip(reference)
+        .map(|(m, r)| ((m - r) / r).abs())
+        .sum();
+    100.0 * s / model.len() as f64
+}
+
+/// Pearson correlation coefficient.
+pub fn correlation(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let (mx, my) = (mean(x), mean(y));
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        cov += (a - mx) * (b - my);
+        vx += (a - mx) * (a - mx);
+        vy += (b - my) * (b - my);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt() * (n / n) // n cancels in the ratio
+}
+
+/// Fixed-width table printer for benchmark output: prints a header row and
+/// aligned data rows, matching how the paper's tables/figures read.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        let p95 = percentile(&v, 95.0);
+        assert!((94.0..=96.0).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn mape_zero_for_identical() {
+        let v = vec![1.0, 2.0, 3.0];
+        assert_eq!(mape(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn mape_computes_percent() {
+        assert!((mape(&[110.0], &[100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlation_perfect() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((correlation(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = vec![8.0, 6.0, 4.0, 2.0];
+        assert!((correlation(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_degenerate_is_zero() {
+        assert_eq!(correlation(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["N", "speedup"]);
+        t.row(&["128".into(), "87.0x".into()]);
+        t.row(&["4096".into(), "384.1x".into()]);
+        let s = t.render();
+        assert!(s.contains("speedup"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

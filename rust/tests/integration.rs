@@ -1,0 +1,285 @@
+//! Integration tests: whole-stack properties over randomized workloads.
+//!
+//! Property-style testing with the crate's deterministic PRNG (no proptest
+//! in the offline vendor set): random graphs are generated, lowered and
+//! simulated end-to-end; invariants checked on every run. Failures print
+//! the seed for reproduction.
+
+use onnxim::config::{DramConfig, NpuConfig};
+use onnxim::graph::optimizer::{optimize, OptLevel};
+use onnxim::graph::{Activation, Graph, OpKind};
+use onnxim::models;
+use onnxim::scheduler::{Fcfs, Spatial, TimeShared};
+use onnxim::sim::{NoDriver, Simulator};
+use onnxim::util::rng::Rng;
+
+/// Random layered DAG of matmuls/elementwise ops with valid shapes.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("random");
+    let batch = rng.range(1, 2) as usize;
+    let rows = (rng.range(1, 8) * 16) as usize;
+    let mut cols = (rng.range(1, 8) * 16) as usize;
+    let mut cur = g.activation("x", &[batch, rows, cols]);
+    g.inputs = vec![cur];
+    let layers = rng.range(1, 5);
+    for i in 0..layers {
+        match rng.below(4) {
+            0 | 1 => {
+                let out_dim = (rng.range(1, 8) * 16) as usize;
+                let w = g.weight(&format!("w{i}"), &[cols, out_dim]);
+                let y = g.activation(&format!("h{i}"), &[batch, rows, out_dim]);
+                let act = *rng.choose(&[Activation::None, Activation::Relu, Activation::Gelu]);
+                g.node(&format!("mm{i}"), OpKind::MatMul { activation: act }, &[cur, w], &[y]);
+                cur = y;
+                cols = out_dim;
+            }
+            2 => {
+                let shape = g.tensors[cur].shape.clone();
+                let y = g.activation(&format!("h{i}"), &shape);
+                g.node(&format!("ln{i}"), OpKind::LayerNorm { fused_skip: false }, &[cur], &[y]);
+                cur = y;
+            }
+            _ => {
+                let shape = g.tensors[cur].shape.clone();
+                let y = g.activation(&format!("h{i}"), &shape);
+                g.node(&format!("gelu{i}"), OpKind::Gelu, &[cur], &[y]);
+                cur = y;
+            }
+        }
+    }
+    g.outputs = vec![cur];
+    g
+}
+
+#[test]
+fn random_graphs_simulate_without_deadlock() {
+    for seed in 0..12 {
+        let mut rng = Rng::new(seed);
+        let mut g = random_graph(&mut rng);
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: invalid graph: {e}"));
+        g.infer_shapes().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        optimize(&mut g, OptLevel::Extended);
+        let expected_flops = g.flops();
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        let r = sim.run(&mut NoDriver);
+        assert_eq!(r.requests_completed, 1, "seed {seed}");
+        assert!(r.total_cycles > 0, "seed {seed}");
+        // MAC conservation: simulated MACs account for every matmul MAC.
+        assert!(
+            2 * r.total_macs <= expected_flops + 1,
+            "seed {seed}: simulated more MACs than the graph has"
+        );
+    }
+}
+
+#[test]
+fn policies_complete_identical_workloads() {
+    // The same two-tenant workload must complete under every policy, and
+    // total simulated MACs must be identical (policies change timing, not
+    // work).
+    let build = || {
+        let mut g = models::mlp(2, 128, 3);
+        optimize(&mut g, OptLevel::Extended);
+        g
+    };
+    let mut macs = Vec::new();
+    let mut cycles = Vec::new();
+    let policies: Vec<Box<dyn onnxim::scheduler::Policy>> = vec![
+        Box::new(Fcfs::new()),
+        Box::new(TimeShared::new()),
+        Box::new(Spatial::new(vec![0, 0, 1, 1])),
+    ];
+    for policy in policies {
+        let mut sim = Simulator::new(NpuConfig::mobile(), policy);
+        sim.add_request(build(), 0, 0);
+        sim.add_request(build(), 0, 1);
+        let r = sim.run(&mut NoDriver);
+        assert_eq!(r.requests_completed, 2);
+        macs.push(r.total_macs);
+        cycles.push(r.total_cycles);
+    }
+    assert!(macs.windows(2).all(|w| w[0] == w[1]), "MACs differ across policies: {macs:?}");
+    assert!(cycles.iter().all(|&c| c > 0));
+}
+
+#[test]
+fn noc_models_agree_on_work_disagree_on_time() {
+    let build = || {
+        let mut g = models::mlp(1, 256, 2);
+        optimize(&mut g, OptLevel::Extended);
+        g
+    };
+    let mut sim_s = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+    sim_s.add_request(build(), 0, 0);
+    let rs = sim_s.run(&mut NoDriver);
+
+    let mut sim_x = Simulator::new(NpuConfig::mobile().with_crossbar_noc(), Box::new(Fcfs::new()));
+    sim_x.add_request(build(), 0, 0);
+    let rx = sim_x.run(&mut NoDriver);
+
+    assert_eq!(rs.total_macs, rx.total_macs);
+    assert_eq!(rs.dram_bytes, rx.dram_bytes);
+    // The detailed NoC should not be faster than the idealized one by more
+    // than noise.
+    assert!(
+        rx.total_cycles * 10 >= rs.total_cycles * 9,
+        "crossbar {} vs simple {}",
+        rx.total_cycles,
+        rs.total_cycles
+    );
+}
+
+#[test]
+fn dram_traffic_invariant_across_core_counts() {
+    // Same model, 1 vs 4 cores: identical DRAM byte totals (tiling is
+    // core-count independent), different time.
+    let build = || {
+        let mut g = models::mlp(1, 256, 2);
+        optimize(&mut g, OptLevel::Extended);
+        g
+    };
+    let run = |cores: usize| {
+        let mut sim = Simulator::new(NpuConfig::mobile().with_cores(cores), Box::new(Fcfs::new()));
+        sim.add_request(build(), 0, 0);
+        sim.run(&mut NoDriver)
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    assert_eq!(r1.dram_bytes, r4.dram_bytes);
+    assert_eq!(r1.total_macs, r4.total_macs);
+}
+
+#[test]
+fn simulated_time_monotone_in_batch() {
+    let run = |batch: usize| {
+        let mut g = models::mlp(batch, 128, 2);
+        optimize(&mut g, OptLevel::Extended);
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        sim.run(&mut NoDriver).total_cycles
+    };
+    let c1 = run(1);
+    let c4 = run(4);
+    let c8 = run(8);
+    assert!(c1 < c4 && c4 < c8, "batch scaling not monotone: {c1} {c4} {c8}");
+}
+
+#[test]
+fn mobile_slower_than_server_on_compute_heavy() {
+    let build = || {
+        let mut g = models::mlp(1, 512, 2);
+        optimize(&mut g, OptLevel::Extended);
+        g
+    };
+    let run = |cfg: NpuConfig| {
+        let mut sim = Simulator::new(cfg, Box::new(Fcfs::new()));
+        sim.add_request(build(), 0, 0);
+        sim.run(&mut NoDriver).total_cycles
+    };
+    let mobile = run(NpuConfig::mobile());
+    let server = run(NpuConfig::server());
+    assert!(server * 4 < mobile, "server ({server}) should crush mobile ({mobile})");
+}
+
+#[test]
+fn gqa_decodes_faster_than_mha() {
+    use onnxim::models::gpt::{llama3, TransformerCfg};
+    // 1-layer Llama-3-8B-dims decode at batch 32 / 2048-token KV with a
+    // tiny LM head, so the KV cache (not the weights) dominates traffic:
+    // GQA's 4x smaller KV reads must show up as lower latency.
+    let run = |gqa: bool| {
+        let mut cfg_m = TransformerCfg::llama3_8b(gqa).with_layers(1);
+        cfg_m.vocab = 256;
+        let mut g = llama3(16, 1024, &cfg_m);
+        optimize(&mut g, OptLevel::Extended);
+        let mut sim = Simulator::new(NpuConfig::server(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        sim.run(&mut NoDriver)
+    };
+    let r_gqa = run(true);
+    let r_mha = run(false);
+    assert!(
+        r_gqa.total_cycles < r_mha.total_cycles,
+        "GQA ({}) should beat MHA ({})",
+        r_gqa.total_cycles,
+        r_mha.total_cycles
+    );
+    assert!(r_gqa.dram_bytes < r_mha.dram_bytes);
+}
+
+#[test]
+fn json_graph_roundtrip_preserves_simulation() {
+    // Export -> import -> simulate must give identical cycles.
+    let mut g = models::mlp(1, 128, 2);
+    optimize(&mut g, OptLevel::Extended);
+    let json = onnxim::graph::json::to_json(&g);
+    let g2 = onnxim::graph::json::from_json(&json).unwrap();
+    let run = |g: Graph| {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        sim.add_request(g, 0, 0);
+        sim.run(&mut NoDriver).total_cycles
+    };
+    assert_eq!(run(g), run(g2));
+}
+
+#[test]
+fn failure_injection_slow_dram_stretches_memory_bound_runtime() {
+    // A "degraded" DRAM (10x slower) must stretch a memory-bound workload
+    // by roughly the bandwidth ratio — checks config plumbs through.
+    let gemv = || {
+        let mut g = Graph::new("gemv");
+        let x = g.activation("x", &[1, 1, 2048]);
+        let w = g.weight("w", &[2048, 2048]);
+        let y = g.activation("y", &[1, 1, 2048]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    };
+    let mut slow = DramConfig::ddr4_mobile();
+    slow.bandwidth_gbps /= 10.0;
+    let run = |dram: DramConfig| {
+        let mut cfg = NpuConfig::mobile();
+        cfg.dram = dram;
+        // Ample DMA window: make bandwidth (not the latency*window
+        // product) the binding constraint — with the Mobile default of 16
+        // outstanding requests the workload is latency-bound and a
+        // bandwidth cut shows up sub-linearly (itself a useful insight).
+        cfg.dma_max_inflight = 512;
+        let mut sim = Simulator::new(cfg, Box::new(Fcfs::new()));
+        sim.add_request(gemv(), 0, 0);
+        sim.run(&mut NoDriver).total_cycles
+    };
+    let fast_c = run(DramConfig::ddr4_mobile());
+    let slow_c = run(slow);
+    let ratio = slow_c as f64 / fast_c as f64;
+    // The fast config is not purely DRAM-bound (the single-channel NoC
+    // response link also caps throughput), so the stretch is sub-linear —
+    // but it must be substantial and the slow run must respect the
+    // degraded bandwidth ceiling.
+    assert!(
+        ratio > 1.5,
+        "10x slower DRAM should visibly stretch runtime, got {ratio:.2} ({fast_c} -> {slow_c})"
+    );
+    let traffic_bytes = (2048u64 * 2048 + 2 * 2048) as f64; // ~weights at 1B/elem
+    let slow_bw = traffic_bytes / slow_c as f64;
+    assert!(
+        slow_bw <= 1.2 * 1.2, // 1.2 GB/s config + 20% slack
+        "slow run achieved {slow_bw:.2} B/cyc, above the degraded ceiling"
+    );
+}
+
+#[test]
+fn resnet_e2e_server_sane_latency() {
+    // ResNet-50 B1 on the Server NPU: simulated latency should land in a
+    // plausible band for a TPU-class part (sub-100ms, more than 100us).
+    let mut g = models::resnet50(1);
+    optimize(&mut g, OptLevel::Extended);
+    let mut sim = Simulator::new(NpuConfig::server(), Box::new(Fcfs::new()));
+    sim.add_request(g, 0, 0);
+    let r = sim.run(&mut NoDriver);
+    let ms = r.total_cycles as f64 / 1e6;
+    assert!((0.1..100.0).contains(&ms), "resnet50 latency {ms} ms implausible");
+    assert_eq!(r.requests_completed, 1);
+}
