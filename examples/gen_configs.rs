@@ -1,6 +1,18 @@
+//! Regenerate the checked-in JSON presets under `configs/` from the
+//! Table-II constructors. Run from the repo root:
+//!
+//! ```sh
+//! cargo run --release --offline --example gen_configs
+//! ```
+
 fn main() {
+    std::fs::create_dir_all("configs").expect("creating configs/");
     std::fs::write("configs/mobile.json", onnxim::config::NpuConfig::mobile().to_json()).unwrap();
     std::fs::write("configs/server.json", onnxim::config::NpuConfig::server().to_json()).unwrap();
-    std::fs::write("configs/server_crossbar.json", onnxim::config::NpuConfig::server().with_crossbar_noc().to_json()).unwrap();
+    std::fs::write(
+        "configs/server_crossbar.json",
+        onnxim::config::NpuConfig::server().with_crossbar_noc().to_json(),
+    )
+    .unwrap();
     println!("configs written");
 }

@@ -2,7 +2,12 @@
 //!
 //! Configurations mirror Table II of the paper: the `Mobile NPU`
 //! (Ethos-U55-like) and `Server NPU` (TPUv4i-like) presets are provided as
-//! constructors and as JSON files under `configs/`.
+//! constructors and as JSON files under `configs/`. Serving-load scenarios
+//! (traffic, batching, SLOs) live in the [`serve`] submodule.
+
+pub mod serve;
+
+pub use serve::{ServeConfig, TenantLoadConfig};
 
 use crate::util::json::Json;
 
@@ -241,8 +246,11 @@ impl NpuConfig {
     }
 
     /// Switch to the flit-level crossbar NoC (paper's "ONNXim" variant, vs.
-    /// "ONNXim-SN" for the simple model).
+    /// "ONNXim-SN" for the simple model). The name gets a `-crossbar`
+    /// suffix so runs against the two NoC models stay distinguishable in
+    /// logs and reports.
     pub fn with_crossbar_noc(mut self) -> Self {
+        self.name = format!("{}-crossbar", self.name);
         self.noc.model = NocModel::Crossbar;
         self
     }

@@ -1,0 +1,201 @@
+//! Serving-scenario configuration: the open-loop load the `serve`
+//! subsystem offers to the simulated NPU, as a JSON-round-trippable
+//! document (like [`crate::config::NpuConfig`], but describing *traffic*
+//! rather than hardware).
+//!
+//! A scenario is a seed, a duration, a default latency SLO, and one
+//! [`TenantLoadConfig`] per tenant: which model it serves, the stochastic
+//! arrival process and rate, the per-request batch-size distribution, and
+//! the dynamic-batching / admission-control knobs.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Load description for one tenant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantLoadConfig {
+    /// Model name, resolved through [`crate::models::by_name`].
+    pub model: String,
+    /// Offered request rate in requests/second (converted to cycles via
+    /// the NPU core frequency).
+    pub rate_rps: f64,
+    /// Arrival process: `"poisson"`, `"gamma"` (burstiness via [`Self::cv`])
+    /// or `"constant"`.
+    pub process: String,
+    /// Coefficient of variation of inter-arrival gaps for the gamma
+    /// process (1.0 degenerates to Poisson-like variability; > 1 bursty).
+    pub cv: f64,
+    /// Per-request batch size is drawn uniformly from
+    /// `[req_batch_min, req_batch_max]` (equal bounds = fixed size).
+    pub req_batch_min: usize,
+    pub req_batch_max: usize,
+    /// Dynamic batching: flush once this many units are queued...
+    pub max_batch: usize,
+    /// ...or this long (in microseconds) after the oldest queued request
+    /// arrived, whichever comes first.
+    pub batch_timeout_us: f64,
+    /// Admission control: arrivals beyond this queue depth are rejected
+    /// (counted in the report, never simulated).
+    pub max_queue: usize,
+    /// Per-tenant SLO override in milliseconds (falls back to
+    /// [`ServeConfig::slo_ms`]).
+    pub slo_ms: Option<f64>,
+}
+
+impl TenantLoadConfig {
+    /// A sensible Poisson default for `model` at `rate_rps`.
+    pub fn poisson(model: &str, rate_rps: f64) -> Self {
+        TenantLoadConfig {
+            model: model.to_string(),
+            rate_rps,
+            process: "poisson".into(),
+            cv: 1.0,
+            req_batch_min: 1,
+            req_batch_max: 1,
+            max_batch: 8,
+            batch_timeout_us: 100.0,
+            max_queue: 64,
+            slo_ms: None,
+        }
+    }
+
+    fn as_json(&self) -> Json {
+        let mut pairs = vec![
+            ("model", Json::str(&self.model)),
+            ("rate_rps", Json::num(self.rate_rps)),
+            ("process", Json::str(&self.process)),
+            ("cv", Json::num(self.cv)),
+            ("req_batch_min", Json::num(self.req_batch_min as f64)),
+            ("req_batch_max", Json::num(self.req_batch_max as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("batch_timeout_us", Json::num(self.batch_timeout_us)),
+            ("max_queue", Json::num(self.max_queue as f64)),
+        ];
+        if let Some(slo) = self.slo_ms {
+            pairs.push(("slo_ms", Json::num(slo)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TenantLoadConfig {
+            model: j.req("model")?.as_str()?.to_string(),
+            rate_rps: j.req("rate_rps")?.as_f64()?,
+            process: j.req("process")?.as_str()?.to_string(),
+            cv: j.get("cv").map_or(Ok(1.0), |v| v.as_f64())?,
+            req_batch_min: j.get("req_batch_min").map_or(Ok(1), |v| v.as_usize())?,
+            req_batch_max: j.get("req_batch_max").map_or(Ok(1), |v| v.as_usize())?,
+            max_batch: j.get("max_batch").map_or(Ok(8), |v| v.as_usize())?,
+            batch_timeout_us: j.get("batch_timeout_us").map_or(Ok(100.0), |v| v.as_f64())?,
+            max_queue: j.get("max_queue").map_or(Ok(64), |v| v.as_usize())?,
+            slo_ms: j.get("slo_ms").map(|v| v.as_f64()).transpose()?,
+        })
+    }
+}
+
+/// A full serving scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// PRNG seed; the whole scenario (and its report) is a pure function
+    /// of this seed and the configuration.
+    pub seed: u64,
+    /// Open-loop window in milliseconds of simulated time: arrivals are
+    /// generated in `[0, duration_ms)`; the run then drains.
+    pub duration_ms: f64,
+    /// Default end-to-end latency SLO in milliseconds.
+    pub slo_ms: f64,
+    pub tenants: Vec<TenantLoadConfig>,
+}
+
+impl ServeConfig {
+    /// The paper's Fig. 4 pairing as an open-loop scenario: ResNet-50 and
+    /// GPT-3 Small decode co-located, splitting `total_rate_rps` evenly.
+    pub fn two_tenant(total_rate_rps: f64, duration_ms: f64, slo_ms: f64) -> Self {
+        ServeConfig {
+            seed: 42,
+            duration_ms,
+            slo_ms,
+            tenants: vec![
+                TenantLoadConfig::poisson("resnet50", total_rate_rps / 2.0),
+                TenantLoadConfig::poisson("gpt3-small-decode", total_rate_rps / 2.0),
+            ],
+        }
+    }
+
+    /// Effective SLO for tenant `i` in milliseconds.
+    pub fn tenant_slo_ms(&self, i: usize) -> f64 {
+        self.tenants[i].slo_ms.unwrap_or(self.slo_ms)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("duration_ms", Json::num(self.duration_ms)),
+            ("slo_ms", Json::num(self.slo_ms)),
+            ("tenants", Json::Arr(self.tenants.iter().map(|t| t.as_json()).collect())),
+        ])
+        .pretty()
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let seed = j.get("seed").map_or(Ok(42), |v| v.as_u64())?;
+        if seed >= (1u64 << 53) {
+            anyhow::bail!("seed {seed} exceeds 2^53 and cannot round-trip through JSON");
+        }
+        Ok(ServeConfig {
+            seed,
+            duration_ms: j.req("duration_ms")?.as_f64()?,
+            slo_ms: j.req("slo_ms")?.as_f64()?,
+            tenants: j
+                .req("tenants")?
+                .as_arr()?
+                .iter()
+                .map(TenantLoadConfig::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut cfg = ServeConfig::two_tenant(500.0, 50.0, 10.0);
+        cfg.tenants[1].process = "gamma".into();
+        cfg.tenants[1].cv = 2.0;
+        cfg.tenants[1].slo_ms = Some(25.0);
+        cfg.tenants[1].req_batch_max = 4;
+        let cfg2 = ServeConfig::parse(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn defaults_applied_on_sparse_json() {
+        let cfg = ServeConfig::parse(
+            r#"{"duration_ms": 10, "slo_ms": 5,
+                "tenants": [{"model": "mlp", "rate_rps": 100, "process": "poisson"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 42);
+        let t = &cfg.tenants[0];
+        assert_eq!((t.req_batch_min, t.req_batch_max), (1, 1));
+        assert_eq!(t.max_batch, 8);
+        assert_eq!(t.max_queue, 64);
+        assert_eq!(cfg.tenant_slo_ms(0), 5.0);
+    }
+
+    #[test]
+    fn slo_override_wins() {
+        let mut cfg = ServeConfig::two_tenant(100.0, 10.0, 10.0);
+        cfg.tenants[0].slo_ms = Some(2.0);
+        assert_eq!(cfg.tenant_slo_ms(0), 2.0);
+        assert_eq!(cfg.tenant_slo_ms(1), 10.0);
+    }
+}

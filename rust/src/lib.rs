@@ -25,6 +25,9 @@
 //! - [`scheduler`] — the global tile scheduler with multi-tenant policies.
 //! - [`sim`] — the top-level simulator loop and statistics.
 //! - [`tenant`] — multi-tenant request traces.
+//! - [`serve`] — open-loop DNN serving frontend: stochastic traffic
+//!   generators, dynamic batching with admission control, and SLO
+//!   reporting (latency percentiles, goodput) on top of the simulator.
 //! - [`baseline`] — an Accel-sim-like fine-grained comparator and a
 //!   Gemmini-RTL-like cycle-exact reference core for validation.
 //! - [`runtime`] — PJRT-based functional execution of AOT-compiled XLA
@@ -41,6 +44,7 @@ pub mod models;
 pub mod noc;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod tenant;
 pub mod util;

@@ -5,7 +5,21 @@
 //!                                   [--config mobile|server|<path.json>]
 //!                                   [--policy fcfs|time-shared|spatial]
 //!                                   [--noc simple|crossbar] [--cores N]
+//!   serve     Open-loop serving:    onnxim serve --config server --rate 500
+//!                                   --duration-ms 50 --policy time-shared
+//!                                   --slo-ms 10 [--seed 42]
+//!                                   [--models resnet50,gpt3-small-decode]
+//!                                   [--process poisson|gamma|constant]
+//!                                   [--cv 2.0] [--max-batch 8]
+//!                                   [--batch-timeout-us 100] [--max-queue 64]
+//!                                   [--serve-config scenario.json] [--out r.json]
+//!             Emits a deterministic JSON SLO report on stdout (a
+//!             human-readable table goes to stderr).
 //!   trace     Simulate a multi-tenant trace JSON: onnxim trace --trace t.json
+//!   trace gen Freeze a stochastic workload into a replayable trace:
+//!             onnxim trace gen --model resnet50 --rate 100 --duration-ms 5
+//!                              [--seed 42] [--process poisson] [--cv 1]
+//!                              [--batch 1] [--tenant 0] [--out trace.json]
 //!   graph     Export a model graph: onnxim graph --model gpt3-small-decode
 //!                                   [--optimize] [--out g.json]
 //!   validate  Core-model validation vs the RTL reference (Fig. 3b).
@@ -14,10 +28,11 @@
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
 
 use onnxim::baseline::rtl_ref;
-use onnxim::config::{NocModel, NpuConfig};
+use onnxim::config::{NocModel, NpuConfig, ServeConfig, TenantLoadConfig};
 use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
 use onnxim::scheduler::{Fcfs, Policy, Spatial, TimeShared};
+use onnxim::serve::{run_serve, TrafficGen};
 use onnxim::sim::{NoDriver, Simulator};
 use onnxim::tenant::Trace;
 use onnxim::util::stats::{correlation, mape};
@@ -158,6 +173,116 @@ fn cmd_graph(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse an optional flag through `str::parse`, with a default.
+fn opt_parse<T: std::str::FromStr>(
+    opts: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> anyhow::Result<T>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    match opts.get(key) {
+        Some(s) => Ok(s.parse()?),
+        None => Ok(default),
+    }
+}
+
+/// Build the serving scenario from CLI flags (or load `--serve-config`).
+fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig> {
+    if let Some(path) = opts.get("serve-config") {
+        return ServeConfig::from_json_file(path);
+    }
+    let total_rate: f64 = opt_parse(opts, "rate", 500.0)?;
+    let duration_ms: f64 = opt_parse(opts, "duration-ms", 50.0)?;
+    let slo_ms: f64 = opt_parse(opts, "slo-ms", 10.0)?;
+    let seed: u64 = opt_parse(opts, "seed", 42)?;
+    let process = opts.get("process").cloned().unwrap_or_else(|| "poisson".to_string());
+    // Default cv matches the TenantLoadConfig/JSON default, so CLI flags
+    // and an equivalent --serve-config file describe the same traffic.
+    let cv: f64 = opt_parse(opts, "cv", 1.0)?;
+    let max_batch: usize = opt_parse(opts, "max-batch", 8)?;
+    let batch_timeout_us: f64 = opt_parse(opts, "batch-timeout-us", 100.0)?;
+    let max_queue: usize = opt_parse(opts, "max-queue", 64)?;
+    let models_arg = opts
+        .get("models")
+        .cloned()
+        .unwrap_or_else(|| "resnet50,gpt3-small-decode".to_string());
+    let names: Vec<&str> = models_arg.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    if names.is_empty() {
+        anyhow::bail!("--models needs at least one model name");
+    }
+    let tenants = names
+        .iter()
+        .map(|name| {
+            let mut t = TenantLoadConfig::poisson(name, total_rate / names.len() as f64);
+            t.process = process.clone();
+            t.cv = cv;
+            t.max_batch = max_batch;
+            t.batch_timeout_us = batch_timeout_us;
+            t.max_queue = max_queue;
+            t
+        })
+        .collect();
+    Ok(ServeConfig { seed, duration_ms, slo_ms, tenants })
+}
+
+fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = load_config(&opts)?;
+    let scfg = serve_scenario(&opts)?;
+    let policy = make_policy(&opts, cfg.num_cores)?;
+    eprintln!(
+        "serving {} tenant(s) on '{}' for {} ms (seed {})",
+        scfg.tenants.len(),
+        cfg.name,
+        scfg.duration_ms,
+        scfg.seed
+    );
+    let report = run_serve(cfg, policy, &scfg)?;
+    eprintln!("{}", report.render_table());
+    let json = report.to_json();
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = load_config(&opts)?;
+    let model = opts.get("model").map(String::as_str).unwrap_or("resnet50");
+    models::by_name(model, 1)?; // validate before sampling
+    let mut load = TenantLoadConfig::poisson(model, opt_parse(&opts, "rate", 100.0)?);
+    load.process = opts.get("process").cloned().unwrap_or_else(|| "poisson".to_string());
+    load.cv = opt_parse(&opts, "cv", 1.0)?;
+    let batch: usize = opt_parse(&opts, "batch", 1)?;
+    load.req_batch_min = batch;
+    load.req_batch_max = opt_parse(&opts, "batch-max", batch)?;
+    let duration_ms: f64 = opt_parse(&opts, "duration-ms", 5.0)?;
+    let seed: u64 = opt_parse(&opts, "seed", 42)?;
+    let tenant: usize = opt_parse(&opts, "tenant", 0)?;
+    let duration_cycles = (duration_ms * cfg.core_freq_ghz * 1e6).round() as u64;
+    let mut gen = TrafficGen::from_load(&load, cfg.core_freq_ghz, seed)?;
+    let trace = gen.sample_trace(model, tenant, duration_cycles);
+    eprintln!(
+        "sampled {} '{}' arrivals over {duration_ms} ms ({} process, seed {seed})",
+        trace.entries.len(),
+        model,
+        load.process
+    );
+    match opts.get("out") {
+        Some(path) => {
+            trace.save(path)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{}", trace.to_json()),
+    }
+    Ok(())
+}
+
 fn cmd_validate(_opts: HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = NpuConfig::mobile();
     let pairs = rtl_ref::run_validation(&cfg);
@@ -185,14 +310,22 @@ fn cmd_verify(opts: HashMap<String, String>) -> anyhow::Result<()> {
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        eprintln!("usage: onnxim <sim|trace|graph|validate|verify> [--flags]");
+        eprintln!("usage: onnxim <sim|serve|trace|trace gen|graph|validate|verify> [--flags]");
         eprintln!("see rust/src/main.rs header for the full flag list");
         return ExitCode::FAILURE;
     };
-    let opts = parse_args(&args[1..]);
-    let result = match cmd.as_str() {
+    // `trace gen` is the one two-word subcommand.
+    let (cmd, rest) = if cmd == "trace" && args.get(1).map(String::as_str) == Some("gen") {
+        ("trace-gen", &args[2..])
+    } else {
+        (cmd.as_str(), &args[1..])
+    };
+    let opts = parse_args(rest);
+    let result = match cmd {
         "sim" => cmd_sim(opts),
+        "serve" => cmd_serve(opts),
         "trace" => cmd_trace(opts),
+        "trace-gen" => cmd_trace_gen(opts),
         "graph" => cmd_graph(opts),
         "validate" => cmd_validate(opts),
         "verify" => cmd_verify(opts),

@@ -7,6 +7,12 @@
 //! through the same tiling (the L1 Pallas kernels, lowered under
 //! `interpret=True` into plain HLO). Python never runs at simulation time —
 //! the Rust binary is self-contained once `make artifacts` has been built.
+//!
+//! The `xla` crate is not part of the offline vendor set, so actual PJRT
+//! execution is gated behind the off-by-default `pjrt` Cargo feature.
+//! Without it, artifact manifests and fixtures still load (the pure-Rust
+//! parts below), but [`Artifact::run_f32`] returns an error explaining how
+//! to enable the backend.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -30,6 +36,7 @@ impl ArtifactSpec {
 /// One compiled executable plus its fixtures.
 pub struct Artifact {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     dir: PathBuf,
 }
@@ -46,7 +53,6 @@ impl Artifact {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, buf) in inputs.iter().enumerate() {
             let shape = &self.spec.input_shapes[i];
             if buf.len() != ArtifactSpec::numel(shape) {
@@ -58,6 +64,15 @@ impl Artifact {
                     ArtifactSpec::numel(shape)
                 );
             }
+        }
+        self.exec_backend(inputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn exec_backend(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            let shape = &self.spec.input_shapes[i];
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
         }
@@ -69,6 +84,15 @@ impl Artifact {
             outs.push(lit.to_vec::<f32>()?);
         }
         Ok(outs)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn exec_backend(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        bail!(
+            "{}: functional execution needs the PJRT backend — rebuild with \
+             `--features pjrt` and a vendored `xla` crate",
+            self.spec.name
+        )
     }
 
     /// Load the `.inN.bin` input fixtures dumped at AOT time.
@@ -122,6 +146,7 @@ fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
 
 /// The functional runtime: a PJRT CPU client plus all compiled artifacts.
 pub struct FunctionalRuntime {
+    #[cfg(feature = "pjrt")]
     pub client: xla::PjRtClient,
     pub artifacts: HashMap<String, Artifact>,
 }
@@ -134,6 +159,7 @@ impl FunctionalRuntime {
         let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("no manifest in {} — run `make artifacts`", dir.display()))?;
         let manifest = Json::parse(&manifest_text)?;
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
         let mut artifacts = HashMap::new();
         let Json::Obj(entries) = &manifest else { bail!("manifest must be an object") };
@@ -152,16 +178,30 @@ impl FunctionalRuntime {
                 output_shapes: parse_shapes("outputs")?,
             };
             let hlo_path = dir.join(format!("{name}.hlo.txt"));
-            let proto =
-                xla::HloModuleProto::from_text_file(hlo_path.to_str().context("path utf8")?)
-                    .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
-            artifacts.insert(name.clone(), Artifact { spec, exe, dir: dir.clone() });
+            #[cfg(feature = "pjrt")]
+            {
+                let proto =
+                    xla::HloModuleProto::from_text_file(hlo_path.to_str().context("path utf8")?)
+                        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+                artifacts.insert(name.clone(), Artifact { spec, exe, dir: dir.clone() });
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                if !hlo_path.exists() {
+                    bail!("{}: HLO module listed in manifest but missing", hlo_path.display());
+                }
+                artifacts.insert(name.clone(), Artifact { spec, dir: dir.clone() });
+            }
         }
-        Ok(FunctionalRuntime { client, artifacts })
+        #[cfg(feature = "pjrt")]
+        let rt = FunctionalRuntime { client, artifacts };
+        #[cfg(not(feature = "pjrt"))]
+        let rt = FunctionalRuntime { artifacts };
+        Ok(rt)
     }
 
     pub fn get(&self, name: &str) -> Result<&Artifact> {

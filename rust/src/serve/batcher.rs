@@ -1,0 +1,197 @@
+//! Dynamic batching with admission control, per (tenant, model) queue.
+//!
+//! Arrivals accumulate until either `max_batch` units are queued or
+//! `timeout` cycles have passed since the **oldest** queued request
+//! arrived, whichever comes first — the classic serving-system
+//! latency/throughput trade-off. Arrivals past `max_queue` depth are
+//! rejected (admission control) and only counted, never simulated.
+//!
+//! The batcher is pure bookkeeping: it never touches the scheduler or the
+//! model zoo. [`crate::serve::ServeDriver`] materializes each flushed
+//! [`Batch`] into a batched [`crate::graph::Graph`] and submits it.
+
+use crate::Cycle;
+use std::collections::VecDeque;
+
+/// One admitted request waiting to be batched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pending {
+    /// Cycle the request arrived (starts its end-to-end latency clock).
+    pub arrival: Cycle,
+    /// Batch units this request contributes (its own batch size).
+    pub size: usize,
+}
+
+/// A materialized batch: the members and their summed units.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub members: Vec<Pending>,
+    /// Total units = the batch dimension of the submitted graph.
+    pub units: usize,
+}
+
+/// Dynamic batching queue for one tenant.
+pub struct Batcher {
+    /// Flush threshold in units.
+    pub max_batch: usize,
+    /// Flush deadline in cycles after the oldest queued arrival.
+    pub timeout: Cycle,
+    /// Admission cap in queued requests.
+    pub max_queue: usize,
+    queue: VecDeque<Pending>,
+    queued_units: usize,
+    /// Requests turned away at the admission cap.
+    pub rejected: u64,
+    /// Requests admitted into the queue.
+    pub admitted: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, timeout: Cycle, max_queue: usize) -> Self {
+        Batcher {
+            max_batch: max_batch.max(1),
+            timeout,
+            max_queue: max_queue.max(1),
+            queue: VecDeque::new(),
+            queued_units: 0,
+            rejected: 0,
+            admitted: 0,
+        }
+    }
+
+    /// Offer an arrival; `false` means it was rejected at the admission cap.
+    pub fn offer(&mut self, p: Pending) -> bool {
+        if self.queue.len() >= self.max_queue {
+            self.rejected += 1;
+            return false;
+        }
+        self.queued_units += p.size;
+        self.queue.push_back(p);
+        self.admitted += 1;
+        true
+    }
+
+    /// Cycle at which the queue next wants to flush: `now` when the unit
+    /// threshold is already met, otherwise the oldest member's timeout
+    /// deadline; `None` when empty.
+    pub fn ready_at(&self, now: Cycle) -> Option<Cycle> {
+        let front = self.queue.front()?;
+        if self.queued_units >= self.max_batch {
+            return Some(now);
+        }
+        Some(front.arrival.saturating_add(self.timeout))
+    }
+
+    /// Flush one batch if due at `now`: FIFO members until the unit
+    /// threshold is reached (always at least one member, even oversized).
+    /// Returns `None` when nothing is due.
+    pub fn flush(&mut self, now: Cycle) -> Option<Batch> {
+        match self.ready_at(now) {
+            Some(t) if t <= now => {}
+            _ => return None,
+        }
+        let mut members = Vec::new();
+        let mut units = 0usize;
+        while let Some(&p) = self.queue.front() {
+            if !members.is_empty() && units + p.size > self.max_batch {
+                break;
+            }
+            units += p.size;
+            members.push(p);
+            self.queue.pop_front();
+            if units >= self.max_batch {
+                break;
+            }
+        }
+        self.queued_units -= units;
+        Some(Batch { members, units })
+    }
+
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queued_units(&self) -> usize {
+        self.queued_units
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(arrival: Cycle, size: usize) -> Pending {
+        Pending { arrival, size }
+    }
+
+    #[test]
+    fn flush_on_full_ignores_timeout() {
+        let mut b = Batcher::new(4, 1_000_000, 64);
+        for i in 0..4 {
+            assert!(b.offer(p(i, 1)));
+        }
+        // Threshold met: due immediately, long before the timeout.
+        assert_eq!(b.ready_at(10), Some(10));
+        let batch = b.flush(10).unwrap();
+        assert_eq!(batch.units, 4);
+        assert_eq!(batch.members.len(), 4);
+        assert!(b.is_empty());
+        assert!(b.flush(10).is_none());
+    }
+
+    #[test]
+    fn flush_on_timeout_takes_partial_batch() {
+        let mut b = Batcher::new(8, 1000, 64);
+        b.offer(p(100, 1));
+        b.offer(p(300, 1));
+        // Deadline tracks the OLDEST member.
+        assert_eq!(b.ready_at(400), Some(1100));
+        assert!(b.flush(1099).is_none());
+        let batch = b.flush(1100).unwrap();
+        assert_eq!(batch.units, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn oversized_request_flushes_alone() {
+        let mut b = Batcher::new(4, 1000, 64);
+        b.offer(p(0, 9)); // bigger than max_batch: still served, alone
+        b.offer(p(1, 1));
+        let batch = b.flush(0).unwrap();
+        assert_eq!(batch.units, 9);
+        assert_eq!(batch.members.len(), 1);
+        assert_eq!(b.queued_units(), 1);
+    }
+
+    #[test]
+    fn fifo_order_and_unit_packing() {
+        let mut b = Batcher::new(4, 1000, 64);
+        b.offer(p(0, 2));
+        b.offer(p(1, 2));
+        b.offer(p(2, 2));
+        let batch = b.flush(5).unwrap();
+        assert_eq!(batch.members, vec![p(0, 2), p(1, 2)]);
+        assert_eq!(batch.units, 4);
+        assert_eq!(b.queued_requests(), 1);
+        // Remainder below threshold: due only at its own deadline.
+        assert_eq!(b.ready_at(5), Some(1002));
+    }
+
+    #[test]
+    fn admission_cap_counts_rejections() {
+        let mut b = Batcher::new(100, 1000, 2);
+        assert!(b.offer(p(0, 1)));
+        assert!(b.offer(p(1, 1)));
+        assert!(!b.offer(p(2, 1)));
+        assert!(!b.offer(p(3, 1)));
+        assert_eq!(b.rejected, 2);
+        assert_eq!(b.admitted, 2);
+        // Draining frees capacity again.
+        b.flush(2000).unwrap();
+        assert!(b.offer(p(4, 1)));
+    }
+}

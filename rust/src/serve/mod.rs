@@ -1,0 +1,30 @@
+//! `serve` — an open-loop DNN serving frontend for the simulator.
+//!
+//! The paper's headline use case is multi-core NPUs in DNN serving
+//! systems, but trace replay alone cannot model real serving load. This
+//! layer turns the cycle-level simulator into a serving testbed:
+//!
+//! - [`traffic`] — seeded stochastic arrival generators (Poisson,
+//!   gamma/bursty, constant-rate, trace replay), parameterized per tenant
+//!   in requests/second.
+//! - [`batcher`] — per-tenant dynamic batching (flush on size or timeout)
+//!   with an admission-control queue cap.
+//! - [`slo`] — latency percentiles, SLO attainment, goodput, and the JSON
+//!   report; also summarizes TTFT/TBT token streams.
+//! - [`driver`] — the [`crate::sim::Driver`] that injects generated
+//!   arrivals as simulated time advances and attributes completions back
+//!   to batched requests; [`run_serve`] is the one-call entry point used
+//!   by `onnxim serve` and `examples/fig_serving.rs`.
+//!
+//! Scenarios are described by [`crate::config::ServeConfig`] and are
+//! fully deterministic in their seed.
+
+pub mod batcher;
+pub mod driver;
+pub mod slo;
+pub mod traffic;
+
+pub use batcher::{Batch, Batcher, Pending};
+pub use driver::{run_serve, ServeDriver};
+pub use slo::{SloReport, Summary, TenantReport};
+pub use traffic::{ArrivalProcess, BatchDist, TrafficGen};

@@ -1,0 +1,305 @@
+//! Stochastic arrival generators for open-loop serving load.
+//!
+//! A [`TrafficGen`] turns a per-tenant load description (rate in req/s,
+//! arrival process, batch-size distribution) into a deterministic,
+//! seed-reproducible stream of `(arrival_cycle, batch_units)` pairs:
+//!
+//! - **Poisson** — exponential inter-arrival gaps (the classic open-loop
+//!   serving assumption).
+//! - **Gamma** — gamma-distributed gaps with a configurable coefficient of
+//!   variation: CV > 1 models bursty traffic (flash crowds), CV < 1
+//!   smoothed/paced clients; CV = 1 recovers the exponential.
+//! - **Constant** — fixed-rate pacing (load-generator style).
+//! - **Replay** — the arrivals of an existing [`Trace`], so frozen
+//!   workloads (`onnxim trace gen`) replay bit-identically.
+//!
+//! Rates are specified in requests/second and converted to cycles via the
+//! NPU core frequency, keeping scenario files hardware-independent.
+
+use crate::config::serve::TenantLoadConfig;
+use crate::tenant::{Trace, TraceEntry};
+use crate::util::rng::Rng;
+use crate::Cycle;
+use anyhow::{bail, Result};
+
+/// Inter-arrival process.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    Poisson,
+    /// Gamma-distributed gaps with the given coefficient of variation.
+    Gamma { cv: f64 },
+    Constant,
+    /// Replay explicit `(arrival, batch)` pairs (already in cycles).
+    Replay { arrivals: Vec<(Cycle, usize)> },
+}
+
+/// Per-request batch-size ("units") distribution.
+#[derive(Debug, Clone)]
+pub enum BatchDist {
+    Fixed(usize),
+    Uniform { lo: usize, hi: usize },
+}
+
+impl BatchDist {
+    fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            BatchDist::Fixed(n) => n.max(1),
+            BatchDist::Uniform { lo, hi } => {
+                let (lo, hi) = (lo.max(1), hi.max(lo).max(1));
+                rng.range(lo as u64, hi as u64) as usize
+            }
+        }
+    }
+}
+
+/// A seeded arrival stream for one tenant.
+pub struct TrafficGen {
+    process: ArrivalProcess,
+    batch: BatchDist,
+    /// Mean inter-arrival gap in cycles (ignored by `Replay`).
+    mean_gap: f64,
+    rng: Rng,
+    /// Continuous arrival clock (cycles); avoids rounding drift.
+    t: f64,
+    replay_idx: usize,
+    /// Pre-sampled next arrival so [`TrafficGen::peek`] is `&self`.
+    next: Option<(Cycle, usize)>,
+}
+
+impl TrafficGen {
+    /// Build a generator producing `rate_rps` requests/second at a core
+    /// clock of `core_freq_ghz`.
+    pub fn new(
+        process: ArrivalProcess,
+        batch: BatchDist,
+        rate_rps: f64,
+        core_freq_ghz: f64,
+        seed: u64,
+    ) -> Self {
+        let cycles_per_sec = core_freq_ghz * 1e9;
+        let mean_gap = if rate_rps > 0.0 { cycles_per_sec / rate_rps } else { f64::INFINITY };
+        let mut gen = TrafficGen {
+            process,
+            batch,
+            mean_gap,
+            rng: Rng::new(seed),
+            t: 0.0,
+            replay_idx: 0,
+            next: None,
+        };
+        gen.advance();
+        gen
+    }
+
+    /// Build from a [`TenantLoadConfig`] (the JSON scenario format).
+    pub fn from_load(load: &TenantLoadConfig, core_freq_ghz: f64, seed: u64) -> Result<Self> {
+        let process = match load.process.as_str() {
+            "poisson" => ArrivalProcess::Poisson,
+            "gamma" => {
+                if load.cv <= 0.0 {
+                    bail!("gamma process needs cv > 0, got {}", load.cv);
+                }
+                ArrivalProcess::Gamma { cv: load.cv }
+            }
+            "constant" => ArrivalProcess::Constant,
+            other => bail!("unknown arrival process '{other}' (poisson|gamma|constant)"),
+        };
+        if load.rate_rps <= 0.0 {
+            bail!("tenant rate must be positive, got {}", load.rate_rps);
+        }
+        let batch = if load.req_batch_min == load.req_batch_max {
+            BatchDist::Fixed(load.req_batch_min)
+        } else {
+            BatchDist::Uniform { lo: load.req_batch_min, hi: load.req_batch_max }
+        };
+        Ok(TrafficGen::new(process, batch, load.rate_rps, core_freq_ghz, seed))
+    }
+
+    /// Replay the arrivals of `trace` belonging to `tenant` (each entry's
+    /// `count` expands to that many same-cycle requests of `batch` units).
+    pub fn replay(trace: &Trace, tenant: usize) -> Self {
+        let mut arrivals: Vec<(Cycle, usize)> = trace
+            .entries
+            .iter()
+            .filter(|e| e.tenant == tenant)
+            .flat_map(|e| std::iter::repeat((e.arrival, e.batch.max(1))).take(e.count))
+            .collect();
+        arrivals.sort_by_key(|&(t, _)| t);
+        let mut gen = TrafficGen {
+            process: ArrivalProcess::Replay { arrivals },
+            batch: BatchDist::Fixed(1),
+            mean_gap: f64::INFINITY,
+            rng: Rng::new(0),
+            t: 0.0,
+            replay_idx: 0,
+            next: None,
+        };
+        gen.advance();
+        gen
+    }
+
+    /// Next arrival `(cycle, units)` without consuming it; `None` when a
+    /// replay stream is exhausted (stochastic streams never end — the
+    /// driver bounds them with its open-loop window).
+    pub fn peek(&self) -> Option<(Cycle, usize)> {
+        self.next
+    }
+
+    /// Consume and return the next arrival, pre-sampling its successor.
+    pub fn pop(&mut self) -> Option<(Cycle, usize)> {
+        let out = self.next.take();
+        self.advance();
+        out
+    }
+
+    fn advance(&mut self) {
+        self.next = match &self.process {
+            ArrivalProcess::Replay { arrivals } => {
+                let item = arrivals.get(self.replay_idx).copied();
+                self.replay_idx += 1;
+                item
+            }
+            _ => {
+                let gap = match self.process {
+                    ArrivalProcess::Poisson => self.rng.exp(self.mean_gap),
+                    ArrivalProcess::Constant => self.mean_gap,
+                    ArrivalProcess::Gamma { cv } => {
+                        let shape = 1.0 / (cv * cv);
+                        self.rng.gamma(shape, self.mean_gap / shape)
+                    }
+                    ArrivalProcess::Replay { .. } => unreachable!(),
+                };
+                if !gap.is_finite() {
+                    return; // rate 0: no arrivals, keep `next = None`
+                }
+                self.t += gap.max(0.0);
+                let size = self.batch.sample(&mut self.rng);
+                Some((self.t as Cycle, size))
+            }
+        };
+    }
+
+    /// Sample the stream into a concrete [`Trace`] covering
+    /// `[0, duration_cycles)` — the `onnxim trace gen` freeze path.
+    pub fn sample_trace(&mut self, model: &str, tenant: usize, duration_cycles: Cycle) -> Trace {
+        let mut entries = Vec::new();
+        while let Some((t, size)) = self.peek() {
+            if t >= duration_cycles {
+                break;
+            }
+            self.pop();
+            entries.push(TraceEntry {
+                model: model.to_string(),
+                batch: size,
+                arrival: t,
+                count: 1,
+                tenant,
+            });
+        }
+        Trace { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaps(gen: &mut TrafficGen, n: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(n);
+        let mut last = 0u64;
+        for _ in 0..n {
+            let (t, _) = gen.pop().unwrap();
+            out.push((t - last) as f64);
+            last = t;
+        }
+        out
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        // 1000 req/s at 1 GHz -> mean gap 1e6 cycles.
+        let mut g = TrafficGen::new(ArrivalProcess::Poisson, BatchDist::Fixed(1), 1000.0, 1.0, 7);
+        let gs = gaps(&mut g, 20_000);
+        let mean = gs.iter().sum::<f64>() / gs.len() as f64;
+        assert!((mean - 1e6).abs() / 1e6 < 0.05, "mean gap {mean}");
+    }
+
+    #[test]
+    fn gamma_burstiness_matches_cv() {
+        let cv_target = 2.0;
+        let mut g = TrafficGen::new(
+            ArrivalProcess::Gamma { cv: cv_target },
+            BatchDist::Fixed(1),
+            1000.0,
+            1.0,
+            13,
+        );
+        let gs = gaps(&mut g, 30_000);
+        let mean = gs.iter().sum::<f64>() / gs.len() as f64;
+        let var = gs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / gs.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((mean - 1e6).abs() / 1e6 < 0.05, "mean gap {mean}");
+        assert!((cv - cv_target).abs() / cv_target < 0.15, "cv {cv}");
+    }
+
+    #[test]
+    fn constant_process_is_exactly_paced() {
+        let mut g = TrafficGen::new(ArrivalProcess::Constant, BatchDist::Fixed(1), 500.0, 1.0, 1);
+        let gs = gaps(&mut g, 100);
+        // 2e6-cycle gaps, exact up to integer truncation.
+        assert!(gs.iter().all(|&d| (d - 2e6).abs() <= 1.0), "{gs:?}");
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mk = || {
+            TrafficGen::new(
+                ArrivalProcess::Gamma { cv: 3.0 },
+                BatchDist::Uniform { lo: 1, hi: 8 },
+                200.0,
+                1.0,
+                99,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..1000 {
+            assert_eq!(a.pop(), b.pop());
+        }
+    }
+
+    #[test]
+    fn batch_sizes_within_bounds() {
+        let mut g = TrafficGen::new(
+            ArrivalProcess::Poisson,
+            BatchDist::Uniform { lo: 2, hi: 5 },
+            100.0,
+            1.0,
+            3,
+        );
+        for _ in 0..1000 {
+            let (_, size) = g.pop().unwrap();
+            assert!((2..=5).contains(&size));
+        }
+    }
+
+    #[test]
+    fn replay_roundtrip_through_trace() {
+        let mut g = TrafficGen::new(ArrivalProcess::Poisson, BatchDist::Fixed(2), 1000.0, 1.0, 5);
+        let trace = g.sample_trace("resnet50", 1, 20_000_000);
+        assert!(!trace.entries.is_empty());
+        let mut r = TrafficGen::replay(&trace, 1);
+        for e in &trace.entries {
+            assert_eq!(r.pop(), Some((e.arrival, e.batch)));
+        }
+        assert_eq!(r.pop(), None);
+        // Foreign tenants are filtered out.
+        assert!(TrafficGen::replay(&trace, 0).peek().is_none());
+    }
+
+    #[test]
+    fn from_load_rejects_bad_process() {
+        let mut load = TenantLoadConfig::poisson("mlp", 100.0);
+        load.process = "pareto".into();
+        assert!(TrafficGen::from_load(&load, 1.0, 0).is_err());
+    }
+}

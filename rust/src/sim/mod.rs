@@ -21,10 +21,24 @@ use crate::{Cycle, NEVER};
 pub use stats::SimReport;
 
 /// Hook for drivers that react to request completions (e.g. autoregressive
-/// LLM generation: token t+1's request is created when token t finishes).
+/// LLM generation: token t+1's request is created when token t finishes)
+/// or inject work as simulated time advances (open-loop serving traffic).
 pub trait Driver {
     /// Called once per completed request. May add new requests.
     fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler);
+
+    /// Called once per event-loop iteration, before arrivals are
+    /// activated. Open-loop drivers (e.g. [`crate::serve::ServeDriver`])
+    /// inject stochastic arrivals and flush batching queues here.
+    fn on_tick(&mut self, _now: Cycle, _sched: &mut GlobalScheduler) {}
+
+    /// Earliest future cycle at which the driver has time-triggered work
+    /// (a generated arrival, a batch-timeout flush). Feeds the
+    /// event-horizon clock advance so work injected mid-run wakes the
+    /// scheduler punctually; [`NEVER`] when idle.
+    fn next_event(&self, _now: Cycle) -> Cycle {
+        NEVER
+    }
 
     /// True when the driver has no more work to inject.
     fn finished(&self) -> bool {
@@ -104,6 +118,11 @@ impl Simulator {
         loop {
             let now = self.clock;
 
+            // 0. Time-triggered driver work (open-loop arrival injection,
+            //    batch flushes) lands before activation so requests created
+            //    "now" dispatch this very cycle.
+            driver.on_tick(now, &mut self.sched);
+
             // 1. Activate arrivals and dispatch tiles to free cores.
             self.sched.activate_arrivals(now);
             for c in 0..self.cores.len() {
@@ -168,7 +187,7 @@ impl Simulator {
             if self.sched.all_done() && driver.finished() && self.quiescent() {
                 break;
             }
-            self.clock = self.next_cycle(now);
+            self.clock = self.next_cycle(now, driver.next_event(now));
         }
         self.report()
     }
@@ -177,9 +196,11 @@ impl Simulator {
         self.cores.iter().all(|c| c.idle()) && self.noc.idle() && self.dram.idle()
     }
 
-    /// Event-horizon clock advance.
-    fn next_cycle(&self, now: Cycle) -> Cycle {
-        let mut next = NEVER;
+    /// Event-horizon clock advance. `driver_next` is the driver's earliest
+    /// time-triggered event (arrival injection, batch flush), so open-loop
+    /// work created mid-run wakes the scheduler on time.
+    fn next_cycle(&self, now: Cycle, driver_next: Cycle) -> Cycle {
+        let mut next = driver_next;
         for core in &self.cores {
             next = next.min(core.next_event(now));
         }

@@ -55,6 +55,12 @@ impl Trace {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Write the trace as JSON (the format [`Trace::load`] reads back).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
     pub fn to_json(&self) -> String {
         Json::obj(vec![(
             "requests",
@@ -197,6 +203,16 @@ impl Driver for MultiDriver<'_> {
         for d in self.drivers.iter_mut() {
             d.on_request_done(request_id, now, sched);
         }
+    }
+
+    fn on_tick(&mut self, now: Cycle, sched: &mut GlobalScheduler) {
+        for d in self.drivers.iter_mut() {
+            d.on_tick(now, sched);
+        }
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        self.drivers.iter().map(|d| d.next_event(now)).min().unwrap_or(crate::NEVER)
     }
 
     fn finished(&self) -> bool {

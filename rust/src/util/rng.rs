@@ -49,6 +49,40 @@ impl Rng {
         let u = self.f64().max(1e-12);
         -mean * u.ln()
     }
+
+    /// Standard normal sample (Box–Muller; one of the pair is discarded to
+    /// keep the generator stateless beyond `state`).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, scale) sample via Marsaglia–Tsang, with the standard
+    /// `U^(1/shape)` boost for `shape < 1`. Mean = shape * scale; squared
+    /// coefficient of variation = 1 / shape — the knob the bursty arrival
+    /// process uses (CV > 1 needs shape < 1).
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma needs positive parameters");
+        if shape < 1.0 {
+            let u = self.f64().max(1e-12);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let t = 1.0 + c * x;
+            if t <= 0.0 {
+                continue;
+            }
+            let v = t * t * t;
+            let u = self.f64().max(1e-12);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v * scale;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +141,39 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.exp(10.0)).sum::<f64>() / n as f64;
         assert!((mean - 10.0).abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments_close() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn gamma_matches_mean_and_cv() {
+        // Both the shape >= 1 path and the boosted shape < 1 path.
+        for (shape, scale) in [(4.0, 2.5), (0.25, 8.0)] {
+            let mut r = Rng::new(17);
+            let n = 50_000;
+            let samples: Vec<f64> = (0..n).map(|_| r.gamma(shape, scale)).collect();
+            let mean = samples.iter().sum::<f64>() / n as f64;
+            let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            let want_mean = shape * scale;
+            let want_cv = 1.0 / shape.sqrt();
+            let cv = var.sqrt() / mean;
+            assert!(
+                (mean - want_mean).abs() / want_mean < 0.05,
+                "shape {shape}: mean {mean} vs {want_mean}"
+            );
+            assert!(
+                (cv - want_cv).abs() / want_cv < 0.1,
+                "shape {shape}: cv {cv} vs {want_cv}"
+            );
+        }
     }
 }
