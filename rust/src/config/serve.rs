@@ -9,6 +9,7 @@
 //! the dynamic-batching / admission-control knobs.
 
 use crate::util::json::Json;
+use crate::Cycle;
 use anyhow::Result;
 
 /// Load description for one tenant.
@@ -40,6 +41,23 @@ pub struct TenantLoadConfig {
     /// Per-tenant SLO override in milliseconds (falls back to
     /// [`ServeConfig::slo_ms`]).
     pub slo_ms: Option<f64>,
+    /// Batching mode: `"static"` (whole-batch: a flushed batch runs to
+    /// completion before the next forms) or `"continuous"` (in-flight
+    /// decode pool: requests merge at iteration boundaries and retire
+    /// independently; requires `decode_tokens > 0` and a transformer
+    /// model).
+    pub mode: String,
+    /// Decode steps per request. 0 = one whole-graph inference per
+    /// request (the non-generative path); > 0 = generative serving, each
+    /// request running this many one-token decode steps.
+    pub decode_tokens: usize,
+    /// KV-cache length a stream starts from (its prompt is assumed
+    /// already cached). Generative serving only.
+    pub kv_init: usize,
+    /// KV bucket granularity for decode-step graph reuse (lengths round
+    /// up to a multiple of this, paged-attention style). Generative
+    /// serving only.
+    pub kv_block: usize,
 }
 
 impl TenantLoadConfig {
@@ -56,7 +74,23 @@ impl TenantLoadConfig {
             batch_timeout_us: 100.0,
             max_queue: 64,
             slo_ms: None,
+            mode: "static".into(),
+            decode_tokens: 0,
+            kv_init: 128,
+            kv_block: 64,
         }
+    }
+
+    /// A continuous-batching generative tenant for `model` at `rate_rps`,
+    /// decoding `decode_tokens` tokens per request. `decode_tokens` is
+    /// deliberately not clamped: a zero propagates to the same
+    /// "continuous batching requires decode_tokens > 0" construction
+    /// error every other path (JSON, CLI) raises.
+    pub fn continuous(model: &str, rate_rps: f64, decode_tokens: usize) -> Self {
+        let mut t = Self::poisson(model, rate_rps);
+        t.mode = "continuous".into();
+        t.decode_tokens = decode_tokens;
+        t
     }
 
     fn as_json(&self) -> Json {
@@ -70,6 +104,10 @@ impl TenantLoadConfig {
             ("max_batch", Json::num(self.max_batch as f64)),
             ("batch_timeout_us", Json::num(self.batch_timeout_us)),
             ("max_queue", Json::num(self.max_queue as f64)),
+            ("mode", Json::str(&self.mode)),
+            ("decode_tokens", Json::num(self.decode_tokens as f64)),
+            ("kv_init", Json::num(self.kv_init as f64)),
+            ("kv_block", Json::num(self.kv_block as f64)),
         ];
         if let Some(slo) = self.slo_ms {
             pairs.push(("slo_ms", Json::num(slo)));
@@ -89,6 +127,12 @@ impl TenantLoadConfig {
             batch_timeout_us: j.get("batch_timeout_us").map_or(Ok(100.0), |v| v.as_f64())?,
             max_queue: j.get("max_queue").map_or(Ok(64), |v| v.as_usize())?,
             slo_ms: j.get("slo_ms").map(|v| v.as_f64()).transpose()?,
+            mode: j
+                .get("mode")
+                .map_or(Ok("static".to_string()), |v| v.as_str().map(str::to_string))?,
+            decode_tokens: j.get("decode_tokens").map_or(Ok(0), |v| v.as_usize())?,
+            kv_init: j.get("kv_init").map_or(Ok(128), |v| v.as_usize())?,
+            kv_block: j.get("kv_block").map_or(Ok(64), |v| v.as_usize())?,
         })
     }
 }
@@ -125,6 +169,20 @@ impl ServeConfig {
     /// Effective SLO for tenant `i` in milliseconds.
     pub fn tenant_slo_ms(&self, i: usize) -> f64 {
         self.tenants[i].slo_ms.unwrap_or(self.slo_ms)
+    }
+
+    /// Effective SLO for tenant `i` in core cycles — the single
+    /// conversion every consumer (driver accounting, `SloSlack` budgets,
+    /// CLI, tests) must share, so policy deadlines can never drift from
+    /// the attainment the report measures.
+    pub fn tenant_slo_cycles(&self, i: usize, core_freq_ghz: f64) -> Cycle {
+        (self.tenant_slo_ms(i) * core_freq_ghz * 1e6).round() as Cycle
+    }
+
+    /// All tenants' SLO budgets in cycles (the `SloSlack` constructor
+    /// argument).
+    pub fn slo_cycles(&self, core_freq_ghz: f64) -> Vec<Cycle> {
+        (0..self.tenants.len()).map(|i| self.tenant_slo_cycles(i, core_freq_ghz)).collect()
     }
 
     pub fn to_json(&self) -> String {
@@ -189,6 +247,27 @@ mod tests {
         assert_eq!(t.max_batch, 8);
         assert_eq!(t.max_queue, 64);
         assert_eq!(cfg.tenant_slo_ms(0), 5.0);
+    }
+
+    #[test]
+    fn continuous_fields_roundtrip() {
+        let mut cfg = ServeConfig::two_tenant(100.0, 10.0, 5.0);
+        cfg.tenants[1] = TenantLoadConfig::continuous("gpt3-small-decode", 50.0, 32);
+        cfg.tenants[1].kv_init = 256;
+        cfg.tenants[1].kv_block = 128;
+        let cfg2 = ServeConfig::parse(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, cfg2);
+        assert_eq!(cfg2.tenants[1].mode, "continuous");
+        assert_eq!(cfg2.tenants[1].decode_tokens, 32);
+        // Sparse JSON defaults to the non-generative static path.
+        let sparse = ServeConfig::parse(
+            r#"{"duration_ms": 1, "slo_ms": 1,
+                "tenants": [{"model": "mlp", "rate_rps": 10, "process": "poisson"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(sparse.tenants[0].mode, "static");
+        assert_eq!(sparse.tenants[0].decode_tokens, 0);
+        assert_eq!((sparse.tenants[0].kv_init, sparse.tenants[0].kv_block), (128, 64));
     }
 
     #[test]

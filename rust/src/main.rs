@@ -12,7 +12,14 @@
 //!                                   [--process poisson|gamma|constant]
 //!                                   [--cv 2.0] [--max-batch 8]
 //!                                   [--batch-timeout-us 100] [--max-queue 64]
+//!                                   [--mode static|continuous]
+//!                                   [--decode-tokens 0] [--kv-init 128]
+//!                                   [--kv-block 64]
 //!                                   [--serve-config scenario.json] [--out r.json]
+//!             --policy slo-slack enables SLO-slack (earliest-deadline)
+//!             tile scheduling; --mode continuous turns generative tenants
+//!             (--decode-tokens > 0) into an in-flight decode pool with
+//!             iteration-level batching.
 //!             Emits a deterministic JSON SLO report on stdout (a
 //!             human-readable table goes to stderr).
 //!   trace     Simulate a multi-tenant trace JSON: onnxim trace --trace t.json
@@ -31,7 +38,8 @@ use onnxim::baseline::rtl_ref;
 use onnxim::config::{NocModel, NpuConfig, ServeConfig, TenantLoadConfig};
 use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
-use onnxim::scheduler::{Fcfs, Policy, Spatial, TimeShared};
+use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
+use onnxim::Cycle;
 use onnxim::serve::{run_serve, TrafficGen};
 use onnxim::sim::{NoDriver, Simulator};
 use onnxim::tenant::Trace;
@@ -78,10 +86,28 @@ fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
     Ok(cfg)
 }
 
-fn make_policy(opts: &HashMap<String, String>, num_cores: usize) -> anyhow::Result<Box<dyn Policy>> {
+/// Build a scheduling policy. `serve` carries the scenario + core clock
+/// so `slo-slack` can derive per-tenant SLO budgets in cycles; the other
+/// subcommands have no deadline source, so `slo-slack` is rejected there
+/// rather than silently degenerating to FCFS.
+fn make_policy(
+    opts: &HashMap<String, String>,
+    num_cores: usize,
+    serve: Option<(&ServeConfig, f64)>,
+) -> anyhow::Result<Box<dyn Policy>> {
     Ok(match opts.get("policy").map(String::as_str) {
         None | Some("fcfs") => Box::new(Fcfs::new()),
         Some("time-shared") => Box::new(TimeShared::new()),
+        Some("slo-slack") => {
+            let slo_cycles: Vec<Cycle> = match serve {
+                Some((scfg, freq)) => scfg.slo_cycles(freq),
+                None => anyhow::bail!(
+                    "--policy slo-slack needs per-tenant SLOs and is only available on \
+                     the `serve` subcommand (sim/trace requests carry no deadlines)"
+                ),
+            };
+            Box::new(SloSlack::new(slo_cycles))
+        }
         Some("spatial") => {
             // --partition "0,1,1,1": tenant per core.
             let map: Vec<usize> = match opts.get("partition") {
@@ -105,7 +131,7 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
     let report_opt = optimize(&mut graph, OptLevel::Extended);
     println!("model: {}", summarize(&graph));
     println!("optimizer: {} rewrites", report_opt.total());
-    let policy = make_policy(&opts, cfg.num_cores)?;
+    let policy = make_policy(&opts, cfg.num_cores, None)?;
     println!(
         "config: {} ({} cores, {} NoC)",
         cfg.name,
@@ -135,7 +161,7 @@ fn cmd_trace(opts: HashMap<String, String>) -> anyhow::Result<()> {
         .get("trace")
         .ok_or_else(|| anyhow::anyhow!("--trace <file.json> required"))?;
     let trace = Trace::load(path)?;
-    let policy = make_policy(&opts, cfg.num_cores)?;
+    let policy = make_policy(&opts, cfg.num_cores, None)?;
     let mut sim = Simulator::new(cfg, policy);
     for e in &trace.entries {
         for _ in 0..e.count {
@@ -204,6 +230,10 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
     let max_batch: usize = opt_parse(opts, "max-batch", 8)?;
     let batch_timeout_us: f64 = opt_parse(opts, "batch-timeout-us", 100.0)?;
     let max_queue: usize = opt_parse(opts, "max-queue", 64)?;
+    let mode = opts.get("mode").cloned().unwrap_or_else(|| "static".to_string());
+    let decode_tokens: usize = opt_parse(opts, "decode-tokens", 0)?;
+    let kv_init: usize = opt_parse(opts, "kv-init", 128)?;
+    let kv_block: usize = opt_parse(opts, "kv-block", 64)?;
     let models_arg = opts
         .get("models")
         .cloned()
@@ -221,6 +251,10 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
             t.max_batch = max_batch;
             t.batch_timeout_us = batch_timeout_us;
             t.max_queue = max_queue;
+            t.mode = mode.clone();
+            t.decode_tokens = decode_tokens;
+            t.kv_init = kv_init;
+            t.kv_block = kv_block;
             t
         })
         .collect();
@@ -230,7 +264,7 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
 fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = load_config(&opts)?;
     let scfg = serve_scenario(&opts)?;
-    let policy = make_policy(&opts, cfg.num_cores)?;
+    let policy = make_policy(&opts, cfg.num_cores, Some((&scfg, cfg.core_freq_ghz)))?;
     eprintln!(
         "serving {} tenant(s) on '{}' for {} ms (seed {})",
         scfg.tenants.len(),

@@ -11,7 +11,9 @@
 //! projection → skip → LN → FFN (gelu) → skip. The LN+skip pairs are left
 //! unfused for the optimizer.
 
+use crate::graph::optimizer::{optimize, OptLevel};
 use crate::graph::{Activation, Graph, OpKind, TensorId};
+use std::collections::HashMap;
 
 /// Transformer architecture description.
 #[derive(Debug, Clone)]
@@ -51,6 +53,21 @@ impl TransformerCfg {
             kv_heads: if gqa { 8 } else { 32 },
             d_ff: 14336,
             vocab: 128256,
+        }
+    }
+
+    /// A deliberately tiny GPT-style config (2 layers, d=128) so serving
+    /// tests and sweeps can run thousands of decode steps in seconds
+    /// while exercising the exact same graph shapes as the real models.
+    pub fn tiny() -> Self {
+        TransformerCfg {
+            name: "gpt-tiny".into(),
+            layers: 2,
+            d_model: 128,
+            heads: 4,
+            kv_heads: 4,
+            d_ff: 256,
+            vocab: 256,
         }
     }
 
@@ -196,6 +213,53 @@ pub fn llama3(batch: usize, kv_len: usize, cfg: &TransformerCfg) -> Graph {
     transformer(batch, 1, kv_len, cfg)
 }
 
+/// Cache of **optimized decode-step graphs** keyed by (batch units, KV
+/// bucket) — the graph-reuse layer behind continuous batching.
+///
+/// Continuous batching submits one `transformer(batch, 1, kv)` step per
+/// iteration, with `batch` changing as streams join/retire and `kv`
+/// growing every step. Building + optimizing a fresh graph per iteration
+/// would dominate simulation wall-clock, so KV lengths are rounded up to
+/// `kv_block` (paged-attention-style block granularity: a kv of 130 with
+/// block 64 attends to 192 cached slots) and the optimized graph for each
+/// (batch, bucket) pair is built once, then cloned per submit.
+pub struct DecodeGraphCache {
+    cfg: TransformerCfg,
+    kv_block: usize,
+    cache: HashMap<(usize, usize), Graph>,
+    /// Graphs actually built + optimized (cache misses).
+    pub builds: u64,
+    /// Steps served from the cache.
+    pub hits: u64,
+}
+
+impl DecodeGraphCache {
+    pub fn new(cfg: TransformerCfg, kv_block: usize) -> Self {
+        DecodeGraphCache { cfg, kv_block: kv_block.max(1), cache: HashMap::new(), builds: 0, hits: 0 }
+    }
+
+    /// The KV length the decode-step graph is built for: `kv` rounded up
+    /// to the block granularity.
+    pub fn bucket_kv(&self, kv: usize) -> usize {
+        kv.max(1).div_ceil(self.kv_block) * self.kv_block
+    }
+
+    /// An optimized one-token decode-step graph for `batch` streams
+    /// attending to (at least) `kv` cached tokens.
+    pub fn step(&mut self, batch: usize, kv: usize) -> Graph {
+        let key = (batch.max(1), self.bucket_kv(kv));
+        if let Some(g) = self.cache.get(&key) {
+            self.hits += 1;
+            return g.clone();
+        }
+        let mut g = transformer(key.0, 1, key.1, &self.cfg);
+        optimize(&mut g, OptLevel::Extended);
+        self.builds += 1;
+        self.cache.insert(key, g.clone());
+        g
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +343,36 @@ mod tests {
         assert!(report.ln_skip_fused > 0);
         g.validate().unwrap();
         g.topo_order().unwrap();
+    }
+
+    #[test]
+    fn decode_cache_reuses_within_kv_block() {
+        let mut c = DecodeGraphCache::new(TransformerCfg::tiny(), 64);
+        assert_eq!(c.bucket_kv(1), 64);
+        assert_eq!(c.bucket_kv(64), 64);
+        assert_eq!(c.bucket_kv(65), 128);
+        // Same batch, kv within one block: one build, then hits.
+        let a = c.step(2, 10);
+        let b = c.step(2, 63);
+        assert_eq!(c.builds, 1);
+        assert_eq!(c.hits, 1);
+        assert_eq!(a.name, b.name);
+        // Crossing the block or changing batch builds anew.
+        c.step(2, 65);
+        c.step(3, 10);
+        assert_eq!(c.builds, 3);
+        // Cached graphs are valid and simulate-ready.
+        a.validate().unwrap();
+        a.topo_order().unwrap();
+    }
+
+    #[test]
+    fn tiny_cfg_is_actually_tiny() {
+        let p = TransformerCfg::tiny().params();
+        assert!(p < 1_000_000, "tiny cfg has {p} params");
+        let g = transformer(1, 1, 64, &TransformerCfg::tiny());
+        g.validate().unwrap();
+        g.infer_shapes().unwrap();
     }
 
     #[test]

@@ -13,14 +13,15 @@ pub mod gpt;
 pub mod resnet;
 
 use crate::graph::Graph;
-pub use gpt::{gpt3_small_decode, gpt3_small_prefill, llama3, TransformerCfg};
+pub use gpt::{gpt3_small_decode, gpt3_small_prefill, llama3, DecodeGraphCache, TransformerCfg};
 pub use resnet::resnet50;
 
 /// Resolve a model name from a trace file into a graph.
 ///
 /// Recognized: `resnet50`, `gpt3-small-prefill` (512-token prompt),
 /// `gpt3-small-decode` (512-token KV), `llama3-8b-gqa`, `llama3-8b-mha`
-/// (1023-token KV), `mlp` (tiny smoke model).
+/// (1023-token KV), `gpt-tiny-decode` (a 2-layer serving-test
+/// transformer, 64-token KV), `mlp` (tiny smoke model).
 pub fn by_name(name: &str, batch: usize) -> anyhow::Result<Graph> {
     Ok(match name {
         "resnet50" => resnet50(batch),
@@ -28,9 +29,24 @@ pub fn by_name(name: &str, batch: usize) -> anyhow::Result<Graph> {
         "gpt3-small-decode" => gpt3_small_decode(batch, 512),
         "llama3-8b-gqa" => llama3(batch, 1023, &TransformerCfg::llama3_8b(true)),
         "llama3-8b-mha" => llama3(batch, 1023, &TransformerCfg::llama3_8b(false)),
+        "gpt-tiny-decode" => gpt::transformer(batch, 1, 64, &TransformerCfg::tiny()),
         "mlp" => mlp(batch, 256, 4),
         other => anyhow::bail!("unknown model '{other}'"),
     })
+}
+
+/// The transformer architecture behind a zoo model name, for generative
+/// (iterative decode) serving — `None` for non-autoregressive models.
+/// Continuous batching needs this to build per-iteration decode steps
+/// with a growing KV length instead of one frozen whole graph.
+pub fn decode_cfg(name: &str) -> Option<TransformerCfg> {
+    match name {
+        "gpt3-small-decode" | "gpt3-small-prefill" => Some(TransformerCfg::gpt3_small()),
+        "llama3-8b-gqa" => Some(TransformerCfg::llama3_8b(true)),
+        "llama3-8b-mha" => Some(TransformerCfg::llama3_8b(false)),
+        "gpt-tiny-decode" => Some(TransformerCfg::tiny()),
+        _ => None,
+    }
 }
 
 /// A small MLP for smoke tests and the quickstart example.
@@ -62,6 +78,7 @@ mod tests {
             "gpt3-small-decode",
             "llama3-8b-gqa",
             "llama3-8b-mha",
+            "gpt-tiny-decode",
             "mlp",
         ] {
             let g = by_name(name, 1).unwrap();
@@ -74,6 +91,15 @@ mod tests {
     #[test]
     fn unknown_name_rejected() {
         assert!(by_name("alexnet", 1).is_err());
+    }
+
+    #[test]
+    fn decode_cfg_covers_transformers_only() {
+        for name in ["gpt3-small-decode", "llama3-8b-gqa", "llama3-8b-mha", "gpt-tiny-decode"] {
+            assert!(decode_cfg(name).is_some(), "{name}");
+        }
+        assert!(decode_cfg("resnet50").is_none());
+        assert!(decode_cfg("mlp").is_none());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 pub mod policy;
 
-pub use policy::{Fcfs, Policy, Spatial, TimeShared};
+pub use policy::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
 
 use crate::graph::Graph;
 use crate::lowering::{lower_node, AddressMap, JobRef, LoweringParams, Tile};
@@ -29,6 +29,11 @@ pub struct Request {
     pub tenant: usize,
     pub graph: Graph,
     pub arrival: Cycle,
+    /// Latency deadline in absolute cycles, when the submitter knows one
+    /// (the serve driver sets `oldest member arrival + tenant SLO`).
+    /// Consumed by deadline-aware policies ([`SloSlack`]); ignored
+    /// otherwise.
+    pub deadline: Option<Cycle>,
     pub started_at: Option<Cycle>,
     pub finished_at: Option<Cycle>,
     amap: AddressMap,
@@ -69,11 +74,27 @@ pub struct GlobalScheduler {
     /// out per-request; tenants' regions are disjoint so contention is
     /// real, not false sharing).
     next_base: u64,
+    /// Prefix cursors: every request below `started_below` has been
+    /// activated, every request below `done_below` has completed. Both
+    /// properties never revert, and serving workloads (one scheduler
+    /// request per decode step, retired roughly in submission order)
+    /// would otherwise make the per-iteration scans here O(total
+    /// requests ever submitted).
+    started_below: usize,
+    done_below: usize,
 }
 
 impl GlobalScheduler {
     pub fn new(params: LoweringParams, policy: Box<dyn Policy>) -> Self {
-        GlobalScheduler { requests: Vec::new(), params, policy, completed: Vec::new(), next_base: 0 }
+        GlobalScheduler {
+            requests: Vec::new(),
+            params,
+            policy,
+            completed: Vec::new(),
+            next_base: 0,
+            started_below: 0,
+            done_below: 0,
+        }
     }
 
     /// Register a request arriving at `arrival`. Returns its id.
@@ -99,6 +120,7 @@ impl GlobalScheduler {
             tenant,
             graph,
             arrival,
+            deadline: None,
             started_at: None,
             finished_at: None,
             amap,
@@ -112,10 +134,21 @@ impl GlobalScheduler {
         id
     }
 
+    /// Attach a latency deadline (absolute cycles) to request `id` for
+    /// deadline-aware policies.
+    pub fn set_deadline(&mut self, id: usize, deadline: Cycle) {
+        self.requests[id].deadline = Some(deadline);
+    }
+
     /// Activate requests whose arrival time has passed: lower their
     /// zero-indegree nodes into the ready queue.
     pub fn activate_arrivals(&mut self, now: Cycle) {
-        for r in 0..self.requests.len() {
+        while self.started_below < self.requests.len()
+            && self.requests[self.started_below].started_at.is_some()
+        {
+            self.started_below += 1;
+        }
+        for r in self.started_below..self.requests.len() {
             let req = &self.requests[r];
             if req.arrival > now || req.started_at.is_some() {
                 continue;
@@ -181,18 +214,26 @@ impl GlobalScheduler {
     }
 
     /// True when all registered requests have completed.
-    pub fn all_done(&self) -> bool {
-        self.requests.iter().all(|r| r.done())
+    pub fn all_done(&mut self) -> bool {
+        while self.done_below < self.requests.len() && self.requests[self.done_below].done() {
+            self.done_below += 1;
+        }
+        self.requests[self.done_below..].iter().all(|r| r.done())
     }
 
-    /// True if any activated request has dispatchable tiles.
+    /// True if any activated request has dispatchable tiles. (Done
+    /// requests have empty ready queues, so skipping the done prefix is
+    /// exact.)
     pub fn has_ready_tiles(&self) -> bool {
-        self.requests.iter().any(|r| r.started_at.is_some() && r.has_ready())
+        self.requests[self.done_below..]
+            .iter()
+            .any(|r| r.started_at.is_some() && r.has_ready())
     }
 
-    /// Earliest future arrival, or NEVER.
+    /// Earliest future arrival, or NEVER. (The started prefix is already
+    /// activated, so skipping it is exact.)
     pub fn next_arrival(&self, now: Cycle) -> Cycle {
-        self.requests
+        self.requests[self.started_below..]
             .iter()
             .filter(|r| r.started_at.is_none() && r.arrival > now)
             .map(|r| r.arrival)
@@ -202,7 +243,9 @@ impl GlobalScheduler {
 
     /// Requests not yet activated whose arrival has passed (need a tick).
     pub fn has_pending_activation(&self, now: Cycle) -> bool {
-        self.requests.iter().any(|r| r.started_at.is_none() && r.arrival <= now)
+        self.requests[self.started_below..]
+            .iter()
+            .any(|r| r.started_at.is_none() && r.arrival <= now)
     }
 
     /// Drain ids of requests completed since the last call.

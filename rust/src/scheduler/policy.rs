@@ -8,13 +8,19 @@
 //!   times differ across models.
 //! - [`Spatial`] — partitions cores among tenants: concurrent execution
 //!   with DRAM/NoC interference (Fig. 4's case study).
+//! - [`SloSlack`] — latency-aware serving policy: dispatches tiles from
+//!   the request whose deadline slack (SLO deadline minus current
+//!   simulated time) is smallest — earliest-deadline-first over the
+//!   ready set. Deadlines come from [`Request::deadline`] when the
+//!   submitter provided one (the serve driver always does), with a
+//!   per-tenant `arrival + SLO` fallback.
 //!
 //! New policies implement [`Policy`] — the paper's advertised extension
 //! interface.
 
 use super::Request;
 use crate::lowering::Tile;
-use crate::Cycle;
+use crate::{Cycle, NEVER};
 
 /// Picks the next tile for a core with a free slot.
 pub trait Policy {
@@ -27,11 +33,15 @@ pub trait Policy {
 /// First-come-first-served across all active requests.
 pub struct Fcfs {
     rr: usize,
+    /// Completed-prefix cursor (see [`SloSlack`]): serving workloads
+    /// submit one request per decode step and retire them roughly in id
+    /// order, so scanning from 0 every pick would grow with run length.
+    done_below: usize,
 }
 
 impl Fcfs {
     pub fn new() -> Self {
-        Fcfs { rr: 0 }
+        Fcfs { rr: 0, done_below: 0 }
     }
 }
 
@@ -43,10 +53,22 @@ impl Default for Fcfs {
 
 impl Policy for Fcfs {
     fn pick(&mut self, _core: usize, requests: &mut [Request], _now: Cycle) -> Option<Tile> {
-        // Oldest active request with ready tiles first.
         let n = requests.len();
-        for k in 0..n {
-            let r = (self.rr + k) % n;
+        while self.done_below < n && requests[self.done_below].done() {
+            self.done_below += 1;
+        }
+        if self.done_below >= n {
+            return None;
+        }
+        // Round-robin over the live suffix (done requests are never
+        // pickable, so skipping them preserves FCFS semantics exactly).
+        let live = n - self.done_below;
+        if self.rr < self.done_below {
+            self.rr = self.done_below;
+        }
+        // Oldest active request with ready tiles first.
+        for k in 0..live {
+            let r = self.done_below + (self.rr - self.done_below + k) % live;
             if requests[r].started_at.is_some() && requests[r].has_ready() {
                 // Keep draining the same request until empty (FCFS), but
                 // remember where we were for fairness across calls when
@@ -68,11 +90,13 @@ impl Policy for Fcfs {
 /// tiles (its current layer drained).
 pub struct TimeShared {
     active: Option<usize>,
+    /// Completed-prefix cursor (see [`Fcfs`]).
+    done_below: usize,
 }
 
 impl TimeShared {
     pub fn new() -> Self {
-        TimeShared { active: None }
+        TimeShared { active: None, done_below: 0 }
     }
 }
 
@@ -96,13 +120,12 @@ impl Policy for TimeShared {
             }
             self.active = None;
         }
-        // Rotate to the next request with work (round-robin from the last
-        // active id for fairness).
+        // Rotate to the next request with work.
         let n = requests.len();
-        if n == 0 {
-            return None;
+        while self.done_below < n && requests[self.done_below].done() {
+            self.done_below += 1;
         }
-        for r in 0..n {
+        for r in self.done_below..n {
             if requests[r].started_at.is_some() && requests[r].has_ready() {
                 self.active = Some(r);
                 return requests[r].ready.pop_front();
@@ -120,18 +143,23 @@ impl Policy for TimeShared {
 /// core `c` may execute.
 pub struct Spatial {
     core_tenant: Vec<usize>,
+    /// Completed-prefix cursor (see [`Fcfs`]).
+    done_below: usize,
 }
 
 impl Spatial {
     pub fn new(core_tenant: Vec<usize>) -> Self {
-        Spatial { core_tenant }
+        Spatial { core_tenant, done_below: 0 }
     }
 }
 
 impl Policy for Spatial {
     fn pick(&mut self, core: usize, requests: &mut [Request], _now: Cycle) -> Option<Tile> {
         let tenant = *self.core_tenant.get(core)?;
-        requests
+        while self.done_below < requests.len() && requests[self.done_below].done() {
+            self.done_below += 1;
+        }
+        requests[self.done_below..]
             .iter_mut()
             .find(|r| r.tenant == tenant && r.started_at.is_some() && r.has_ready())
             .and_then(|r| r.ready.pop_front())
@@ -139,6 +167,63 @@ impl Policy for Spatial {
 
     fn name(&self) -> &'static str {
         "spatial"
+    }
+}
+
+/// SLO-slack scheduling: always serve the ready request with the least
+/// slack. Since slack = deadline − now and `now` is common to every
+/// candidate at pick time, minimizing slack is exactly minimizing the
+/// absolute deadline, so the policy is earliest-deadline-first over
+/// requests that currently have dispatchable tiles. Ties break toward
+/// the older request id, which degenerates to FCFS when no deadlines are
+/// known.
+pub struct SloSlack {
+    /// Per-tenant SLO budget in cycles, for requests submitted without an
+    /// explicit [`Request::deadline`] (fallback deadline = arrival +
+    /// budget; unknown tenants never become urgent).
+    slo_cycles: Vec<Cycle>,
+    /// Scan cursor: every request below this index is done. Serving
+    /// workloads submit one scheduler request per decode step and mostly
+    /// retire them in id order, so without this the per-pick scan would
+    /// grow linearly with every step ever submitted.
+    done_below: usize,
+}
+
+impl SloSlack {
+    pub fn new(slo_cycles: Vec<Cycle>) -> Self {
+        SloSlack { slo_cycles, done_below: 0 }
+    }
+
+    fn deadline(&self, r: &Request) -> Cycle {
+        r.deadline.unwrap_or_else(|| {
+            r.arrival
+                .saturating_add(self.slo_cycles.get(r.tenant).copied().unwrap_or(NEVER))
+        })
+    }
+}
+
+impl Policy for SloSlack {
+    fn pick(&mut self, _core: usize, requests: &mut [Request], _now: Cycle) -> Option<Tile> {
+        // Advance past the completed prefix once (done() never reverts).
+        while self.done_below < requests.len() && requests[self.done_below].done() {
+            self.done_below += 1;
+        }
+        let mut best: Option<(Cycle, usize)> = None;
+        for (i, r) in requests.iter().enumerate().skip(self.done_below) {
+            if r.started_at.is_none() || !r.has_ready() {
+                continue;
+            }
+            let d = self.deadline(r);
+            // Strict < keeps ties on the earlier request id (FCFS-ish).
+            if best.map_or(true, |(bd, _)| d < bd) {
+                best = Some((d, i));
+            }
+        }
+        requests[best?.1].ready.pop_front()
+    }
+
+    fn name(&self) -> &'static str {
+        "slo-slack"
     }
 }
 
@@ -217,6 +302,46 @@ mod tests {
         s.add_request(one_layer_graph("a"), 0, 0);
         s.activate_arrivals(0);
         assert!(s.pick_tile(5, 0).is_none());
+    }
+
+    #[test]
+    fn slo_slack_prefers_tightest_tenant_deadline() {
+        // Tenant 1 has a 1k-cycle SLO vs tenant 0's 1M: its later-arriving
+        // request still wins the next tile.
+        let mut s = sched_with(Box::new(SloSlack::new(vec![1_000_000, 1_000])));
+        s.add_request(one_layer_graph("loose"), 0, 0);
+        s.add_request(one_layer_graph("tight"), 10, 1);
+        s.activate_arrivals(10);
+        let t = s.pick_tile(0, 10).unwrap();
+        assert_eq!(t.job.request_id, 1);
+    }
+
+    #[test]
+    fn slo_slack_explicit_deadline_overrides_fallback() {
+        let mut s = sched_with(Box::new(SloSlack::new(vec![1_000])));
+        let a = s.add_request(one_layer_graph("a"), 0, 0);
+        let b = s.add_request(one_layer_graph("b"), 0, 0);
+        s.set_deadline(a, 5_000);
+        s.set_deadline(b, 100);
+        s.activate_arrivals(0);
+        let t = s.pick_tile(0, 0).unwrap();
+        assert_eq!(t.job.request_id, b);
+        // Once b's tiles drain, a is served.
+        while let Some(t) = s.pick_tile(0, 0) {
+            if t.job.request_id == a {
+                return;
+            }
+        }
+        panic!("a never scheduled");
+    }
+
+    #[test]
+    fn slo_slack_without_deadlines_degenerates_to_fcfs() {
+        let mut s = sched_with(Box::new(SloSlack::new(Vec::new())));
+        s.add_request(one_layer_graph("a"), 0, 0);
+        s.add_request(one_layer_graph("b"), 0, 0);
+        s.activate_arrivals(0);
+        assert_eq!(s.pick_tile(0, 0).unwrap().job.request_id, 0);
     }
 
     #[test]

@@ -1,14 +1,23 @@
-//! Dynamic batching with admission control, per (tenant, model) queue.
+//! Dynamic batching with admission control, per (tenant, model) queue —
+//! and the in-flight decode pool behind **continuous batching**.
 //!
-//! Arrivals accumulate until either `max_batch` units are queued or
-//! `timeout` cycles have passed since the **oldest** queued request
-//! arrived, whichever comes first — the classic serving-system
+//! Static path: arrivals accumulate until either `max_batch` units are
+//! queued or `timeout` cycles have passed since the **oldest** queued
+//! request arrived, whichever comes first — the classic serving-system
 //! latency/throughput trade-off. Arrivals past `max_queue` depth are
 //! rejected (admission control) and only counted, never simulated.
 //!
-//! The batcher is pure bookkeeping: it never touches the scheduler or the
-//! model zoo. [`crate::serve::ServeDriver`] materializes each flushed
-//! [`Batch`] into a batched [`crate::graph::Graph`] and submits it.
+//! Continuous path: admitted requests become [`Stream`]s in an
+//! [`InflightPool`]. The pool runs one decode step per iteration for its
+//! whole membership; new streams merge at iteration boundaries
+//! ([`Batcher::take_upto`] pulls them from the admission queue as
+//! capacity frees up) and each stream retires independently the moment
+//! its own token budget is spent — no whole-batch drain barrier.
+//!
+//! Both are pure bookkeeping: they never touch the scheduler or the
+//! model zoo. [`crate::serve::ServeDriver`] materializes flushed
+//! [`Batch`]es / pool decode steps into [`crate::graph::Graph`]s and
+//! submits them.
 
 use crate::Cycle;
 use std::collections::VecDeque;
@@ -107,6 +116,33 @@ impl Batcher {
         Some(Batch { members, units })
     }
 
+    /// Pop queued requests FIFO while their summed units fit in `budget`
+    /// (the continuous-batching merge: pull as much as the in-flight pool
+    /// has room for). A front request larger than the whole budget is
+    /// taken alone when `allow_oversized` is set (mirrors the oversized
+    /// [`Batcher::flush`] rule — the caller passes `pool.is_empty()`), and
+    /// blocks the queue otherwise, preserving FIFO order.
+    pub fn take_upto(&mut self, budget: usize, allow_oversized: bool) -> Vec<Pending> {
+        let mut out = Vec::new();
+        let mut left = budget;
+        while let Some(&p) = self.queue.front() {
+            if p.size <= left {
+                left -= p.size;
+            } else if out.is_empty() && allow_oversized {
+                left = 0;
+            } else {
+                break;
+            }
+            self.queued_units -= p.size;
+            out.push(p);
+            self.queue.pop_front();
+            if left == 0 {
+                break;
+            }
+        }
+        out
+    }
+
     pub fn queued_requests(&self) -> usize {
         self.queue.len()
     }
@@ -118,6 +154,128 @@ impl Batcher {
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
+}
+
+/// One decode stream resident in the in-flight pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stream {
+    /// Cycle the request arrived (end-to-end latency clock).
+    pub arrival: Cycle,
+    /// Cycle the stream merged into the running batch (queueing delay).
+    pub joined: Cycle,
+    /// Batch units this stream occupies in every decode step.
+    pub units: usize,
+    /// Current KV-cache length; grows by one per completed step.
+    pub kv: usize,
+    /// Decode steps still to run; the stream retires when it hits zero.
+    pub remaining: usize,
+    /// Completion cycle of the stream's first decode step (TTFT), once
+    /// known.
+    pub first_token_at: Option<Cycle>,
+}
+
+/// The in-flight pool behind continuous batching: the set of decode
+/// streams advancing together, one token per iteration.
+///
+/// Unlike a flushed [`Batch`], membership is dynamic — streams join at
+/// iteration boundaries ([`InflightPool::join`]) whenever units are free,
+/// and [`InflightPool::step_done`] retires each stream independently the
+/// moment its token budget is spent. Join order is preserved, so metrics
+/// attribution is deterministic.
+pub struct InflightPool {
+    /// Capacity in batch units (the decode step's maximum batch size).
+    pub max_units: usize,
+    streams: Vec<Stream>,
+    units: usize,
+}
+
+impl InflightPool {
+    pub fn new(max_units: usize) -> Self {
+        InflightPool { max_units: max_units.max(1), streams: Vec::new(), units: 0 }
+    }
+
+    /// Occupied units (the batch dimension of the next decode step).
+    pub fn units(&self) -> usize {
+        self.units
+    }
+
+    /// Free units available to joining streams this iteration.
+    pub fn capacity_left(&self) -> usize {
+        self.max_units.saturating_sub(self.units)
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    pub fn streams(&self) -> &[Stream] {
+        &self.streams
+    }
+
+    /// Merge an admitted request into the running batch at `now`. The
+    /// stream starts at `kv_init` cached tokens and will run
+    /// `decode_tokens` steps (at least one).
+    pub fn join(&mut self, p: Pending, now: Cycle, kv_init: usize, decode_tokens: usize) {
+        self.units += p.size;
+        self.streams.push(Stream {
+            arrival: p.arrival,
+            joined: now,
+            units: p.size,
+            kv: kv_init.max(1),
+            remaining: decode_tokens.max(1),
+            first_token_at: None,
+        });
+    }
+
+    /// Longest KV length in the pool (the decode step attends to this).
+    pub fn max_kv(&self) -> usize {
+        self.streams.iter().map(|s| s.kv).max().unwrap_or(0)
+    }
+
+    /// Earliest member arrival — drives the pool's deadline under the
+    /// SLO-slack scheduling policy.
+    pub fn oldest_arrival(&self) -> Option<Cycle> {
+        self.streams.iter().map(|s| s.arrival).min()
+    }
+
+    /// Account one completed decode step at `now`: every member's KV grows
+    /// by one, its remaining budget drops by one, and its TTFT is stamped
+    /// if this was its first step. The outcome reports retirements and
+    /// first-step completions so metric recording lives in one place with
+    /// the stamping (rather than callers re-deriving membership).
+    pub fn step_done(&mut self, now: Cycle) -> StepOutcome {
+        let mut out = StepOutcome { retired: Vec::new(), first_tokens: Vec::new() };
+        let mut kept = Vec::with_capacity(self.streams.len());
+        for mut s in self.streams.drain(..) {
+            s.kv += 1;
+            s.remaining -= 1;
+            if s.first_token_at.is_none() {
+                s.first_token_at = Some(now);
+                out.first_tokens.push(s.arrival);
+            }
+            if s.remaining == 0 {
+                out.retired.push(s);
+            } else {
+                kept.push(s);
+            }
+        }
+        self.streams = kept;
+        self.units = self.streams.iter().map(|s| s.units).sum();
+        out
+    }
+}
+
+/// What one completed decode step did to the pool.
+pub struct StepOutcome {
+    /// Streams whose token budget is now spent, in join order.
+    pub retired: Vec<Stream>,
+    /// Arrival cycles of the streams that just completed their *first*
+    /// decode step (TTFT = step-completion cycle − arrival).
+    pub first_tokens: Vec<Cycle>,
 }
 
 #[cfg(test)]
@@ -193,5 +351,124 @@ mod tests {
         // Draining frees capacity again.
         b.flush(2000).unwrap();
         assert!(b.offer(p(4, 1)));
+    }
+
+    #[test]
+    fn empty_queue_never_flushes_on_timeout() {
+        // A timeout deadline with nothing queued must not produce a batch
+        // (ready_at is None, flush is None — at any time).
+        let mut b = Batcher::new(4, 100, 8);
+        assert_eq!(b.ready_at(0), None);
+        assert!(b.flush(0).is_none());
+        assert!(b.flush(1_000_000).is_none());
+        // And after a full drain the queue is empty again, not due.
+        b.offer(p(0, 1));
+        b.flush(200).unwrap();
+        assert_eq!(b.ready_at(500), None);
+        assert!(b.flush(500).is_none());
+    }
+
+    #[test]
+    fn ready_at_monotone_in_now() {
+        // For a fixed queue state, ready_at never moves earlier as `now`
+        // advances — the event-horizon fast-forward relies on this.
+        let mut b = Batcher::new(4, 1000, 8);
+        b.offer(p(100, 2));
+        let mut prev = 0;
+        for now in [0, 100, 500, 1099, 1100, 5000] {
+            let d = b.ready_at(now).unwrap();
+            assert!(d >= prev, "ready_at({now}) = {d} moved earlier than {prev}");
+            assert!(d >= now.min(1100), "ready_at({now}) = {d} already past");
+            prev = d;
+        }
+        // Threshold met: due immediately, still monotone (tracks now).
+        b.offer(p(200, 2));
+        assert_eq!(b.ready_at(300), Some(300));
+        assert_eq!(b.ready_at(400), Some(400));
+    }
+
+    #[test]
+    fn take_upto_respects_budget_and_fifo() {
+        let mut b = Batcher::new(64, 1000, 64);
+        b.offer(p(0, 2));
+        b.offer(p(1, 3));
+        b.offer(p(2, 2));
+        // Budget 5 takes exactly the first two, FIFO.
+        let taken = b.take_upto(5, false);
+        assert_eq!(taken, vec![p(0, 2), p(1, 3)]);
+        assert_eq!(b.queued_units(), 2);
+        // Budget smaller than the front blocks without oversize permission.
+        assert!(b.take_upto(1, false).is_empty());
+        assert_eq!(b.queued_requests(), 1);
+        // ...and is taken alone with it.
+        assert_eq!(b.take_upto(1, true), vec![p(2, 2)]);
+        assert!(b.is_empty());
+        assert_eq!(b.queued_units(), 0);
+    }
+
+    #[test]
+    fn pool_joins_and_retires_in_order() {
+        let mut pool = InflightPool::new(4);
+        pool.join(p(0, 1), 10, 8, 2); // retires after 2 steps
+        pool.join(p(5, 1), 10, 8, 3); // retires after 3 steps
+        assert_eq!(pool.units(), 2);
+        assert_eq!(pool.capacity_left(), 2);
+        assert_eq!(pool.oldest_arrival(), Some(0));
+
+        let out = pool.step_done(100);
+        assert!(out.retired.is_empty());
+        // Both founding members completed their first step together.
+        assert_eq!(out.first_tokens, vec![0, 5]);
+        // Joiner mid-generation: enters at its own kv, not the pool's.
+        pool.join(p(90, 1), 101, 8, 2);
+        assert_eq!(pool.len(), 3);
+
+        let out = pool.step_done(200);
+        assert_eq!(out.retired.len(), 1, "first joiner retires first");
+        assert_eq!(out.retired[0].arrival, 0);
+        assert_eq!(out.retired[0].first_token_at, Some(100));
+        // The mid-generation joiner's first step is this one.
+        assert_eq!(out.first_tokens, vec![90]);
+        assert_eq!(pool.oldest_arrival(), Some(5));
+
+        let out = pool.step_done(300);
+        // Second joiner (3 steps) and mid-generation joiner (2 steps)
+        // retire together, join order preserved.
+        assert_eq!(out.retired.len(), 2);
+        assert_eq!(out.retired[0].arrival, 5);
+        assert_eq!(out.retired[1].arrival, 90);
+        assert_eq!(out.retired[1].first_token_at, Some(200));
+        assert!(out.first_tokens.is_empty());
+        assert!(pool.is_empty());
+        assert_eq!(pool.units(), 0);
+    }
+
+    #[test]
+    fn pool_kv_grows_per_request() {
+        let mut pool = InflightPool::new(8);
+        pool.join(p(0, 1), 0, 100, 4);
+        pool.step_done(10);
+        pool.step_done(20);
+        // Late joiner starts fresh while the veteran has grown.
+        pool.join(p(15, 1), 21, 50, 4);
+        assert_eq!(pool.streams()[0].kv, 102);
+        assert_eq!(pool.streams()[1].kv, 50);
+        assert_eq!(pool.max_kv(), 102);
+        pool.step_done(30);
+        assert_eq!(pool.streams()[0].kv, 103);
+        assert_eq!(pool.streams()[1].kv, 51);
+    }
+
+    #[test]
+    fn pool_units_track_multi_unit_streams() {
+        let mut pool = InflightPool::new(8);
+        pool.join(p(0, 3), 0, 8, 1);
+        pool.join(p(1, 2), 0, 8, 5);
+        assert_eq!(pool.units(), 5);
+        assert_eq!(pool.capacity_left(), 3);
+        let retired = pool.step_done(10).retired;
+        assert_eq!(retired[0].units, 3);
+        assert_eq!(pool.units(), 2, "retired units freed");
+        assert_eq!(pool.capacity_left(), 6);
     }
 }

@@ -1,41 +1,80 @@
 //! The open-loop serving driver: plugs [`TrafficGen`] + [`Batcher`] into
 //! the simulator's event loop via the [`Driver`] time-trigger hooks.
 //!
-//! Per tenant, each event-loop tick:
-//! 1. arrivals whose time has come are offered to the tenant's batching
-//!    queue (or rejected at the admission cap),
-//! 2. due batches (unit threshold hit, or batch timeout expired) are
-//!    materialized into a batched model-zoo [`crate::graph::Graph`] and
-//!    submitted through [`GlobalScheduler::add_request`],
-//! 3. completions are attributed back to every batched member, giving
-//!    per-request queueing delay and end-to-end latency.
+//! Three serving shapes, selected per tenant by
+//! [`crate::config::serve::TenantLoadConfig`]:
+//!
+//! - **Static whole-graph** (`mode = "static"`, `decode_tokens = 0`):
+//!   arrivals batch up (size threshold or timeout), each flushed batch is
+//!   materialized into one batched model-zoo [`crate::graph::Graph`] and
+//!   submitted through [`GlobalScheduler::add_request`] — the PR 1 path.
+//! - **Whole-batch decode** (`mode = "static"`, `decode_tokens > 0`):
+//!   the flushed batch becomes a generation: `decode_tokens` sequential
+//!   one-token decode steps with the KV cache growing each step. New
+//!   arrivals wait for the whole running batch to drain before the next
+//!   batch forms — the classic request-level batching baseline.
+//! - **Continuous batching** (`mode = "continuous"`): the in-flight
+//!   [`InflightPool`] merges admitted requests into the running batch at
+//!   every iteration boundary and retires each stream independently the
+//!   moment its token budget is spent. Per-request KV lengths are
+//!   tracked; decode-step graphs are reused through
+//!   [`crate::models::DecodeGraphCache`]'s KV bucketing.
+//!
+//! Every submitted request carries a deadline (`oldest member arrival +
+//! tenant SLO`) via [`GlobalScheduler::set_deadline`], which the
+//! [`crate::scheduler::SloSlack`] policy turns into slack-ordered tile
+//! dispatch.
 //!
 //! [`ServeDriver::next_event`] reports the earliest pending arrival or
 //! flush deadline, so the event-horizon fast-forward stays exact even
-//! though this work is created mid-run. Everything is a pure function of
-//! the [`ServeConfig`] seed: same seed, same report.
+//! though this work is created mid-run; decode iterations are
+//! completion-driven (the next step launches inside
+//! [`Driver::on_request_done`]). Everything is a pure function of the
+//! [`ServeConfig`] seed: same seed, same report.
 
-use super::batcher::{Batcher, Pending};
+use super::batcher::{Batcher, InflightPool, Pending};
 use super::slo::{SloReport, Summary, TenantReport};
 use super::traffic::TrafficGen;
 use crate::config::serve::ServeConfig;
 use crate::config::NpuConfig;
 use crate::graph::optimizer::{optimize, OptLevel};
-use crate::models;
+use crate::models::{self, DecodeGraphCache};
 use crate::scheduler::{GlobalScheduler, Policy};
 use crate::sim::{Driver, Simulator};
 use crate::{Cycle, NEVER};
 use anyhow::Result;
 use std::collections::HashMap;
 
+/// Generative-serving state for one tenant (absent on the whole-graph
+/// path).
+struct DecodeState {
+    cache: DecodeGraphCache,
+    pool: InflightPool,
+    /// Join policy: merge at every iteration boundary (continuous) vs
+    /// only when the pool has fully drained (whole-batch baseline).
+    continuous: bool,
+    decode_tokens: usize,
+    kv_init: usize,
+    /// Request id of the in-flight decode step, if any. At most one step
+    /// per tenant is in flight — the iteration boundary is its completion.
+    step_inflight: Option<usize>,
+    /// Completion cycle of the previous step (TBT); cleared when the pool
+    /// goes idle so gaps across idle periods are not counted.
+    last_step_done: Option<Cycle>,
+    steps: u64,
+}
+
 struct TenantState {
     model: String,
+    mode: String,
     gen: TrafficGen,
     batcher: Batcher,
     slo_cycles: Cycle,
     /// Optimized batched graphs by unit count: the zoo builds and the
     /// optimizer runs once per (model, units), then clones per submit.
+    /// (Whole-graph path; decode steps cache inside [`DecodeState`].)
     graph_cache: HashMap<usize, crate::graph::Graph>,
+    decode: Option<DecodeState>,
     offered: u64,
     completed: u64,
     within_slo: u64,
@@ -43,12 +82,15 @@ struct TenantState {
     units_submitted: u64,
     e2e: Vec<u64>,
     queue_delay: Vec<u64>,
+    ttft: Vec<u64>,
+    tbt: Vec<u64>,
 }
 
-struct Inflight {
-    tenant: usize,
-    submitted: Cycle,
-    members: Vec<Pending>,
+enum Inflight {
+    /// A whole-graph batch: completion closes out every member.
+    Batch { tenant: usize, submitted: Cycle, members: Vec<Pending> },
+    /// One decode step of a tenant's in-flight pool.
+    DecodeStep { tenant: usize },
 }
 
 /// Open-loop serving driver (see module docs).
@@ -58,6 +100,56 @@ pub struct ServeDriver {
     duration: Cycle,
     inflight: HashMap<usize, Inflight>,
     injection_done: bool,
+}
+
+/// Iteration boundary for tenant `ti`: merge admitted requests into the
+/// in-flight pool per its join policy, then launch the next decode step
+/// if the pool has members. No-op while a step is in flight or for
+/// non-generative tenants.
+fn merge_and_launch(
+    ti: usize,
+    ts: &mut TenantState,
+    inflight: &mut HashMap<usize, Inflight>,
+    now: Cycle,
+    sched: &mut GlobalScheduler,
+) {
+    let Some(dec) = ts.decode.as_mut() else { return };
+    if dec.step_inflight.is_some() {
+        return;
+    }
+    if dec.continuous {
+        // Continuous batching: pull as much queued work as the pool has
+        // room for, immediately — no timeout wait.
+        let budget = dec.pool.capacity_left();
+        if budget > 0 {
+            for p in ts.batcher.take_upto(budget, dec.pool.is_empty()) {
+                ts.queue_delay.push(now - p.arrival);
+                dec.pool.join(p, now, dec.kv_init, dec.decode_tokens);
+            }
+        }
+    } else if dec.pool.is_empty() {
+        // Whole-batch decode: the next batch forms only once the previous
+        // generation fully drained, under the usual flush rules.
+        if let Some(batch) = ts.batcher.flush(now) {
+            for p in batch.members {
+                ts.queue_delay.push(now - p.arrival);
+                dec.pool.join(p, now, dec.kv_init, dec.decode_tokens);
+            }
+        }
+    }
+    if dec.pool.is_empty() {
+        return;
+    }
+    let units = dec.pool.units();
+    let g = dec.cache.step(units, dec.pool.max_kv());
+    let id = sched.add_request(g, now, ti);
+    let deadline = dec.pool.oldest_arrival().unwrap_or(now).saturating_add(ts.slo_cycles);
+    sched.set_deadline(id, deadline);
+    dec.step_inflight = Some(id);
+    dec.steps += 1;
+    ts.batches += 1;
+    ts.units_submitted += units as u64;
+    inflight.insert(id, Inflight::DecodeStep { tenant: ti });
 }
 
 impl ServeDriver {
@@ -72,18 +164,51 @@ impl ServeDriver {
         }
         let mut tenants = Vec::with_capacity(scfg.tenants.len());
         for (i, load) in scfg.tenants.iter().enumerate() {
-            // Validate the model name up front so on_tick can't fail.
-            models::by_name(&load.model, 1)?;
+            let continuous = match load.mode.as_str() {
+                "static" => false,
+                "continuous" => true,
+                other => {
+                    anyhow::bail!("tenant {i}: unknown batching mode '{other}' (static|continuous)")
+                }
+            };
+            if continuous && load.decode_tokens == 0 {
+                anyhow::bail!("tenant {i}: continuous batching requires decode_tokens > 0");
+            }
+            let decode = if load.decode_tokens > 0 {
+                let tcfg = models::decode_cfg(&load.model).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "tenant {i}: model '{}' has no decode architecture for generative \
+                         serving (decode_tokens > 0 needs a transformer)",
+                        load.model
+                    )
+                })?;
+                Some(DecodeState {
+                    cache: DecodeGraphCache::new(tcfg, load.kv_block),
+                    pool: InflightPool::new(load.max_batch),
+                    continuous,
+                    decode_tokens: load.decode_tokens,
+                    kv_init: load.kv_init,
+                    step_inflight: None,
+                    last_step_done: None,
+                    steps: 0,
+                })
+            } else {
+                // Validate the model name up front so on_tick can't fail.
+                models::by_name(&load.model, 1)?;
+                None
+            };
             // Decorrelate per-tenant streams without coupling them to
             // tenant count or order of construction.
             let seed = scfg.seed ^ (i as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03);
             let timeout = (load.batch_timeout_us * core_freq_ghz * 1e3).round() as Cycle;
             tenants.push(TenantState {
                 model: load.model.clone(),
+                mode: load.mode.clone(),
                 gen: TrafficGen::from_load(load, core_freq_ghz, seed)?,
                 batcher: Batcher::new(load.max_batch, timeout, load.max_queue),
-                slo_cycles: (scfg.tenant_slo_ms(i) * core_freq_ghz * 1e6).round() as Cycle,
+                slo_cycles: scfg.tenant_slo_cycles(i, core_freq_ghz),
                 graph_cache: HashMap::new(),
+                decode,
                 offered: 0,
                 completed: 0,
                 within_slo: 0,
@@ -91,6 +216,8 @@ impl ServeDriver {
                 units_submitted: 0,
                 e2e: Vec::new(),
                 queue_delay: Vec::new(),
+                ttft: Vec::new(),
+                tbt: Vec::new(),
             });
         }
         Ok(ServeDriver {
@@ -117,6 +244,7 @@ impl ServeDriver {
             .map(|(i, ts)| TenantReport {
                 tenant: i,
                 model: ts.model.clone(),
+                mode: ts.mode.clone(),
                 offered: ts.offered,
                 admitted: ts.batcher.admitted,
                 rejected: ts.batcher.rejected,
@@ -127,8 +255,11 @@ impl ServeDriver {
                 } else {
                     ts.units_submitted as f64 / ts.batches as f64
                 },
+                decode_steps: ts.decode.as_ref().map_or(0, |d| d.steps),
                 queue_delay: Summary::from_cycles(&ts.queue_delay, core_freq_ghz),
                 e2e: Summary::from_cycles(&ts.e2e, core_freq_ghz),
+                ttft: Summary::from_cycles(&ts.ttft, core_freq_ghz),
+                tbt: Summary::from_cycles(&ts.tbt, core_freq_ghz),
                 slo_ms: scfg.tenant_slo_ms(i),
                 slo_attainment: if ts.completed == 0 {
                     0.0
@@ -152,6 +283,7 @@ impl ServeDriver {
 
 impl Driver for ServeDriver {
     fn on_tick(&mut self, now: Cycle, sched: &mut GlobalScheduler) {
+        let inflight = &mut self.inflight;
         for (ti, ts) in self.tenants.iter_mut().enumerate() {
             // 1. Inject arrivals due now (inside the open-loop window).
             while let Some((t, size)) = ts.gen.peek() {
@@ -163,28 +295,45 @@ impl Driver for ServeDriver {
                 // Rejections are counted inside the batcher.
                 ts.batcher.offer(Pending { arrival: t, size });
             }
-            // 2. Flush every due batch into the scheduler.
-            while let Some(batch) = ts.batcher.flush(now) {
-                let model = &ts.model;
-                let g = ts
-                    .graph_cache
-                    .entry(batch.units)
-                    .or_insert_with(|| {
-                        let mut g = models::by_name(model, batch.units)
-                            .expect("model validated in ServeDriver::new");
-                        optimize(&mut g, OptLevel::Extended);
-                        g
-                    })
-                    .clone();
-                let id = sched.add_request(g, now, ti);
-                ts.batches += 1;
-                ts.units_submitted += batch.units as u64;
-                self.inflight
-                    .insert(id, Inflight { tenant: ti, submitted: now, members: batch.members });
+            if ts.decode.is_some() {
+                // 2a. Generative serving: merge + launch at the iteration
+                //     boundary (no-op while a step is in flight).
+                merge_and_launch(ti, ts, inflight, now, sched);
+            } else {
+                // 2b. Static whole-graph: flush every due batch.
+                while let Some(batch) = ts.batcher.flush(now) {
+                    let model = &ts.model;
+                    let g = ts
+                        .graph_cache
+                        .entry(batch.units)
+                        .or_insert_with(|| {
+                            let mut g = models::by_name(model, batch.units)
+                                .expect("model validated in ServeDriver::new");
+                            optimize(&mut g, OptLevel::Extended);
+                            g
+                        })
+                        .clone();
+                    let id = sched.add_request(g, now, ti);
+                    let deadline = batch
+                        .members
+                        .iter()
+                        .map(|m| m.arrival)
+                        .min()
+                        .unwrap_or(now)
+                        .saturating_add(ts.slo_cycles);
+                    sched.set_deadline(id, deadline);
+                    ts.batches += 1;
+                    ts.units_submitted += batch.units as u64;
+                    inflight.insert(
+                        id,
+                        Inflight::Batch { tenant: ti, submitted: now, members: batch.members },
+                    );
+                }
             }
         }
         self.injection_done = self.tenants.iter().all(|ts| {
             ts.batcher.is_empty()
+                && ts.decode.as_ref().map_or(true, |d| d.pool.is_empty())
                 && match ts.gen.peek() {
                     None => true,
                     Some((t, _)) => t >= self.duration,
@@ -192,18 +341,52 @@ impl Driver for ServeDriver {
         });
     }
 
-    fn on_request_done(&mut self, request_id: usize, now: Cycle, _sched: &mut GlobalScheduler) {
-        let Some(inf) = self.inflight.remove(&request_id) else {
-            return; // not ours (e.g. a co-running driver's request)
-        };
-        let ts = &mut self.tenants[inf.tenant];
-        for m in &inf.members {
-            let e2e = now - m.arrival;
-            ts.completed += 1;
-            ts.e2e.push(e2e);
-            ts.queue_delay.push(inf.submitted - m.arrival);
-            if e2e <= ts.slo_cycles {
-                ts.within_slo += 1;
+    fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler) {
+        match self.inflight.remove(&request_id) {
+            None => {} // not ours (e.g. a co-running driver's request)
+            Some(Inflight::Batch { tenant, submitted, members }) => {
+                let ts = &mut self.tenants[tenant];
+                for m in &members {
+                    let e2e = now - m.arrival;
+                    ts.completed += 1;
+                    ts.e2e.push(e2e);
+                    ts.queue_delay.push(submitted - m.arrival);
+                    if e2e <= ts.slo_cycles {
+                        ts.within_slo += 1;
+                    }
+                }
+            }
+            Some(Inflight::DecodeStep { tenant }) => {
+                let ts = &mut self.tenants[tenant];
+                let dec = ts.decode.as_mut().expect("decode step for non-generative tenant");
+                debug_assert_eq!(dec.step_inflight, Some(request_id));
+                dec.step_inflight = None;
+                if let Some(last) = dec.last_step_done {
+                    ts.tbt.push(now - last);
+                }
+                dec.last_step_done = Some(now);
+                // Advance the pool; streams completing their first step
+                // record TTFT, retired streams complete now.
+                let out = dec.pool.step_done(now);
+                for &arrival in &out.first_tokens {
+                    ts.ttft.push(now - arrival);
+                }
+                for s in out.retired {
+                    let e2e = now - s.arrival;
+                    ts.completed += 1;
+                    ts.e2e.push(e2e);
+                    if e2e <= ts.slo_cycles {
+                        ts.within_slo += 1;
+                    }
+                }
+                // The iteration boundary: newcomers merge and the next
+                // step launches in the same cycle.
+                merge_and_launch(tenant, ts, &mut self.inflight, now, sched);
+                let dec = self.tenants[tenant].decode.as_mut().unwrap();
+                if dec.step_inflight.is_none() {
+                    // Pool went idle: don't count the idle gap as TBT.
+                    dec.last_step_done = None;
+                }
             }
         }
     }
@@ -216,8 +399,24 @@ impl Driver for ServeDriver {
                     next = next.min(t);
                 }
             }
-            if let Some(d) = ts.batcher.ready_at(now) {
-                next = next.min(d);
+            match &ts.decode {
+                None => {
+                    if let Some(d) = ts.batcher.ready_at(now) {
+                        next = next.min(d);
+                    }
+                }
+                Some(dec) => {
+                    // Decode iterations are completion-driven; a timed
+                    // wake-up is only needed when no step is in flight and
+                    // queued work waits to form or join a pool.
+                    if dec.step_inflight.is_none() && !ts.batcher.is_empty() {
+                        if dec.continuous {
+                            next = next.min(now);
+                        } else if let Some(d) = ts.batcher.ready_at(now) {
+                            next = next.min(d);
+                        }
+                    }
+                }
             }
         }
         next
@@ -254,6 +453,17 @@ mod tests {
         b.process = "gamma".into();
         b.cv = 2.0;
         ServeConfig { seed: 7, duration_ms: 0.4, slo_ms: 1.0, tenants: vec![a, b] }
+    }
+
+    /// A single continuous-batching gpt-tiny tenant under constant load.
+    fn continuous_scenario() -> ServeConfig {
+        let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 4);
+        t.process = "constant".into();
+        t.max_batch = 4;
+        t.kv_init = 32;
+        t.kv_block = 32;
+        t.max_queue = 64;
+        ServeConfig { seed: 11, duration_ms: 0.05, slo_ms: 2.0, tenants: vec![t] }
     }
 
     #[test]
@@ -346,6 +556,75 @@ mod tests {
             a.tenants.iter().map(|t| t.offered).sum::<u64>(),
             b.tenants.iter().map(|t| t.offered).sum::<u64>()
         );
+    }
+
+    #[test]
+    fn continuous_conserves_and_reports_token_metrics() {
+        let rep =
+            run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &continuous_scenario())
+                .unwrap();
+        let t = &rep.tenants[0];
+        assert_eq!(t.mode, "continuous");
+        assert!(t.offered > 0, "no arrivals generated");
+        // Conservation holds for generative serving too.
+        assert_eq!(t.offered, t.admitted + t.rejected);
+        assert_eq!(t.completed, t.admitted, "every admitted stream retires");
+        assert_eq!(t.e2e.count as u64, t.completed);
+        // Every stream decodes: at least decode_tokens steps ran, and each
+        // completed stream recorded a first-token latency.
+        assert!(t.decode_steps >= 4, "decode steps {}", t.decode_steps);
+        assert_eq!(t.ttft.count as u64, t.completed);
+        assert!(t.ttft.p50_ms > 0.0);
+        // TTFT never exceeds the full-generation latency.
+        assert!(t.ttft.p50_ms <= t.e2e.p50_ms);
+        // Pool occupancy stays within the unit cap.
+        assert!(t.mean_batch_units >= 1.0 && t.mean_batch_units <= 4.0 + 1e-9);
+        // Consecutive-step gaps were observed.
+        assert!(t.tbt.count > 0);
+        assert!(t.tbt.p50_ms > 0.0);
+    }
+
+    #[test]
+    fn continuous_same_seed_identical_report() {
+        let scfg = continuous_scenario();
+        let a = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        let b = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn whole_batch_decode_drains_and_serializes_generations() {
+        // Same load as the continuous scenario but with request-level
+        // (whole-batch) generation: still conserves, and newcomers never
+        // merge into a running generation, so queueing delay stretches.
+        let mut scfg = continuous_scenario();
+        scfg.tenants[0].mode = "static".into();
+        scfg.tenants[0].batch_timeout_us = 10.0;
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        let t = &rep.tenants[0];
+        assert_eq!(t.mode, "static");
+        assert_eq!(t.offered, t.admitted + t.rejected);
+        assert_eq!(t.completed, t.admitted);
+        assert!(t.decode_steps >= 4);
+        assert_eq!(t.ttft.count as u64, t.completed);
+    }
+
+    #[test]
+    fn continuous_requires_transformer_and_tokens() {
+        // continuous + decode_tokens == 0 is rejected...
+        let mut t = TenantLoadConfig::poisson("gpt-tiny-decode", 1000.0);
+        t.mode = "continuous".into();
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
+        // ...as is a non-transformer model with decode_tokens > 0...
+        let t = TenantLoadConfig::continuous("resnet50", 1000.0, 8);
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
+        // ...and an unknown mode string.
+        let mut t = TenantLoadConfig::poisson("mlp", 1000.0);
+        t.mode = "orca".into();
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
     }
 
     #[test]

@@ -8,13 +8,16 @@
 //!   gamma/bursty, constant-rate, trace replay), parameterized per tenant
 //!   in requests/second.
 //! - [`batcher`] — per-tenant dynamic batching (flush on size or timeout)
-//!   with an admission-control queue cap.
+//!   with an admission-control queue cap, plus the [`InflightPool`] of
+//!   decode streams behind continuous batching.
 //! - [`slo`] — latency percentiles, SLO attainment, goodput, and the JSON
 //!   report; also summarizes TTFT/TBT token streams.
 //! - [`driver`] — the [`crate::sim::Driver`] that injects generated
 //!   arrivals as simulated time advances and attributes completions back
-//!   to batched requests; [`run_serve`] is the one-call entry point used
-//!   by `onnxim serve` and `examples/fig_serving.rs`.
+//!   to batched requests; generative tenants run per-iteration decode
+//!   steps (whole-batch or continuous — see the driver docs);
+//!   [`run_serve`] is the one-call entry point used by `onnxim serve`,
+//!   `examples/fig_serving.rs` and `examples/fig_continuous.rs`.
 //!
 //! Scenarios are described by [`crate::config::ServeConfig`] and are
 //! fully deterministic in their seed.
@@ -24,7 +27,7 @@ pub mod driver;
 pub mod slo;
 pub mod traffic;
 
-pub use batcher::{Batch, Batcher, Pending};
+pub use batcher::{Batch, Batcher, InflightPool, Pending, StepOutcome, Stream};
 pub use driver::{run_serve, ServeDriver};
 pub use slo::{SloReport, Summary, TenantReport};
 pub use traffic::{ArrivalProcess, BatchDist, TrafficGen};

@@ -251,6 +251,31 @@ mod tests {
     }
 
     #[test]
+    fn gamma_cv_above_one_is_burstier_than_poisson() {
+        // The burstiness knob must do what it claims: for every seed
+        // tried, gamma inter-arrivals at CV 2.5 have a larger measured
+        // coefficient of variation than Poisson's (CV 1) at the same
+        // rate, and both hit the configured mean.
+        let inter_cv = |process: ArrivalProcess, seed: u64| {
+            let mut g = TrafficGen::new(process, BatchDist::Fixed(1), 1000.0, 1.0, seed);
+            let gs = gaps(&mut g, 20_000);
+            let mean = gs.iter().sum::<f64>() / gs.len() as f64;
+            let var = gs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / gs.len() as f64;
+            (mean, var.sqrt() / mean)
+        };
+        for seed in [1, 7, 13, 42] {
+            let (pm, pcv) = inter_cv(ArrivalProcess::Poisson, seed);
+            let (gm, gcv) = inter_cv(ArrivalProcess::Gamma { cv: 2.5 }, seed);
+            assert!((pm - 1e6).abs() / 1e6 < 0.05, "seed {seed}: poisson mean {pm}");
+            assert!((gm - 1e6).abs() / 1e6 < 0.08, "seed {seed}: gamma mean {gm}");
+            assert!(
+                gcv > pcv * 1.5,
+                "seed {seed}: gamma cv {gcv} not burstier than poisson cv {pcv}"
+            );
+        }
+    }
+
+    #[test]
     fn same_seed_same_stream() {
         let mk = || {
             TrafficGen::new(

@@ -154,6 +154,59 @@ mod tests {
         assert!((var - 1.0).abs() < 0.03, "var {var}");
     }
 
+    /// Mean and coefficient of variation of `n` samples from `f`.
+    fn moments(mut f: impl FnMut(&mut Rng) -> f64, seed: u64, n: usize) -> (f64, f64) {
+        let mut r = Rng::new(seed);
+        let samples: Vec<f64> = (0..n).map(|_| f(&mut r)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        (mean, var.sqrt() / mean.abs().max(1e-12))
+    }
+
+    #[test]
+    fn exp_moments_stable_across_seeds() {
+        // Property across seeds, not one lucky stream: exponential mean
+        // within 3% and CV within 5% of 1 for every seed tried.
+        for seed in [1, 2, 3, 5, 8, 13, 21, 34] {
+            let (mean, cv) = moments(|r| r.exp(10.0), seed, 50_000);
+            assert!((mean - 10.0).abs() / 10.0 < 0.03, "seed {seed}: mean {mean}");
+            assert!((cv - 1.0).abs() < 0.05, "seed {seed}: cv {cv}");
+        }
+    }
+
+    #[test]
+    fn normal_moments_stable_across_seeds() {
+        for seed in [1, 2, 3, 5, 8, 13, 21, 34] {
+            let mut r = Rng::new(seed);
+            let n = 50_000;
+            let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mean = samples.iter().sum::<f64>() / n as f64;
+            let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 0.03, "seed {seed}: mean {mean}");
+            assert!((var - 1.0).abs() < 0.05, "seed {seed}: var {var}");
+        }
+    }
+
+    #[test]
+    fn gamma_moments_stable_across_seeds() {
+        // Both the Marsaglia-Tsang path (shape >= 1) and the boosted
+        // shape < 1 path, across seeds: mean within 5%, CV within 10%.
+        for seed in [1, 2, 3, 5, 8, 13] {
+            for (shape, scale) in [(4.0, 2.5), (1.0, 3.0), (0.25, 8.0)] {
+                let (mean, cv) = moments(|r| r.gamma(shape, scale), seed, 50_000);
+                let (want_mean, want_cv) = (shape * scale, 1.0 / f64::sqrt(shape));
+                assert!(
+                    (mean - want_mean).abs() / want_mean < 0.05,
+                    "seed {seed} shape {shape}: mean {mean} vs {want_mean}"
+                );
+                assert!(
+                    (cv - want_cv).abs() / want_cv < 0.1,
+                    "seed {seed} shape {shape}: cv {cv} vs {want_cv}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn gamma_matches_mean_and_cv() {
         // Both the shape >= 1 path and the boosted shape < 1 path.
