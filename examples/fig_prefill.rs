@@ -1,0 +1,75 @@
+//! Honest prefill: TTFT/TBT vs chunk size — the serving lever this PR
+//! adds on top of continuous batching.
+//!
+//! ```sh
+//! cargo run --release --offline --example fig_prefill [-- --full]
+//! ```
+//!
+//! One continuous-batching GPT tenant whose requests carry real prompts
+//! (`prompt_max > 0`): each joining stream first executes a
+//! prompt-length-dependent prefill graph as simulated work, then decodes.
+//! The sweep varies `prefill_chunk`:
+//!
+//! - **Unchunked** (`0`): the whole prompt is one pass. The iteration
+//!   that admits a long prompt lasts its entire prefill, so every
+//!   co-resident decode stream's TBT takes the hit — the tail collapses
+//!   only when prompts are short.
+//! - **Chunked** (`64..512`): the prompt is split into fixed-token
+//!   chunks interleaving with decode iterations at batch boundaries.
+//!   Co-tenant TBT p99 drops because no single iteration carries more
+//!   than one chunk of prompt work; the prefilling stream's own TTFT
+//!   rises slightly in exchange (its prompt is spread over more
+//!   iterations) — the classic chunked-prefill trade-off.
+
+use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
+use onnxim::config::NpuConfig;
+use onnxim::scheduler::Fcfs;
+use onnxim::serve::run_serve;
+use onnxim::util::stats::Table;
+
+/// A decode-heavy GPT tenant with long prompts; chunk size switchable.
+fn prefill_scenario(prompt: usize, chunk: usize, duration_ms: f64) -> ServeConfig {
+    let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 60_000.0, 16)
+        .with_prefill(prompt, chunk);
+    t.process = "constant".into();
+    t.max_batch = 4;
+    t.max_queue = 256;
+    t.kv_block = 64;
+    ServeConfig { seed: 42, duration_ms, slo_ms: 5.0, tenants: vec![t] }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (prompt, duration_ms) = if full { (2048, 0.4) } else { (1024, 0.2) };
+    let chunks: &[usize] = if full { &[0, 64, 128, 256, 512] } else { &[0, 128, 512] };
+
+    println!("Honest prefill — TTFT/TBT vs prefill chunk size");
+    println!(
+        "(gpt-tiny, {prompt}-token prompts, 16 decode tokens/request, Server NPU, \
+         {duration_ms} ms window)\n"
+    );
+    let mut table = Table::new(&[
+        "chunk", "completed", "prefill passes", "TTFT p50", "TTFT p99", "TBT p50", "TBT p99",
+        "e2e p99",
+    ]);
+    for &chunk in chunks {
+        let scfg = prefill_scenario(prompt, chunk, duration_ms);
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
+            .expect("prefill scenario");
+        let t = &rep.tenants[0];
+        table.row(&[
+            if chunk == 0 { "whole".to_string() } else { format!("{chunk}") },
+            format!("{}", t.completed),
+            format!("{}", t.prefill_steps),
+            format!("{:.4}", t.ttft.p50_ms),
+            format!("{:.4}", t.ttft.p99_ms),
+            format!("{:.4}", t.tbt.p50_ms),
+            format!("{:.4}", t.tbt.p99_ms),
+            format!("{:.4}", t.e2e.p99_ms),
+        ]);
+    }
+    table.print();
+    println!("\n(smaller chunks bound the prompt work any iteration can add, so");
+    println!(" co-resident streams' TBT tail shrinks; the prefilling stream's own");
+    println!(" TTFT pays for the interleaving — pick the chunk that fits your SLO)");
+}

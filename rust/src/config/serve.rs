@@ -51,13 +51,41 @@ pub struct TenantLoadConfig {
     /// request (the non-generative path); > 0 = generative serving, each
     /// request running this many one-token decode steps.
     pub decode_tokens: usize,
-    /// KV-cache length a stream starts from (its prompt is assumed
-    /// already cached). Generative serving only.
+    /// KV-cache length a stream starts from when **prefill is not
+    /// modeled** (`prompt_max == 0`): the prompt is assumed already
+    /// cached — the legacy TTFT fiction. Generative serving only.
     pub kv_init: usize,
     /// KV bucket granularity for decode-step graph reuse (lengths round
     /// up to a multiple of this, paged-attention style). Generative
     /// serving only.
     pub kv_block: usize,
+    /// Per-request prompt length is drawn uniformly from
+    /// `[prompt_min, prompt_max]` (equal bounds = fixed length).
+    /// `prompt_max > 0` enables **honest prefill**: a joining stream
+    /// first executes a prompt-length-dependent prefill graph as real
+    /// simulated work (contending for cores/DRAM/NoC), and only then
+    /// enters the decode pool — so TTFT is measured, not assumed.
+    /// 0 disables prefill modeling (`kv_init` applies instead).
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// Chunked prefill: long prompts are split into chunks of this many
+    /// tokens, each interleaving with decode iterations at batch
+    /// boundaries so one long prompt does not stall every co-resident
+    /// decode stream's TBT. 0 = unchunked (whole prompt in one pass).
+    pub prefill_chunk: usize,
+    /// Per-stream decode-length distribution: `"constant"` (every stream
+    /// decodes exactly `decode_tokens`), `"geometric"` (mean
+    /// `decode_tokens`, the classic open-loop LLM length model), or
+    /// `"empirical"` (drawn uniformly from [`Self::decode_lens`]).
+    pub decode_dist: String,
+    /// Support of the `"empirical"` decode-length distribution.
+    pub decode_lens: Vec<usize>,
+    /// Trace file to replay when `process = "replay"`: the tenant offers
+    /// exactly the `(arrival, batch)` pairs recorded by `onnxim trace
+    /// gen` instead of sampling a stochastic process.
+    pub trace: Option<String>,
+    /// Tenant id *inside the trace file* whose entries are replayed.
+    pub trace_tenant: usize,
 }
 
 impl TenantLoadConfig {
@@ -78,6 +106,13 @@ impl TenantLoadConfig {
             decode_tokens: 0,
             kv_init: 128,
             kv_block: 64,
+            prompt_min: 0,
+            prompt_max: 0,
+            prefill_chunk: 0,
+            decode_dist: "constant".into(),
+            decode_lens: Vec::new(),
+            trace: None,
+            trace_tenant: 0,
         }
     }
 
@@ -91,6 +126,16 @@ impl TenantLoadConfig {
         t.mode = "continuous".into();
         t.decode_tokens = decode_tokens;
         t
+    }
+
+    /// Enable honest prefill on this tenant: every request carries a
+    /// `prompt`-token prompt processed as real simulated work, split into
+    /// `chunk`-token chunks (0 = unchunked).
+    pub fn with_prefill(mut self, prompt: usize, chunk: usize) -> Self {
+        self.prompt_min = prompt;
+        self.prompt_max = prompt;
+        self.prefill_chunk = chunk;
+        self
     }
 
     fn as_json(&self) -> Json {
@@ -108,9 +153,18 @@ impl TenantLoadConfig {
             ("decode_tokens", Json::num(self.decode_tokens as f64)),
             ("kv_init", Json::num(self.kv_init as f64)),
             ("kv_block", Json::num(self.kv_block as f64)),
+            ("prompt_min", Json::num(self.prompt_min as f64)),
+            ("prompt_max", Json::num(self.prompt_max as f64)),
+            ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
+            ("decode_dist", Json::str(&self.decode_dist)),
+            ("decode_lens", Json::usize_arr(&self.decode_lens)),
+            ("trace_tenant", Json::num(self.trace_tenant as f64)),
         ];
         if let Some(slo) = self.slo_ms {
             pairs.push(("slo_ms", Json::num(slo)));
+        }
+        if let Some(trace) = &self.trace {
+            pairs.push(("trace", Json::str(trace)));
         }
         Json::obj(pairs)
     }
@@ -133,6 +187,15 @@ impl TenantLoadConfig {
             decode_tokens: j.get("decode_tokens").map_or(Ok(0), |v| v.as_usize())?,
             kv_init: j.get("kv_init").map_or(Ok(128), |v| v.as_usize())?,
             kv_block: j.get("kv_block").map_or(Ok(64), |v| v.as_usize())?,
+            prompt_min: j.get("prompt_min").map_or(Ok(0), |v| v.as_usize())?,
+            prompt_max: j.get("prompt_max").map_or(Ok(0), |v| v.as_usize())?,
+            prefill_chunk: j.get("prefill_chunk").map_or(Ok(0), |v| v.as_usize())?,
+            decode_dist: j
+                .get("decode_dist")
+                .map_or(Ok("constant".to_string()), |v| v.as_str().map(str::to_string))?,
+            decode_lens: j.get("decode_lens").map_or(Ok(Vec::new()), |v| v.as_usize_arr())?,
+            trace: j.get("trace").map(|v| v.as_str().map(str::to_string)).transpose()?,
+            trace_tenant: j.get("trace_tenant").map_or(Ok(0), |v| v.as_usize())?,
         })
     }
 }
@@ -268,6 +331,45 @@ mod tests {
         assert_eq!(sparse.tenants[0].mode, "static");
         assert_eq!(sparse.tenants[0].decode_tokens, 0);
         assert_eq!((sparse.tenants[0].kv_init, sparse.tenants[0].kv_block), (128, 64));
+    }
+
+    #[test]
+    fn prefill_fields_roundtrip() {
+        let mut cfg = ServeConfig::two_tenant(100.0, 10.0, 5.0);
+        cfg.tenants[1] =
+            TenantLoadConfig::continuous("gpt-tiny-decode", 50.0, 32).with_prefill(512, 128);
+        cfg.tenants[1].decode_dist = "geometric".into();
+        let cfg2 = ServeConfig::parse(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, cfg2);
+        assert_eq!((cfg2.tenants[1].prompt_min, cfg2.tenants[1].prompt_max), (512, 512));
+        assert_eq!(cfg2.tenants[1].prefill_chunk, 128);
+        assert_eq!(cfg2.tenants[1].decode_dist, "geometric");
+        // Sparse JSON keeps the legacy kv_init assumption (prefill off).
+        let sparse = ServeConfig::parse(
+            r#"{"duration_ms": 1, "slo_ms": 1,
+                "tenants": [{"model": "mlp", "rate_rps": 10, "process": "poisson"}]}"#,
+        )
+        .unwrap();
+        assert_eq!((sparse.tenants[0].prompt_min, sparse.tenants[0].prompt_max), (0, 0));
+        assert_eq!(sparse.tenants[0].prefill_chunk, 0);
+        assert_eq!(sparse.tenants[0].decode_dist, "constant");
+        assert!(sparse.tenants[0].decode_lens.is_empty());
+        assert_eq!(sparse.tenants[0].trace, None);
+    }
+
+    #[test]
+    fn replay_and_empirical_fields_roundtrip() {
+        let mut cfg = ServeConfig::two_tenant(100.0, 10.0, 5.0);
+        cfg.tenants[0].process = "replay".into();
+        cfg.tenants[0].trace = Some("traces/frozen.json".into());
+        cfg.tenants[0].trace_tenant = 3;
+        cfg.tenants[1].decode_dist = "empirical".into();
+        cfg.tenants[1].decode_lens = vec![4, 8, 32];
+        let cfg2 = ServeConfig::parse(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, cfg2);
+        assert_eq!(cfg2.tenants[0].trace.as_deref(), Some("traces/frozen.json"));
+        assert_eq!(cfg2.tenants[0].trace_tenant, 3);
+        assert_eq!(cfg2.tenants[1].decode_lens, vec![4, 8, 32]);
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub struct CoreStats {
     pub dram_write_bytes: u64,
     pub tiles_completed: u64,
     pub instrs_issued: u64,
+    /// Tiles descheduled by the preemptive revoke path before their
+    /// compute began (their prefetch traffic is redone on re-dispatch).
+    pub tiles_revoked: u64,
 }
 
 /// DMA generation state for an issued MVIN/MVOUT.
@@ -60,6 +63,11 @@ struct TileExec {
     dependents: Vec<Vec<u32>>,
     dma: Vec<Option<DmaState>>,
     n_done: usize,
+    /// Sticky: set when the tile's first compute (systolic/vector/
+    /// analytic) instruction issues, never cleared. A tile whose compute
+    /// has begun — or finished and moved on to write-back — is past the
+    /// revocable window; only pure-prefetch tiles may be descheduled.
+    compute_issued: bool,
 }
 
 impl TileExec {
@@ -73,7 +81,7 @@ impl TileExec {
                 dependents[d as usize].push(i as u32);
             }
         }
-        TileExec { tile, deps_left, dependents, dma: vec![None; n], n_done: 0 }
+        TileExec { tile, deps_left, dependents, dma: vec![None; n], n_done: 0, compute_issued: false }
     }
 
     fn complete(&self) -> bool {
@@ -112,6 +120,11 @@ pub struct Core {
 }
 
 impl Core {
+    /// Tile slots per core (double-buffered scratchpad/accumulator
+    /// partitions, §II-B). Exported so slot-scanning callers (the
+    /// preemptive revoke path) cannot drift from the core's layout.
+    pub const NUM_SLOTS: usize = 2;
+
     pub fn new(id: usize, cfg: &NpuConfig) -> Self {
         Core {
             id,
@@ -221,23 +234,25 @@ impl Core {
         // 2. Issue: one instruction may occupy each compute unit.
         if self.systolic_free <= now {
             if let Some((slot, idx)) = self.ready_systolic.pop_front() {
-                let op =
-                    &self.slots[slot as usize].as_ref().unwrap().tile.instrs[idx as usize].op;
+                let te = self.slots[slot as usize].as_mut().unwrap();
+                let op = &te.tile.instrs[idx as usize].op;
                 let lat = self.lm.compute_latency(op).unwrap();
                 self.stats.macs += op.macs();
                 self.stats.systolic_busy += lat;
                 self.stats.instrs_issued += 1;
+                te.compute_issued = true;
                 self.systolic_free = now + lat;
                 self.completions.push(Reverse((now + lat, slot, idx)));
             }
         }
         if self.vector_free <= now {
             if let Some((slot, idx)) = self.ready_vector.pop_front() {
-                let op =
-                    &self.slots[slot as usize].as_ref().unwrap().tile.instrs[idx as usize].op;
+                let te = self.slots[slot as usize].as_mut().unwrap();
+                let op = &te.tile.instrs[idx as usize].op;
                 let lat = self.lm.compute_latency(op).unwrap();
                 self.stats.vector_busy += lat;
                 self.stats.instrs_issued += 1;
+                te.compute_issued = true;
                 self.vector_free = now + lat;
                 self.completions.push(Reverse((now + lat, slot, idx)));
             }
@@ -250,6 +265,7 @@ impl Core {
             let op = &te.tile.instrs[idx as usize].op;
             // Im2col runs on the scratchpad datapath with analytic latency.
             if let Some(lat) = self.lm.compute_latency(op) {
+                te.compute_issued = true;
                 self.stats.instrs_issued += 1;
                 self.completions.push(Reverse((now + lat, slot, idx)));
                 continue;
@@ -279,7 +295,7 @@ impl Core {
         self.pump_dma(now, noc);
 
         // 5. Collect finished tiles.
-        for slot in 0..2 {
+        for slot in 0..Self::NUM_SLOTS {
             if self.slots[slot].as_ref().is_some_and(|te| te.complete()) {
                 let te = self.slots[slot].take().unwrap();
                 self.stats.tiles_completed += 1;
@@ -330,6 +346,40 @@ impl Core {
     /// Drain tiles that finished since the last call.
     pub fn take_finished(&mut self, out: &mut Vec<JobRef>) {
         out.append(&mut self.finished);
+    }
+
+    /// The job occupying `slot`, if that tile is still **revocable**: no
+    /// compute (systolic/vector/analytic) instruction has ever issued, so
+    /// only prefetch state would be discarded by a revoke. The flag is
+    /// sticky — a tile past its first compute stays non-revocable through
+    /// write-back, so nearly-finished work is never thrown away.
+    pub fn revocable_job(&self, slot: usize) -> Option<JobRef> {
+        let te = self.slots.get(slot)?.as_ref()?;
+        (!te.compute_issued).then_some(te.tile.job)
+    }
+
+    /// Tile-level preemption: deschedule the tile in `slot` and return it
+    /// for re-dispatch, provided its compute has not begun
+    /// ([`Self::revocable_job`]). Any DMA prefetch already issued is
+    /// abandoned — in-flight memory responses for it are dropped on
+    /// arrival (the redone traffic on re-dispatch is the modeled cost of
+    /// preemption). Returns `None` when the slot is empty or the tile has
+    /// committed compute state.
+    pub fn revoke_slot(&mut self, slot: usize) -> Option<Tile> {
+        if self.revocable_job(slot).is_none() {
+            return None;
+        }
+        let te = self.slots[slot].take().expect("checked occupied");
+        let s = slot as u8;
+        // No completions reference this slot (compute never issued); the
+        // ready/active queues and the outstanding-request map may.
+        self.ready_systolic.retain(|&(q, _)| q != s);
+        self.ready_vector.retain(|&(q, _)| q != s);
+        self.ready_dma.retain(|&(q, _)| q != s);
+        self.active_dma.retain(|&(q, _)| q != s);
+        self.inflight.retain(|_, &mut (q, _)| q != s);
+        self.stats.tiles_revoked += 1;
+        Some(te.tile)
     }
 
     /// Earliest cycle at which this core can make progress, or `NEVER`.
@@ -551,6 +601,73 @@ mod tests {
         assert_eq!(core.stats.dram_read_bytes, 1024);
         assert_eq!(core.stats.dram_write_bytes, 64);
         assert_eq!(core.stats.tiles_completed, 1);
+    }
+
+    #[test]
+    fn revoke_uncommitted_tile_frees_slot_and_redoes_work() {
+        let cfg = NpuConfig::mobile();
+        let mut core = Core::new(0, &cfg);
+        core.start_tile(gemm_tile(0, 64));
+        core.start_tile(gemm_tile(1, 64));
+        let (mut noc, _dram) = memory(&cfg);
+        // One tick: DMA prefetch begins for both tiles, but no memory
+        // responses have returned, so no compute has issued — both tiles
+        // are still in the revocable window.
+        core.tick(0, noc.as_mut());
+        assert_eq!(core.stats.macs, 0);
+        assert!(core.revocable_job(0).is_some());
+        assert!(core.revocable_job(1).is_some());
+        let tile = core.revoke_slot(1).expect("prefetch-phase tile is revocable");
+        assert_eq!(tile.job.tile_idx, 1);
+        assert!(core.wants_tile(), "revoked slot is free for re-dispatch");
+        assert_eq!(core.stats.tiles_revoked, 1);
+        assert!(core.revoke_slot(1).is_none(), "empty slot has nothing to revoke");
+        // Stale responses from the abandoned prefetch are dropped, not
+        // misattributed.
+        core.on_response(&MemResponse {
+            id: 123_456_789,
+            core: 0,
+            is_write: false,
+            completed_at: 5,
+            channel: 0,
+        });
+        // Revoke the other prefetching tile too (its outstanding requests
+        // live in the first NoC instance, which we now abandon), then
+        // re-dispatch both from scratch against fresh memory: both
+        // complete — the duplicated prefetch is the preemption cost.
+        let tile0 = core.revoke_slot(0).expect("slot 0 also still in prefetch");
+        assert!(core.idle(), "revocation must leave no dangling in-flight state");
+        core.start_tile(tile0);
+        core.start_tile(tile);
+        let (done, _) = run_core(&mut core, &cfg, 1_000_000);
+        assert_eq!(done.len(), 2);
+        assert_eq!(core.stats.tiles_completed, 2);
+    }
+
+    #[test]
+    fn committed_tile_is_not_revocable() {
+        let cfg = NpuConfig::mobile();
+        let mut core = Core::new(0, &cfg);
+        // Pure-compute tile: its GEMM issues on the first tick, committing
+        // hardware state — revocation must refuse.
+        let tile = Tile {
+            job: JobRef { request_id: 0, node_id: 0, tile_idx: 0 },
+            instrs: vec![Instr::new(Opcode::Gemm {
+                l: 100,
+                rows: 8,
+                cols: 8,
+                accumulate: false,
+            })],
+            spad_bytes: 0,
+            acc_bytes: 0,
+        };
+        core.start_tile(tile);
+        let (mut noc, _dram) = memory(&cfg);
+        core.tick(0, noc.as_mut());
+        assert!(core.revocable_job(0).is_none());
+        assert!(core.revoke_slot(0).is_none());
+        let (done, _) = run_core(&mut core, &cfg, 10_000);
+        assert_eq!(done.len(), 1);
     }
 
     #[test]

@@ -15,11 +15,19 @@
 //!                                   [--mode static|continuous]
 //!                                   [--decode-tokens 0] [--kv-init 128]
 //!                                   [--kv-block 64]
+//!                                   [--prompt-min 0] [--prompt-max 0]
+//!                                   [--prefill-chunk 0]
+//!                                   [--decode-dist constant|geometric]
 //!                                   [--serve-config scenario.json] [--out r.json]
 //!             --policy slo-slack enables SLO-slack (earliest-deadline)
-//!             tile scheduling; --mode continuous turns generative tenants
-//!             (--decode-tokens > 0) into an in-flight decode pool with
-//!             iteration-level batching.
+//!             tile scheduling; --policy slo-slack-preempt additionally
+//!             revokes dispatched-but-uncommitted tiles of slack-rich
+//!             requests when a deadline-critical one starves. --mode
+//!             continuous turns generative tenants (--decode-tokens > 0)
+//!             into an in-flight decode pool with iteration-level
+//!             batching; --prompt-max > 0 models prefill as real
+//!             simulated work (honest TTFT), optionally chunked by
+//!             --prefill-chunk tokens.
 //!             Emits a deterministic JSON SLO report on stdout (a
 //!             human-readable table goes to stderr).
 //!   trace     Simulate a multi-tenant trace JSON: onnxim trace --trace t.json
@@ -98,15 +106,19 @@ fn make_policy(
     Ok(match opts.get("policy").map(String::as_str) {
         None | Some("fcfs") => Box::new(Fcfs::new()),
         Some("time-shared") => Box::new(TimeShared::new()),
-        Some("slo-slack") => {
+        Some(name @ ("slo-slack" | "slo-slack-preempt")) => {
             let slo_cycles: Vec<Cycle> = match serve {
                 Some((scfg, freq)) => scfg.slo_cycles(freq),
                 None => anyhow::bail!(
-                    "--policy slo-slack needs per-tenant SLOs and is only available on \
+                    "--policy {name} needs per-tenant SLOs and is only available on \
                      the `serve` subcommand (sim/trace requests carry no deadlines)"
                 ),
             };
-            Box::new(SloSlack::new(slo_cycles))
+            if name == "slo-slack-preempt" {
+                Box::new(SloSlack::preemptive(slo_cycles))
+            } else {
+                Box::new(SloSlack::new(slo_cycles))
+            }
         }
         Some("spatial") => {
             // --partition "0,1,1,1": tenant per core.
@@ -234,6 +246,11 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
     let decode_tokens: usize = opt_parse(opts, "decode-tokens", 0)?;
     let kv_init: usize = opt_parse(opts, "kv-init", 128)?;
     let kv_block: usize = opt_parse(opts, "kv-block", 64)?;
+    let prompt_max: usize = opt_parse(opts, "prompt-max", 0)?;
+    let prompt_min: usize = opt_parse(opts, "prompt-min", prompt_max)?;
+    let prefill_chunk: usize = opt_parse(opts, "prefill-chunk", 0)?;
+    let decode_dist =
+        opts.get("decode-dist").cloned().unwrap_or_else(|| "constant".to_string());
     let models_arg = opts
         .get("models")
         .cloned()
@@ -255,6 +272,10 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
             t.decode_tokens = decode_tokens;
             t.kv_init = kv_init;
             t.kv_block = kv_block;
+            t.prompt_min = prompt_min;
+            t.prompt_max = prompt_max;
+            t.prefill_chunk = prefill_chunk;
+            t.decode_dist = decode_dist.clone();
             t
         })
         .collect();

@@ -213,6 +213,39 @@ pub fn llama3(batch: usize, kv_len: usize, cfg: &TransformerCfg) -> Graph {
     transformer(batch, 1, kv_len, cfg)
 }
 
+/// Shared engine behind the decode-step and prefill graph caches:
+/// builds, optimizes, and memoizes `transformer(batch, new_tokens,
+/// kv_end)` passes, keyed exactly by those three values. Callers own the
+/// bucketing policy (decode buckets only the KV axis — its query length
+/// is always 1; prefill buckets both token axes).
+struct TransformerGraphCache {
+    cfg: TransformerCfg,
+    cache: HashMap<(usize, usize, usize), Graph>,
+    /// Graphs actually built + optimized (cache misses).
+    builds: u64,
+    /// Passes served from the cache.
+    hits: u64,
+}
+
+impl TransformerGraphCache {
+    fn new(cfg: TransformerCfg) -> Self {
+        TransformerGraphCache { cfg, cache: HashMap::new(), builds: 0, hits: 0 }
+    }
+
+    fn pass(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Graph {
+        let key = (batch.max(1), new_tokens.max(1), kv_end.max(new_tokens).max(1));
+        if let Some(g) = self.cache.get(&key) {
+            self.hits += 1;
+            return g.clone();
+        }
+        let mut g = transformer(key.0, key.1, key.2, &self.cfg);
+        optimize(&mut g, OptLevel::Extended);
+        self.builds += 1;
+        self.cache.insert(key, g.clone());
+        g
+    }
+}
+
 /// Cache of **optimized decode-step graphs** keyed by (batch units, KV
 /// bucket) — the graph-reuse layer behind continuous batching.
 ///
@@ -224,18 +257,13 @@ pub fn llama3(batch: usize, kv_len: usize, cfg: &TransformerCfg) -> Graph {
 /// block 64 attends to 192 cached slots) and the optimized graph for each
 /// (batch, bucket) pair is built once, then cloned per submit.
 pub struct DecodeGraphCache {
-    cfg: TransformerCfg,
+    inner: TransformerGraphCache,
     kv_block: usize,
-    cache: HashMap<(usize, usize), Graph>,
-    /// Graphs actually built + optimized (cache misses).
-    pub builds: u64,
-    /// Steps served from the cache.
-    pub hits: u64,
 }
 
 impl DecodeGraphCache {
     pub fn new(cfg: TransformerCfg, kv_block: usize) -> Self {
-        DecodeGraphCache { cfg, kv_block: kv_block.max(1), cache: HashMap::new(), builds: 0, hits: 0 }
+        DecodeGraphCache { inner: TransformerGraphCache::new(cfg), kv_block: kv_block.max(1) }
     }
 
     /// The KV length the decode-step graph is built for: `kv` rounded up
@@ -247,16 +275,63 @@ impl DecodeGraphCache {
     /// An optimized one-token decode-step graph for `batch` streams
     /// attending to (at least) `kv` cached tokens.
     pub fn step(&mut self, batch: usize, kv: usize) -> Graph {
-        let key = (batch.max(1), self.bucket_kv(kv));
-        if let Some(g) = self.cache.get(&key) {
-            self.hits += 1;
-            return g.clone();
-        }
-        let mut g = transformer(key.0, 1, key.1, &self.cfg);
-        optimize(&mut g, OptLevel::Extended);
-        self.builds += 1;
-        self.cache.insert(key, g.clone());
-        g
+        let kv = self.bucket_kv(kv);
+        self.inner.pass(batch, 1, kv)
+    }
+
+    /// Graphs actually built + optimized (cache misses).
+    pub fn builds(&self) -> u64 {
+        self.inner.builds
+    }
+
+    /// Steps served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.inner.hits
+    }
+}
+
+/// Cache of **optimized prefill graphs** keyed by (batch units, chunk
+/// bucket, KV-end bucket) — the prompt-processing twin of
+/// [`DecodeGraphCache`], behind honest-TTFT serving.
+///
+/// A joining stream's prompt is processed as real simulated work:
+/// `transformer(batch, new_tokens, kv_end)` passes, either the whole
+/// prompt at once or fixed-token chunks (chunked prefill), where
+/// `kv_end` is the total prompt prefix attended to after the chunk.
+/// Prompt and chunk lengths are rounded up to `bucket` granularity
+/// (paged-KV style) so a scenario with varied prompt lengths reuses a
+/// small set of optimized graphs instead of building one per request.
+pub struct PrefillGraphCache {
+    inner: TransformerGraphCache,
+    bucket: usize,
+}
+
+impl PrefillGraphCache {
+    pub fn new(cfg: TransformerCfg, bucket: usize) -> Self {
+        PrefillGraphCache { inner: TransformerGraphCache::new(cfg), bucket: bucket.max(1) }
+    }
+
+    /// Token lengths round up to the bucket granularity.
+    pub fn bucket_len(&self, n: usize) -> usize {
+        n.max(1).div_ceil(self.bucket) * self.bucket
+    }
+
+    /// An optimized prefill pass: `batch` streams processing `new_tokens`
+    /// prompt tokens while attending to a `kv_end`-token prefix
+    /// (`kv_end >= new_tokens`; equal for unchunked prefill).
+    pub fn chunk(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Graph {
+        let q = self.bucket_len(new_tokens);
+        self.inner.pass(batch, q, self.bucket_len(kv_end).max(q))
+    }
+
+    /// Graphs actually built + optimized (cache misses).
+    pub fn builds(&self) -> u64 {
+        self.inner.builds
+    }
+
+    /// Chunks served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.inner.hits
     }
 }
 
@@ -354,16 +429,60 @@ mod tests {
         // Same batch, kv within one block: one build, then hits.
         let a = c.step(2, 10);
         let b = c.step(2, 63);
-        assert_eq!(c.builds, 1);
-        assert_eq!(c.hits, 1);
+        assert_eq!(c.builds(), 1);
+        assert_eq!(c.hits(), 1);
         assert_eq!(a.name, b.name);
         // Crossing the block or changing batch builds anew.
         c.step(2, 65);
         c.step(3, 10);
-        assert_eq!(c.builds, 3);
+        assert_eq!(c.builds(), 3);
         // Cached graphs are valid and simulate-ready.
         a.validate().unwrap();
         a.topo_order().unwrap();
+    }
+
+    #[test]
+    fn prefill_cache_reuses_within_bucket_and_scales_flops() {
+        let mut c = PrefillGraphCache::new(TransformerCfg::tiny(), 64);
+        // Whole prompt in one pass: kv_end == new_tokens.
+        let a = c.chunk(1, 100, 100);
+        let b = c.chunk(1, 128, 128);
+        assert_eq!(c.builds(), 1, "100 and 128 share the 128-token bucket");
+        assert_eq!(c.hits(), 1);
+        assert_eq!(a.name, b.name);
+        // A chunk attending to a longer prefix is a different graph with
+        // more attention work but the same projection work per token.
+        let mid = c.chunk(1, 128, 512);
+        assert_eq!(c.builds(), 2);
+        assert!(mid.flops() > a.flops());
+        // Longer chunks do more work; the cache key respects batch too.
+        let long = c.chunk(1, 512, 512);
+        assert!(long.flops() > mid.flops());
+        c.chunk(2, 128, 128);
+        assert_eq!(c.builds(), 4);
+        // Cached graphs are valid and simulate-ready.
+        a.validate().unwrap();
+        a.topo_order().unwrap();
+        long.validate().unwrap();
+    }
+
+    #[test]
+    fn prefill_chunks_cover_prompt_work() {
+        // Chunked prefill (4 x 128-token chunks attending to growing
+        // prefixes) covers the whole prompt's work: the final chunk
+        // attends to the full 512-token prefix, and the chunked total is
+        // comparable to the one-shot pass.
+        let mut c = PrefillGraphCache::new(TransformerCfg::tiny(), 64);
+        let whole = c.chunk(1, 512, 512);
+        let mut chunked = 0u64;
+        for i in 0..4 {
+            chunked += c.chunk(1, 128, (i + 1) * 128).flops();
+        }
+        // Same projection/FFN totals, attention split causally: the
+        // chunked total is within [~half, ~equal] of the one-shot pass
+        // (one-shot buckets full-causal attention for every token).
+        assert!(chunked <= whole.flops());
+        assert!(chunked * 2 >= whole.flops());
     }
 
     #[test]

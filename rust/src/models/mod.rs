@@ -13,7 +13,10 @@ pub mod gpt;
 pub mod resnet;
 
 use crate::graph::Graph;
-pub use gpt::{gpt3_small_decode, gpt3_small_prefill, llama3, DecodeGraphCache, TransformerCfg};
+pub use gpt::{
+    gpt3_small_decode, gpt3_small_prefill, llama3, DecodeGraphCache, PrefillGraphCache,
+    TransformerCfg,
+};
 pub use resnet::resnet50;
 
 /// Resolve a model name from a trace file into a graph.

@@ -213,6 +213,69 @@ impl GlobalScheduler {
         t
     }
 
+    /// Tile-level preemption (preemptive [`SloSlack`] only; a no-op for
+    /// every other policy): when the most urgent request with ready tiles
+    /// faces fully-occupied cores, revoke dispatched-but-uncommitted
+    /// tiles of slack-richer requests so the following dispatch pass can
+    /// hand the freed slots to the urgent one. Revoked tiles return to
+    /// the front of their request's ready queue and are re-dispatched
+    /// later (redoing their prefetch — the modeled preemption cost).
+    /// Returns the number of tiles revoked.
+    pub fn preempt(&mut self, cores: &mut [crate::core::Core], _now: Cycle) -> usize {
+        if !self.policy.preemptive() {
+            return 0;
+        }
+        // The urgency bar: earliest deadline among requests that have
+        // dispatchable tiles right now — and how many tiles the requests
+        // *at* that bar could actually place into freed slots, so we
+        // never revoke more prefetches than the urgent work can use.
+        let mut urgent = NEVER;
+        for r in &self.requests[self.done_below..] {
+            if r.started_at.is_some() && r.has_ready() {
+                if let Some(d) = self.policy.urgency(r) {
+                    urgent = urgent.min(d);
+                }
+            }
+        }
+        if urgent == NEVER {
+            return 0;
+        }
+        let mut needed = 0usize;
+        for r in &self.requests[self.done_below..] {
+            if r.started_at.is_some()
+                && r.has_ready()
+                && self.policy.urgency(r) == Some(urgent)
+            {
+                needed += r.ready.len();
+            }
+        }
+        let mut revoked = 0;
+        'cores: for core in cores.iter_mut() {
+            if revoked >= needed {
+                break;
+            }
+            if core.wants_tile() {
+                continue; // a free slot already exists; dispatch handles it
+            }
+            for slot in 0..crate::core::Core::NUM_SLOTS {
+                let Some(job) = core.revocable_job(slot) else { continue };
+                let owner_deadline =
+                    self.policy.urgency(&self.requests[job.request_id]).unwrap_or(NEVER);
+                if owner_deadline <= urgent {
+                    continue; // as urgent or more: keep it
+                }
+                if let Some(tile) = core.revoke_slot(slot) {
+                    let r = &mut self.requests[tile.job.request_id];
+                    r.tiles_in_flight -= 1;
+                    r.ready.push_front(tile);
+                    revoked += 1;
+                }
+                continue 'cores; // one freed slot per core per pass
+            }
+        }
+        revoked
+    }
+
     /// True when all registered requests have completed.
     pub fn all_done(&mut self) -> bool {
         while self.done_below < self.requests.len() && self.requests[self.done_below].done() {
@@ -341,6 +404,60 @@ mod tests {
         assert_eq!(s.next_arrival(0), 100);
         s.activate_arrivals(100);
         assert!(s.has_ready_tiles());
+    }
+
+    #[test]
+    fn preempt_revokes_slack_rich_prefetch_for_urgent_request() {
+        use crate::core::Core;
+        let cfg = NpuConfig::mobile();
+        let p = LoweringParams::from_config(&cfg);
+        let mut s = GlobalScheduler::new(p, Box::new(SloSlack::preemptive(vec![1_000_000, 1_000])));
+        // A big matmul lowers to many tiles on the mobile config.
+        let big = || {
+            let mut g = Graph::new("big");
+            let x = g.activation("x", &[1, 512, 512]);
+            let w = g.weight("w", &[512, 512]);
+            let y = g.activation("y", &[1, 512, 512]);
+            g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+            g.inputs = vec![x];
+            g.outputs = vec![y];
+            g
+        };
+        // A slack-rich request fills the only core's two slots with
+        // prefetch-phase tiles.
+        let loose = s.add_request(big(), 0, 0);
+        s.set_deadline(loose, 1_000_000);
+        s.activate_arrivals(0);
+        let mut core = Core::new(0, &cfg);
+        while core.wants_tile() {
+            let t = s.pick_tile(0, 0).expect("loose request has tiles");
+            core.start_tile(t);
+        }
+        let slack_in_flight = s.requests[loose].tiles_in_flight;
+        assert_eq!(slack_in_flight, 2);
+        // An urgent request arrives; cores are full; preempt must revoke
+        // an uncommitted slack tile and hand the slot to the urgent one.
+        let tight = s.add_request(big(), 10, 1);
+        s.set_deadline(tight, 1_010);
+        s.activate_arrivals(10);
+        let revoked = s.preempt(std::slice::from_mut(&mut core), 10);
+        assert_eq!(revoked, 1, "exactly one slot freed per core per pass");
+        assert_eq!(s.requests[loose].tiles_in_flight, 1);
+        assert!(core.wants_tile());
+        let t = s.pick_tile(0, 10).expect("urgent tile dispatchable");
+        assert_eq!(t.job.request_id, tight, "freed slot goes to the urgent request");
+        // Non-preemptive policies never revoke.
+        let mut s2 = sched();
+        s2.add_request(two_layer_graph(), 0, 0);
+        s2.activate_arrivals(0);
+        let mut core2 = Core::new(0, &cfg);
+        while core2.wants_tile() {
+            match s2.pick_tile(0, 0) {
+                Some(t) => core2.start_tile(t),
+                None => break,
+            }
+        }
+        assert_eq!(s2.preempt(std::slice::from_mut(&mut core2), 0), 0);
     }
 
     #[test]

@@ -28,6 +28,21 @@ pub trait Policy {
     fn pick(&mut self, core_id: usize, requests: &mut [Request], now: Cycle) -> Option<Tile>;
 
     fn name(&self) -> &'static str;
+
+    /// True if the policy wants the tile-level revoke path: dispatched
+    /// tiles whose compute has not begun may be descheduled from cores
+    /// when a more urgent request is starved of slots. Preemption-aware
+    /// policies must also implement [`Policy::urgency`].
+    fn preemptive(&self) -> bool {
+        false
+    }
+
+    /// The absolute-deadline urgency of a request (smaller = more
+    /// urgent), for the preemptive revoke path. `None` means the policy
+    /// has no deadline notion and the request is never preempted for.
+    fn urgency(&self, _r: &Request) -> Option<Cycle> {
+        None
+    }
 }
 
 /// First-come-first-served across all active requests.
@@ -182,6 +197,14 @@ pub struct SloSlack {
     /// explicit [`Request::deadline`] (fallback deadline = arrival +
     /// budget; unknown tenants never become urgent).
     slo_cycles: Vec<Cycle>,
+    /// Enables the tile-level revoke path: when a deadline-critical
+    /// request has ready tiles but every core slot is taken, dispatched
+    /// tiles of slack-richer requests whose compute has not begun are
+    /// descheduled (their prefetch is redone later — the preemption
+    /// cost). Without this, SloSlack only reorders at dispatch and an
+    /// urgent arrival can still wait out a full pipeline of slack-rich
+    /// prefetches.
+    preempt: bool,
     /// Scan cursor: every request below this index is done. Serving
     /// workloads submit one scheduler request per decode step and mostly
     /// retire them in id order, so without this the per-pick scan would
@@ -191,7 +214,13 @@ pub struct SloSlack {
 
 impl SloSlack {
     pub fn new(slo_cycles: Vec<Cycle>) -> Self {
-        SloSlack { slo_cycles, done_below: 0 }
+        SloSlack { slo_cycles, preempt: false, done_below: 0 }
+    }
+
+    /// The preemptive variant: EDF dispatch plus tile-level revocation of
+    /// not-yet-committed slack-rich tiles when an urgent request starves.
+    pub fn preemptive(slo_cycles: Vec<Cycle>) -> Self {
+        SloSlack { slo_cycles, preempt: true, done_below: 0 }
     }
 
     fn deadline(&self, r: &Request) -> Cycle {
@@ -223,7 +252,19 @@ impl Policy for SloSlack {
     }
 
     fn name(&self) -> &'static str {
-        "slo-slack"
+        if self.preempt {
+            "slo-slack-preempt"
+        } else {
+            "slo-slack"
+        }
+    }
+
+    fn preemptive(&self) -> bool {
+        self.preempt
+    }
+
+    fn urgency(&self, r: &Request) -> Option<Cycle> {
+        Some(self.deadline(r))
     }
 }
 

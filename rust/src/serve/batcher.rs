@@ -29,6 +29,20 @@ pub struct Pending {
     pub arrival: Cycle,
     /// Batch units this request contributes (its own batch size).
     pub size: usize,
+    /// Prompt length in tokens. > 0 means honest prefill: the stream must
+    /// execute a prompt-length-dependent prefill graph before decoding.
+    /// 0 = non-generative request, or the legacy `kv_init` assumption.
+    pub prompt: usize,
+    /// Decode steps this stream will run (sampled per-stream from the
+    /// tenant's `decode_dist`; 0 for non-generative requests).
+    pub decode: usize,
+}
+
+impl Pending {
+    /// A non-generative request (no prompt, no decode budget).
+    pub fn plain(arrival: Cycle, size: usize) -> Self {
+        Pending { arrival, size, prompt: 0, decode: 0 }
+    }
 }
 
 /// A materialized batch: the members and their summed units.
@@ -217,17 +231,21 @@ impl InflightPool {
     }
 
     /// Merge an admitted request into the running batch at `now`. The
-    /// stream starts at `kv_init` cached tokens and will run
-    /// `decode_tokens` steps (at least one).
-    pub fn join(&mut self, p: Pending, now: Cycle, kv_init: usize, decode_tokens: usize) {
+    /// stream starts at `kv` cached tokens (its simulated-prefill prompt
+    /// length, or the legacy `kv_init` assumption) and will run
+    /// `p.decode` steps (at least one). `first_token_at` is pre-set for
+    /// streams whose first token was already produced by the final
+    /// prefill chunk, so [`InflightPool::step_done`] does not re-stamp
+    /// TTFT at their first decode step.
+    pub fn join(&mut self, p: Pending, now: Cycle, kv: usize, first_token_at: Option<Cycle>) {
         self.units += p.size;
         self.streams.push(Stream {
             arrival: p.arrival,
             joined: now,
             units: p.size,
-            kv: kv_init.max(1),
-            remaining: decode_tokens.max(1),
-            first_token_at: None,
+            kv: kv.max(1),
+            remaining: p.decode.max(1),
+            first_token_at,
         });
     }
 
@@ -283,7 +301,12 @@ mod tests {
     use super::*;
 
     fn p(arrival: Cycle, size: usize) -> Pending {
-        Pending { arrival, size }
+        Pending::plain(arrival, size)
+    }
+
+    /// A generative pending request with a per-stream decode budget.
+    fn pd(arrival: Cycle, size: usize, decode: usize) -> Pending {
+        Pending { arrival, size, prompt: 0, decode }
     }
 
     #[test]
@@ -409,8 +432,8 @@ mod tests {
     #[test]
     fn pool_joins_and_retires_in_order() {
         let mut pool = InflightPool::new(4);
-        pool.join(p(0, 1), 10, 8, 2); // retires after 2 steps
-        pool.join(p(5, 1), 10, 8, 3); // retires after 3 steps
+        pool.join(pd(0, 1, 2), 10, 8, None); // retires after 2 steps
+        pool.join(pd(5, 1, 3), 10, 8, None); // retires after 3 steps
         assert_eq!(pool.units(), 2);
         assert_eq!(pool.capacity_left(), 2);
         assert_eq!(pool.oldest_arrival(), Some(0));
@@ -420,7 +443,7 @@ mod tests {
         // Both founding members completed their first step together.
         assert_eq!(out.first_tokens, vec![0, 5]);
         // Joiner mid-generation: enters at its own kv, not the pool's.
-        pool.join(p(90, 1), 101, 8, 2);
+        pool.join(pd(90, 1, 2), 101, 8, None);
         assert_eq!(pool.len(), 3);
 
         let out = pool.step_done(200);
@@ -446,11 +469,11 @@ mod tests {
     #[test]
     fn pool_kv_grows_per_request() {
         let mut pool = InflightPool::new(8);
-        pool.join(p(0, 1), 0, 100, 4);
+        pool.join(pd(0, 1, 4), 0, 100, None);
         pool.step_done(10);
         pool.step_done(20);
         // Late joiner starts fresh while the veteran has grown.
-        pool.join(p(15, 1), 21, 50, 4);
+        pool.join(pd(15, 1, 4), 21, 50, None);
         assert_eq!(pool.streams()[0].kv, 102);
         assert_eq!(pool.streams()[1].kv, 50);
         assert_eq!(pool.max_kv(), 102);
@@ -460,10 +483,25 @@ mod tests {
     }
 
     #[test]
+    fn prefilled_join_does_not_restamp_ttft() {
+        // A stream whose first token came out of its final prefill chunk
+        // joins with first_token_at preset; the pool must not report it
+        // again among step_done's first_tokens.
+        let mut pool = InflightPool::new(4);
+        pool.join(Pending { arrival: 0, size: 1, prompt: 128, decode: 2 }, 50, 128, Some(40));
+        pool.join(pd(5, 1, 2), 50, 8, None);
+        let out = pool.step_done(100);
+        assert_eq!(out.first_tokens, vec![5], "only the legacy stream stamps TTFT here");
+        assert_eq!(pool.streams()[0].first_token_at, Some(40));
+        // Prefilled stream entered at its prompt-length KV and grew once.
+        assert_eq!(pool.streams()[0].kv, 129);
+    }
+
+    #[test]
     fn pool_units_track_multi_unit_streams() {
         let mut pool = InflightPool::new(8);
-        pool.join(p(0, 3), 0, 8, 1);
-        pool.join(p(1, 2), 0, 8, 5);
+        pool.join(pd(0, 3, 1), 0, 8, None);
+        pool.join(pd(1, 2, 5), 0, 8, None);
         assert_eq!(pool.units(), 5);
         assert_eq!(pool.capacity_left(), 3);
         let retired = pool.step_done(10).retired;

@@ -20,10 +20,24 @@
 //!   tracked; decode-step graphs are reused through
 //!   [`crate::models::DecodeGraphCache`]'s KV bucketing.
 //!
+//! **Honest prefill** (`prompt_max > 0`): a joining stream first executes
+//! a prompt-length-dependent prefill graph as real simulated work — so
+//! TTFT is a measured quantity, not the `kv_init` assumption. Prompts are
+//! processed one stream at a time (FIFO), optionally split into
+//! `prefill_chunk`-token chunks. Each iteration submits up to two
+//! scheduler requests — the pool's decode step and one prefill chunk —
+//! which execute *concurrently* on the simulated hardware (contending
+//! for cores, DRAM and the NoC); the next iteration boundary is when
+//! both complete. Chunking therefore bounds how long one long prompt can
+//! stretch co-resident streams' TBT: an unchunked 4k-token prompt holds
+//! the boundary for its whole prefill, a 256-token chunk only for one
+//! chunk's worth. Per-stream decode lengths come from the tenant's
+//! `decode_dist` ([`DecodeLenDist`]), so retirement is not lock-step.
+//!
 //! Every submitted request carries a deadline (`oldest member arrival +
 //! tenant SLO`) via [`GlobalScheduler::set_deadline`], which the
 //! [`crate::scheduler::SloSlack`] policy turns into slack-ordered tile
-//! dispatch.
+//! dispatch (and, in its preemptive variant, tile-level revocation).
 //!
 //! [`ServeDriver::next_event`] reports the earliest pending arrival or
 //! flush deadline, so the event-horizon fast-forward stays exact even
@@ -34,34 +48,70 @@
 
 use super::batcher::{Batcher, InflightPool, Pending};
 use super::slo::{SloReport, Summary, TenantReport};
-use super::traffic::TrafficGen;
+use super::traffic::{DecodeLenDist, TrafficGen};
 use crate::config::serve::ServeConfig;
 use crate::config::NpuConfig;
 use crate::graph::optimizer::{optimize, OptLevel};
-use crate::models::{self, DecodeGraphCache};
+use crate::models::{self, DecodeGraphCache, PrefillGraphCache};
 use crate::scheduler::{GlobalScheduler, Policy};
 use crate::sim::{Driver, Simulator};
+use crate::util::rng::Rng;
 use crate::{Cycle, NEVER};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+
+/// One admitted stream still processing its prompt (the prefill phase).
+struct PrefillStream {
+    p: Pending,
+    /// Prompt tokens processed by completed chunks.
+    done_tokens: usize,
+    /// Completion cycle of the final chunk — when the stream's first
+    /// token came out. Pre-seeds the pool stream's TTFT stamp.
+    finished_at: Option<Cycle>,
+}
 
 /// Generative-serving state for one tenant (absent on the whole-graph
 /// path).
 struct DecodeState {
     cache: DecodeGraphCache,
+    prefill_cache: PrefillGraphCache,
     pool: InflightPool,
+    /// Streams processing their prompt, FIFO; the front advances one
+    /// chunk per iteration and joins the pool when its prompt is done.
+    prefill: VecDeque<PrefillStream>,
     /// Join policy: merge at every iteration boundary (continuous) vs
     /// only when the pool has fully drained (whole-batch baseline).
     continuous: bool,
-    decode_tokens: usize,
+    /// KV length assumed pre-cached for streams *without* a prompt
+    /// (`prompt == 0`, the legacy path). Prefill streams enter at their
+    /// prompt length instead.
     kv_init: usize,
+    /// Chunked prefill: tokens per prefill pass (0 = whole prompt).
+    prefill_chunk: usize,
     /// Request id of the in-flight decode step, if any. At most one step
     /// per tenant is in flight — the iteration boundary is its completion.
     step_inflight: Option<usize>,
+    /// In-flight prefill chunk, if any: (request id, tokens it covers).
+    prefill_inflight: Option<(usize, usize)>,
     /// Completion cycle of the previous step (TBT); cleared when the pool
     /// goes idle so gaps across idle periods are not counted.
     last_step_done: Option<Cycle>,
     steps: u64,
+    prefill_steps: u64,
+}
+
+impl DecodeState {
+    /// True while this iteration's work (decode step and/or prefill
+    /// chunk) is still executing.
+    fn mid_iteration(&self) -> bool {
+        self.step_inflight.is_some() || self.prefill_inflight.is_some()
+    }
+
+    /// Units held by streams in the prefill phase (they count against the
+    /// pool budget so promotion cannot over-commit it).
+    fn prefill_units(&self) -> usize {
+        self.prefill.iter().map(|s| s.p.size).sum()
+    }
 }
 
 struct TenantState {
@@ -70,6 +120,14 @@ struct TenantState {
     gen: TrafficGen,
     batcher: Batcher,
     slo_cycles: Cycle,
+    /// Dedicated RNG stream for per-request prompt/decode lengths,
+    /// sampled in arrival order — identical across batching modes and
+    /// policies at the same seed, and decoupled from the arrival RNG.
+    work_rng: Rng,
+    /// Uniform prompt-length bounds; (0, 0) disables prefill modeling.
+    prompt_min: usize,
+    prompt_max: usize,
+    decode_dist: DecodeLenDist,
     /// Optimized batched graphs by unit count: the zoo builds and the
     /// optimizer runs once per (model, units), then clones per submit.
     /// (Whole-graph path; decode steps cache inside [`DecodeState`].)
@@ -86,11 +144,28 @@ struct TenantState {
     tbt: Vec<u64>,
 }
 
+impl TenantState {
+    /// Sample one arriving request's prompt and decode lengths.
+    fn sample_work(&mut self) -> (usize, usize) {
+        if self.decode.is_none() {
+            return (0, 0);
+        }
+        let prompt = if self.prompt_max > 0 {
+            self.work_rng.range(self.prompt_min as u64, self.prompt_max as u64) as usize
+        } else {
+            0
+        };
+        (prompt, self.decode_dist.sample(&mut self.work_rng))
+    }
+}
+
 enum Inflight {
     /// A whole-graph batch: completion closes out every member.
     Batch { tenant: usize, submitted: Cycle, members: Vec<Pending> },
     /// One decode step of a tenant's in-flight pool.
     DecodeStep { tenant: usize },
+    /// One prefill chunk of the tenant's oldest prompt-processing stream.
+    PrefillChunk { tenant: usize },
 }
 
 /// Open-loop serving driver (see module docs).
@@ -102,10 +177,25 @@ pub struct ServeDriver {
     injection_done: bool,
 }
 
-/// Iteration boundary for tenant `ti`: merge admitted requests into the
-/// in-flight pool per its join policy, then launch the next decode step
-/// if the pool has members. No-op while a step is in flight or for
-/// non-generative tenants.
+/// Admit one request into the generative pipeline: streams with a prompt
+/// enter the prefill phase; legacy streams (prompt 0) join the pool
+/// directly at the `kv_init` assumption.
+fn admit(dec: &mut DecodeState, p: Pending, now: Cycle) {
+    if p.prompt > 0 {
+        dec.prefill.push_back(PrefillStream { p, done_tokens: 0, finished_at: None });
+    } else {
+        dec.pool.join(p, now, dec.kv_init, None);
+    }
+}
+
+/// Iteration boundary for tenant `ti` (generative serving): admit queued
+/// requests per the join policy, promote prefill-complete streams into
+/// the decode pool, then launch this iteration's work — one decode step
+/// for the pool and/or one prefill chunk for the oldest prompt still
+/// processing. The two requests execute concurrently on the simulated
+/// hardware (contending for cores, DRAM and the NoC); the next boundary
+/// is when both complete. No-op mid-iteration or for non-generative
+/// tenants.
 fn merge_and_launch(
     ti: usize,
     ts: &mut TenantState,
@@ -114,42 +204,77 @@ fn merge_and_launch(
     sched: &mut GlobalScheduler,
 ) {
     let Some(dec) = ts.decode.as_mut() else { return };
-    if dec.step_inflight.is_some() {
+    if dec.mid_iteration() {
         return;
     }
+    // 1. Admit from the batcher. Prefill-phase streams count against the
+    //    unit budget so promotion can never over-commit the pool.
     if dec.continuous {
-        // Continuous batching: pull as much queued work as the pool has
-        // room for, immediately — no timeout wait.
-        let budget = dec.pool.capacity_left();
+        // Continuous batching: pull as much queued work as the pipeline
+        // has room for, immediately — no timeout wait.
+        let occupied = dec.pool.units() + dec.prefill_units();
+        let budget = dec.pool.max_units.saturating_sub(occupied);
         if budget > 0 {
-            for p in ts.batcher.take_upto(budget, dec.pool.is_empty()) {
+            let oversize_ok = dec.pool.is_empty() && dec.prefill.is_empty();
+            for p in ts.batcher.take_upto(budget, oversize_ok) {
                 ts.queue_delay.push(now - p.arrival);
-                dec.pool.join(p, now, dec.kv_init, dec.decode_tokens);
+                admit(dec, p, now);
             }
         }
-    } else if dec.pool.is_empty() {
+    } else if dec.pool.is_empty() && dec.prefill.is_empty() {
         // Whole-batch decode: the next batch forms only once the previous
-        // generation fully drained, under the usual flush rules.
+        // generation (prompts included) fully drained, under the usual
+        // flush rules.
         if let Some(batch) = ts.batcher.flush(now) {
             for p in batch.members {
                 ts.queue_delay.push(now - p.arrival);
-                dec.pool.join(p, now, dec.kv_init, dec.decode_tokens);
+                admit(dec, p, now);
             }
         }
     }
-    if dec.pool.is_empty() {
-        return;
+    // 2. Promote prefill-complete streams (FIFO) into the decode pool;
+    //    they enter at their prompt-length KV with TTFT already stamped
+    //    by the final chunk. An oversized stream may join an empty pool
+    //    (mirroring the batcher's oversize rule); otherwise it waits for
+    //    capacity.
+    while let Some(front) = dec.prefill.front() {
+        if front.done_tokens < front.p.prompt {
+            break;
+        }
+        if front.p.size > dec.pool.capacity_left() && !dec.pool.is_empty() {
+            break;
+        }
+        let s = dec.prefill.pop_front().expect("front exists");
+        dec.pool.join(s.p, now, s.p.prompt, s.finished_at);
     }
-    let units = dec.pool.units();
-    let g = dec.cache.step(units, dec.pool.max_kv());
-    let id = sched.add_request(g, now, ti);
-    let deadline = dec.pool.oldest_arrival().unwrap_or(now).saturating_add(ts.slo_cycles);
-    sched.set_deadline(id, deadline);
-    dec.step_inflight = Some(id);
-    dec.steps += 1;
-    ts.batches += 1;
-    ts.units_submitted += units as u64;
-    inflight.insert(id, Inflight::DecodeStep { tenant: ti });
+    // 3. Launch the pool's decode step.
+    if !dec.pool.is_empty() {
+        let units = dec.pool.units();
+        let g = dec.cache.step(units, dec.pool.max_kv());
+        let id = sched.add_request(g, now, ti);
+        let deadline = dec.pool.oldest_arrival().unwrap_or(now).saturating_add(ts.slo_cycles);
+        sched.set_deadline(id, deadline);
+        dec.step_inflight = Some(id);
+        dec.steps += 1;
+        ts.batches += 1;
+        ts.units_submitted += units as u64;
+        inflight.insert(id, Inflight::DecodeStep { tenant: ti });
+    }
+    // 4. Launch a prefill chunk for the oldest prompt still processing
+    //    (one stream advances per iteration; chunked prefill bounds how
+    //    much prompt work any single iteration can add).
+    if let Some(front) = dec.prefill.front() {
+        if front.done_tokens < front.p.prompt {
+            let left = front.p.prompt - front.done_tokens;
+            let chunk = if dec.prefill_chunk == 0 { left } else { dec.prefill_chunk.min(left) };
+            let g = dec.prefill_cache.chunk(front.p.size, chunk, front.done_tokens + chunk);
+            let id = sched.add_request(g, now, ti);
+            sched.set_deadline(id, front.p.arrival.saturating_add(ts.slo_cycles));
+            dec.prefill_inflight = Some((id, chunk));
+            dec.prefill_steps += 1;
+            inflight.insert(id, Inflight::PrefillChunk { tenant: ti });
+        }
+    }
 }
 
 impl ServeDriver {
@@ -174,6 +299,19 @@ impl ServeDriver {
             if continuous && load.decode_tokens == 0 {
                 anyhow::bail!("tenant {i}: continuous batching requires decode_tokens > 0");
             }
+            if load.prompt_min > load.prompt_max {
+                anyhow::bail!(
+                    "tenant {i}: prompt_min {} exceeds prompt_max {}",
+                    load.prompt_min,
+                    load.prompt_max
+                );
+            }
+            if load.prompt_max > 0 && load.decode_tokens == 0 {
+                anyhow::bail!(
+                    "tenant {i}: prefill modeling (prompt_max > 0) requires generative \
+                     serving (decode_tokens > 0)"
+                );
+            }
             let decode = if load.decode_tokens > 0 {
                 let tcfg = models::decode_cfg(&load.model).ok_or_else(|| {
                     anyhow::anyhow!(
@@ -183,19 +321,28 @@ impl ServeDriver {
                     )
                 })?;
                 Some(DecodeState {
-                    cache: DecodeGraphCache::new(tcfg, load.kv_block),
+                    cache: DecodeGraphCache::new(tcfg.clone(), load.kv_block),
+                    prefill_cache: PrefillGraphCache::new(tcfg, load.kv_block),
                     pool: InflightPool::new(load.max_batch),
+                    prefill: VecDeque::new(),
                     continuous,
-                    decode_tokens: load.decode_tokens,
                     kv_init: load.kv_init,
+                    prefill_chunk: load.prefill_chunk,
                     step_inflight: None,
+                    prefill_inflight: None,
                     last_step_done: None,
                     steps: 0,
+                    prefill_steps: 0,
                 })
             } else {
                 // Validate the model name up front so on_tick can't fail.
                 models::by_name(&load.model, 1)?;
                 None
+            };
+            let decode_dist = if load.decode_tokens > 0 {
+                DecodeLenDist::from_load(load)?
+            } else {
+                DecodeLenDist::Constant(0)
             };
             // Decorrelate per-tenant streams without coupling them to
             // tenant count or order of construction.
@@ -207,6 +354,12 @@ impl ServeDriver {
                 gen: TrafficGen::from_load(load, core_freq_ghz, seed)?,
                 batcher: Batcher::new(load.max_batch, timeout, load.max_queue),
                 slo_cycles: scfg.tenant_slo_cycles(i, core_freq_ghz),
+                // A distinct stream from the arrival RNG: work-length
+                // sampling must not perturb arrival times.
+                work_rng: Rng::new(seed ^ 0x5851_F42D_4C95_7F2D),
+                prompt_min: if load.prompt_max > 0 { load.prompt_min.max(1) } else { 0 },
+                prompt_max: load.prompt_max,
+                decode_dist,
                 graph_cache: HashMap::new(),
                 decode,
                 offered: 0,
@@ -256,6 +409,7 @@ impl ServeDriver {
                     ts.units_submitted as f64 / ts.batches as f64
                 },
                 decode_steps: ts.decode.as_ref().map_or(0, |d| d.steps),
+                prefill_steps: ts.decode.as_ref().map_or(0, |d| d.prefill_steps),
                 queue_delay: Summary::from_cycles(&ts.queue_delay, core_freq_ghz),
                 e2e: Summary::from_cycles(&ts.e2e, core_freq_ghz),
                 ttft: Summary::from_cycles(&ts.ttft, core_freq_ghz),
@@ -279,21 +433,42 @@ impl ServeDriver {
             tenants,
         }
     }
+
+    /// Close out one of the iteration's requests: if the other (decode
+    /// step or prefill chunk) is still running, wait for it; otherwise
+    /// this is the iteration boundary — newcomers merge, prefill-complete
+    /// streams promote, and the next iteration launches in the same
+    /// cycle.
+    fn finish_iteration(&mut self, tenant: usize, now: Cycle, sched: &mut GlobalScheduler) {
+        if self.tenants[tenant].decode.as_ref().is_some_and(|d| d.mid_iteration()) {
+            return;
+        }
+        let ts = &mut self.tenants[tenant];
+        merge_and_launch(tenant, ts, &mut self.inflight, now, sched);
+        let dec = self.tenants[tenant].decode.as_mut().expect("generative tenant");
+        if dec.step_inflight.is_none() {
+            // No decode step this iteration (pool idle or prefill-only):
+            // don't count the gap as TBT.
+            dec.last_step_done = None;
+        }
+    }
 }
 
 impl Driver for ServeDriver {
     fn on_tick(&mut self, now: Cycle, sched: &mut GlobalScheduler) {
         let inflight = &mut self.inflight;
         for (ti, ts) in self.tenants.iter_mut().enumerate() {
-            // 1. Inject arrivals due now (inside the open-loop window).
+            // 1. Inject arrivals due now (inside the open-loop window),
+            //    stamping each with its sampled prompt/decode lengths.
             while let Some((t, size)) = ts.gen.peek() {
                 if t > now || t >= self.duration {
                     break;
                 }
                 ts.gen.pop();
                 ts.offered += 1;
+                let (prompt, decode) = ts.sample_work();
                 // Rejections are counted inside the batcher.
-                ts.batcher.offer(Pending { arrival: t, size });
+                ts.batcher.offer(Pending { arrival: t, size, prompt, decode });
             }
             if ts.decode.is_some() {
                 // 2a. Generative serving: merge + launch at the iteration
@@ -333,7 +508,10 @@ impl Driver for ServeDriver {
         }
         self.injection_done = self.tenants.iter().all(|ts| {
             ts.batcher.is_empty()
-                && ts.decode.as_ref().map_or(true, |d| d.pool.is_empty())
+                && ts
+                    .decode
+                    .as_ref()
+                    .map_or(true, |d| d.pool.is_empty() && d.prefill.is_empty())
                 && match ts.gen.peek() {
                     None => true,
                     Some((t, _)) => t >= self.duration,
@@ -365,8 +543,10 @@ impl Driver for ServeDriver {
                     ts.tbt.push(now - last);
                 }
                 dec.last_step_done = Some(now);
-                // Advance the pool; streams completing their first step
-                // record TTFT, retired streams complete now.
+                // Advance the pool; legacy (`kv_init`) streams completing
+                // their first step record TTFT, retired streams complete
+                // now. Prefilled streams stamped TTFT at their final
+                // prefill chunk and are not re-counted.
                 let out = dec.pool.step_done(now);
                 for &arrival in &out.first_tokens {
                     ts.ttft.push(now - arrival);
@@ -379,14 +559,23 @@ impl Driver for ServeDriver {
                         ts.within_slo += 1;
                     }
                 }
-                // The iteration boundary: newcomers merge and the next
-                // step launches in the same cycle.
-                merge_and_launch(tenant, ts, &mut self.inflight, now, sched);
-                let dec = self.tenants[tenant].decode.as_mut().unwrap();
-                if dec.step_inflight.is_none() {
-                    // Pool went idle: don't count the idle gap as TBT.
-                    dec.last_step_done = None;
+                self.finish_iteration(tenant, now, sched);
+            }
+            Some(Inflight::PrefillChunk { tenant }) => {
+                let ts = &mut self.tenants[tenant];
+                let dec = ts.decode.as_mut().expect("prefill chunk for non-generative tenant");
+                let (id, tokens) =
+                    dec.prefill_inflight.take().expect("prefill chunk not tracked");
+                debug_assert_eq!(id, request_id);
+                let front = dec.prefill.front_mut().expect("prefill chunk without a stream");
+                front.done_tokens += tokens;
+                if front.done_tokens >= front.p.prompt && front.finished_at.is_none() {
+                    // The final chunk emitted the stream's first token:
+                    // TTFT is the simulated prompt-processing latency.
+                    front.finished_at = Some(now);
+                    ts.ttft.push(now - front.p.arrival);
                 }
+                self.finish_iteration(tenant, now, sched);
             }
         }
     }
@@ -406,14 +595,19 @@ impl Driver for ServeDriver {
                     }
                 }
                 Some(dec) => {
-                    // Decode iterations are completion-driven; a timed
-                    // wake-up is only needed when no step is in flight and
-                    // queued work waits to form or join a pool.
-                    if dec.step_inflight.is_none() && !ts.batcher.is_empty() {
-                        if dec.continuous {
+                    // Iterations are completion-driven; a timed wake-up is
+                    // only needed when nothing is in flight and work waits
+                    // to launch (queued arrivals, an unfinished prompt, or
+                    // a pool with members after a boundary stall).
+                    if !dec.mid_iteration() {
+                        if !dec.pool.is_empty() || !dec.prefill.is_empty() {
                             next = next.min(now);
-                        } else if let Some(d) = ts.batcher.ready_at(now) {
-                            next = next.min(d);
+                        } else if !ts.batcher.is_empty() {
+                            if dec.continuous {
+                                next = next.min(now);
+                            } else if let Some(d) = ts.batcher.ready_at(now) {
+                                next = next.min(d);
+                            }
                         }
                     }
                 }
@@ -607,6 +801,92 @@ mod tests {
         assert_eq!(t.completed, t.admitted);
         assert!(t.decode_steps >= 4);
         assert_eq!(t.ttft.count as u64, t.completed);
+    }
+
+    /// A single continuous tenant with honest prefill (fixed 256-token
+    /// prompts) under constant load; chunk size switchable.
+    fn prefill_scenario(chunk: usize) -> ServeConfig {
+        let mut t =
+            TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 4).with_prefill(256, chunk);
+        t.process = "constant".into();
+        t.max_batch = 4;
+        t.kv_block = 64;
+        t.max_queue = 64;
+        ServeConfig { seed: 5, duration_ms: 0.05, slo_ms: 5.0, tenants: vec![t] }
+    }
+
+    #[test]
+    fn prefill_runs_as_real_work_and_stamps_ttft() {
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &prefill_scenario(64))
+            .unwrap();
+        let t = &rep.tenants[0];
+        assert!(t.offered > 0, "no arrivals generated");
+        assert_eq!(t.offered, t.admitted + t.rejected);
+        assert_eq!(t.completed, t.admitted, "every admitted stream retires");
+        // Prefill was simulated, not assumed: 256-token prompts at a
+        // 64-token chunk mean exactly 4 chunks per admitted stream.
+        assert_eq!(t.prefill_steps, 4 * t.completed);
+        // Every stream's TTFT comes from its final prefill chunk.
+        assert_eq!(t.ttft.count as u64, t.completed);
+        assert!(t.ttft.p50_ms > 0.0);
+        assert!(t.ttft.p50_ms <= t.e2e.p50_ms);
+        assert!(t.decode_steps >= 4);
+    }
+
+    #[test]
+    fn unchunked_prefill_is_one_pass_per_stream() {
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &prefill_scenario(0))
+            .unwrap();
+        let t = &rep.tenants[0];
+        assert!(t.completed > 0);
+        assert_eq!(t.prefill_steps, t.completed, "whole prompt in one pass");
+        assert_eq!(t.ttft.count as u64, t.completed);
+    }
+
+    #[test]
+    fn prefill_same_seed_identical_report() {
+        let scfg = prefill_scenario(64);
+        let a = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        let b = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn geometric_decode_lengths_are_not_lockstep() {
+        // With geometric per-stream lengths, retirements spread out; the
+        // run still conserves every stream and stays seed-deterministic.
+        let mut scfg = prefill_scenario(64);
+        scfg.tenants[0].decode_dist = "geometric".into();
+        scfg.tenants[0].decode_tokens = 8;
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        let t = &rep.tenants[0];
+        assert!(t.completed > 0);
+        assert_eq!(t.completed, t.admitted);
+        assert_eq!(t.ttft.count as u64, t.completed);
+        // Deterministic across runs, like every other mode.
+        let again = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        assert_eq!(rep.to_json(), again.to_json());
+    }
+
+    #[test]
+    fn prefill_config_validation() {
+        // Prompt lengths on a non-generative tenant are rejected...
+        let mut t = TenantLoadConfig::poisson("mlp", 1000.0);
+        t.prompt_min = 64;
+        t.prompt_max = 64;
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
+        // ...as are inverted prompt bounds...
+        let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 1000.0, 4);
+        t.prompt_min = 128;
+        t.prompt_max = 64;
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
+        // ...and an unknown decode-length distribution.
+        let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 1000.0, 4);
+        t.decode_dist = "zipf".into();
+        let scfg = ServeConfig { seed: 1, duration_ms: 0.1, slo_ms: 1.0, tenants: vec![t] };
+        assert!(ServeDriver::new(&scfg, 1.0).is_err());
     }
 
     #[test]

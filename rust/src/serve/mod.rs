@@ -30,4 +30,4 @@ pub mod traffic;
 pub use batcher::{Batch, Batcher, InflightPool, Pending, StepOutcome, Stream};
 pub use driver::{run_serve, ServeDriver};
 pub use slo::{SloReport, Summary, TenantReport};
-pub use traffic::{ArrivalProcess, BatchDist, TrafficGen};
+pub use traffic::{ArrivalProcess, BatchDist, DecodeLenDist, TrafficGen};

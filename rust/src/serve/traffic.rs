@@ -11,10 +11,17 @@
 //!   smoothed/paced clients; CV = 1 recovers the exponential.
 //! - **Constant** — fixed-rate pacing (load-generator style).
 //! - **Replay** — the arrivals of an existing [`Trace`], so frozen
-//!   workloads (`onnxim trace gen`) replay bit-identically.
+//!   workloads (`onnxim trace gen`) replay bit-identically. Reachable
+//!   directly from a scenario file via `process = "replay"` plus a
+//!   `trace` path on the tenant.
 //!
 //! Rates are specified in requests/second and converted to cycles via the
 //! NPU core frequency, keeping scenario files hardware-independent.
+//!
+//! [`DecodeLenDist`] is the per-stream decode-length distribution for
+//! generative serving: constant, geometric (the classic open-loop LLM
+//! output-length model), or empirical (uniform over a recorded support) —
+//! so stream retirement is no longer lock-step.
 
 use crate::config::serve::TenantLoadConfig;
 use crate::tenant::{Trace, TraceEntry};
@@ -48,6 +55,64 @@ impl BatchDist {
                 let (lo, hi) = (lo.max(1), hi.max(lo).max(1));
                 rng.range(lo as u64, hi as u64) as usize
             }
+        }
+    }
+}
+
+/// Per-stream decode-length distribution for generative serving.
+///
+/// Sampled once per request at arrival (from a dedicated per-tenant RNG
+/// stream), so the same seed assigns the same lengths to the same
+/// arrivals regardless of batching mode or scheduling policy — the
+/// apples-to-apples property the mode-comparison tests lean on.
+#[derive(Debug, Clone)]
+pub enum DecodeLenDist {
+    /// Every stream decodes exactly this many tokens.
+    Constant(usize),
+    /// Geometric with the given mean (support starts at 1): the
+    /// memoryless stop-token model, CV -> 1 for large means.
+    Geometric { mean: f64 },
+    /// Uniform over a recorded support of lengths.
+    Empirical(Vec<usize>),
+}
+
+impl DecodeLenDist {
+    /// Build from a [`TenantLoadConfig`]'s `decode_dist` / `decode_lens` /
+    /// `decode_tokens` fields.
+    pub fn from_load(load: &TenantLoadConfig) -> Result<Self> {
+        Ok(match load.decode_dist.as_str() {
+            "constant" => DecodeLenDist::Constant(load.decode_tokens),
+            "geometric" => {
+                if load.decode_tokens == 0 {
+                    bail!("geometric decode_dist needs decode_tokens > 0 (the mean)");
+                }
+                DecodeLenDist::Geometric { mean: load.decode_tokens as f64 }
+            }
+            "empirical" => {
+                if load.decode_lens.is_empty() {
+                    bail!("empirical decode_dist needs a non-empty decode_lens list");
+                }
+                DecodeLenDist::Empirical(load.decode_lens.clone())
+            }
+            other => bail!("unknown decode_dist '{other}' (constant|geometric|empirical)"),
+        })
+    }
+
+    /// Sample one stream's decode length (always >= 1).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match self {
+            DecodeLenDist::Constant(n) => (*n).max(1),
+            DecodeLenDist::Geometric { mean } => {
+                // Inverse-CDF: P(len = k) = p (1-p)^(k-1), p = 1/mean.
+                let p = (1.0 / mean.max(1.0)).min(1.0);
+                if p >= 1.0 {
+                    return 1;
+                }
+                let u = rng.f64().max(1e-12);
+                let k = (u.ln() / (1.0 - p).ln()).floor() as u64 + 1;
+                (k.min(1 << 24)) as usize
+            }
+            DecodeLenDist::Empirical(lens) => (*rng.choose(lens)).max(1),
         }
     }
 }
@@ -92,6 +157,8 @@ impl TrafficGen {
     }
 
     /// Build from a [`TenantLoadConfig`] (the JSON scenario format).
+    /// `process = "replay"` loads the tenant's `trace` file and replays
+    /// its `trace_tenant` entries instead of sampling a process.
     pub fn from_load(load: &TenantLoadConfig, core_freq_ghz: f64, seed: u64) -> Result<Self> {
         let process = match load.process.as_str() {
             "poisson" => ArrivalProcess::Poisson,
@@ -102,7 +169,25 @@ impl TrafficGen {
                 ArrivalProcess::Gamma { cv: load.cv }
             }
             "constant" => ArrivalProcess::Constant,
-            other => bail!("unknown arrival process '{other}' (poisson|gamma|constant)"),
+            "replay" => {
+                let path = load.trace.as_deref().ok_or_else(|| {
+                    anyhow::anyhow!("process = \"replay\" needs a 'trace' file path")
+                })?;
+                let trace = Trace::load(path)?;
+                let gen = TrafficGen::replay(&trace, load.trace_tenant);
+                if gen.peek().is_none() {
+                    // A typo'd tenant id would otherwise "succeed" while
+                    // offering zero load and measuring nothing.
+                    bail!(
+                        "replay trace '{path}' has no entries for tenant {} \
+                         ({} entries total)",
+                        load.trace_tenant,
+                        trace.entries.len()
+                    );
+                }
+                return Ok(gen);
+            }
+            other => bail!("unknown arrival process '{other}' (poisson|gamma|constant|replay)"),
         };
         if load.rate_rps <= 0.0 {
             bail!("tenant rate must be positive, got {}", load.rate_rps);
@@ -326,5 +411,104 @@ mod tests {
         let mut load = TenantLoadConfig::poisson("mlp", 100.0);
         load.process = "pareto".into();
         assert!(TrafficGen::from_load(&load, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn from_load_replay_roundtrips_through_trace_file() {
+        // Freeze a stochastic stream to disk, then build a replay tenant
+        // from config pointing at that file: identical arrivals.
+        let mut gen = TrafficGen::new(ArrivalProcess::Poisson, BatchDist::Fixed(3), 2000.0, 1.0, 21);
+        let trace = gen.sample_trace("mlp", 2, 10_000_000);
+        assert!(!trace.entries.is_empty());
+        let path = std::env::temp_dir().join("onnxim_replay_cfg_test.json");
+        let path_str = path.to_str().unwrap().to_string();
+        trace.save(&path_str).unwrap();
+
+        let mut load = TenantLoadConfig::poisson("mlp", 0.0); // rate ignored on replay
+        load.process = "replay".into();
+        load.trace = Some(path_str.clone());
+        load.trace_tenant = 2;
+        let mut replay = TrafficGen::from_load(&load, 1.0, 99).unwrap();
+        for e in &trace.entries {
+            assert_eq!(replay.pop(), Some((e.arrival, e.batch)));
+        }
+        assert_eq!(replay.pop(), None);
+        // A tenant id with no entries in the trace is a construction
+        // error (silent empty load would measure nothing)...
+        load.trace_tenant = 9;
+        assert!(TrafficGen::from_load(&load, 1.0, 99).is_err());
+        // ...as is a missing trace path.
+        load.trace = None;
+        assert!(TrafficGen::from_load(&load, 1.0, 99).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn decode_dist_constant_is_exact() {
+        let mut rng = Rng::new(1);
+        let d = DecodeLenDist::Constant(16);
+        for _ in 0..100 {
+            assert_eq!(d.sample(&mut rng), 16);
+        }
+        // Degenerate zero clamps to one token.
+        assert_eq!(DecodeLenDist::Constant(0).sample(&mut rng), 1);
+    }
+
+    #[test]
+    fn decode_dist_geometric_moments_stable_across_seeds() {
+        // Mean within 5% of the target and CV within 10% of the
+        // geometric's sqrt(1-p), for every seed tried.
+        for seed in [1, 7, 13, 42] {
+            for mean_target in [4.0_f64, 32.0] {
+                let d = DecodeLenDist::Geometric { mean: mean_target };
+                let mut rng = Rng::new(seed);
+                let n = 50_000;
+                let samples: Vec<f64> = (0..n).map(|_| d.sample(&mut rng) as f64).collect();
+                let mean = samples.iter().sum::<f64>() / n as f64;
+                let var =
+                    samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+                let cv = var.sqrt() / mean;
+                let p = 1.0 / mean_target;
+                let want_cv = (1.0 - p).sqrt();
+                assert!(
+                    (mean - mean_target).abs() / mean_target < 0.05,
+                    "seed {seed} mean {mean} vs {mean_target}"
+                );
+                assert!(
+                    (cv - want_cv).abs() / want_cv.max(1e-9) < 0.1,
+                    "seed {seed} cv {cv} vs {want_cv}"
+                );
+                assert!(samples.iter().all(|&s| s >= 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_dist_empirical_stays_on_support_and_matches_mean() {
+        let support = vec![2usize, 8, 32];
+        let d = DecodeLenDist::Empirical(support.clone());
+        for seed in [3, 9, 27] {
+            let mut rng = Rng::new(seed);
+            let n = 30_000;
+            let samples: Vec<usize> = (0..n).map(|_| d.sample(&mut rng)).collect();
+            assert!(samples.iter().all(|s| support.contains(s)));
+            let mean = samples.iter().sum::<usize>() as f64 / n as f64;
+            let want = support.iter().sum::<usize>() as f64 / support.len() as f64;
+            assert!((mean - want).abs() / want < 0.05, "seed {seed}: mean {mean} vs {want}");
+        }
+    }
+
+    #[test]
+    fn decode_dist_from_load_validates() {
+        let mut load = TenantLoadConfig::continuous("gpt-tiny-decode", 100.0, 16);
+        assert!(matches!(DecodeLenDist::from_load(&load).unwrap(), DecodeLenDist::Constant(16)));
+        load.decode_dist = "geometric".into();
+        assert!(DecodeLenDist::from_load(&load).is_ok());
+        load.decode_dist = "empirical".into();
+        assert!(DecodeLenDist::from_load(&load).is_err(), "empirical needs decode_lens");
+        load.decode_lens = vec![4, 8];
+        assert!(DecodeLenDist::from_load(&load).is_ok());
+        load.decode_dist = "zipf".into();
+        assert!(DecodeLenDist::from_load(&load).is_err());
     }
 }

@@ -123,8 +123,11 @@ impl Simulator {
             //    "now" dispatch this very cycle.
             driver.on_tick(now, &mut self.sched);
 
-            // 1. Activate arrivals and dispatch tiles to free cores.
+            // 1. Activate arrivals and dispatch tiles to free cores. A
+            //    preemptive policy may first revoke uncommitted tiles of
+            //    slack-rich requests so urgent work lands this cycle.
             self.sched.activate_arrivals(now);
+            self.sched.preempt(&mut self.cores, now);
             for c in 0..self.cores.len() {
                 while self.cores[c].wants_tile() {
                     match self.sched.pick_tile(c, now) {

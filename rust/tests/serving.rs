@@ -1,13 +1,15 @@
 //! Serving-stack integration tests: continuous vs static batching for
-//! decode, SLO-slack vs FCFS scheduling, and determinism goldens.
+//! decode, SLO-slack vs FCFS scheduling, honest (chunked) prefill, the
+//! preemptive SLO-slack variant, and determinism goldens.
 //!
-//! The batching comparison is apples-to-apples by construction: both
-//! modes serve the *same* arrival stream and every request decodes the
-//! same number of tokens, so the only degree of freedom is when a
-//! request may enter the running batch — at the next iteration boundary
-//! (continuous) or only after the previous batch's whole generation has
-//! drained (static / request-level batching). The structural queueing
-//! gap, not a tuned timing constant, is what the assertions lean on.
+//! Every comparison is apples-to-apples by construction: both sides
+//! serve the *same* arrival stream with the *same* per-stream prompt and
+//! decode lengths (sampled from a dedicated RNG in arrival order), so
+//! the only degree of freedom is the mechanism under test — when a
+//! request may enter the running batch, how much prompt work one
+//! iteration may carry, or whether dispatched tiles can be revoked. The
+//! structural gap, not a tuned timing constant, is what the assertions
+//! lean on.
 
 use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
@@ -149,6 +151,170 @@ fn serve_report_is_seed_deterministic_golden() {
             .to_json()
     };
     assert_eq!(mk(), mk());
+}
+
+/// One continuous tenant with honest prefill: fixed `prompt`-token
+/// prompts processed as real simulated work, `chunk`-token chunks
+/// (0 = whole prompt in one pass). Constant arrivals outpace service so
+/// the pool stays populated — every later stream's prefill runs beside
+/// co-resident decode streams.
+fn prefill_scenario(prompt: usize, chunk: usize, decode: usize, rate: f64) -> ServeConfig {
+    let mut t =
+        TenantLoadConfig::continuous("gpt-tiny-decode", rate, decode).with_prefill(prompt, chunk);
+    t.process = "constant".into();
+    t.max_batch = 4;
+    t.max_queue = 256;
+    t.kv_block = 64;
+    ServeConfig { seed: 42, duration_ms: 0.15, slo_ms: 10.0, tenants: vec![t] }
+}
+
+#[test]
+fn ttft_monotonically_increases_with_prompt_length_at_fixed_load() {
+    // Same arrival stream, same decode lengths, unchunked prefill: a
+    // longer prompt is strictly more simulated prefill work, so measured
+    // TTFT (arrival -> final prefill chunk) must grow with it.
+    let mut prev_mean = 0.0;
+    for prompt in [64, 256, 1024] {
+        let scfg = prefill_scenario(prompt, 0, 8, 20_000.0);
+        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg).unwrap();
+        let t = &rep.tenants[0];
+        assert!(t.completed >= 2, "prompt {prompt}: too few completions: {t:?}");
+        assert_eq!(t.completed, t.admitted);
+        assert_eq!(t.ttft.count as u64, t.completed);
+        assert_eq!(t.prefill_steps, t.completed, "unchunked: one pass per stream");
+        assert!(
+            t.ttft.mean_ms > prev_mean,
+            "prompt {prompt}: TTFT {} ms did not grow past {} ms",
+            t.ttft.mean_ms,
+            prev_mean
+        );
+        prev_mean = t.ttft.mean_ms;
+    }
+}
+
+#[test]
+fn chunked_prefill_lowers_cotenant_tbt_p99_at_equal_offered_rate() {
+    // 1024-token prompts beside 32-token decodes. Unchunked, the
+    // iteration that admits a prompt carries its entire prefill, so every
+    // co-resident decode stream's TBT takes a prompt-sized hit; 128-token
+    // chunks bound the prompt work per iteration. Same arrivals, same
+    // lengths, same total work — only the interleaving differs.
+    let whole = run_serve(
+        NpuConfig::server(),
+        Box::new(Fcfs::new()),
+        &prefill_scenario(1024, 0, 32, 100_000.0),
+    )
+    .unwrap();
+    let chunked = run_serve(
+        NpuConfig::server(),
+        Box::new(Fcfs::new()),
+        &prefill_scenario(1024, 128, 32, 100_000.0),
+    )
+    .unwrap();
+    let (tw, tc) = (&whole.tenants[0], &chunked.tenants[0]);
+    // Equal offered load, nothing shed, everything drains.
+    assert_eq!(tw.offered, tc.offered);
+    assert_eq!(tw.rejected, 0, "unchunked run unexpectedly shed load");
+    assert_eq!(tc.rejected, 0, "chunked run unexpectedly shed load");
+    assert_eq!(tw.completed, tc.completed);
+    assert!(tc.completed >= 5, "scenario too small for a meaningful p99: {tc:?}");
+    // Chunking multiplies prefill passes without changing stream count.
+    assert_eq!(tw.prefill_steps, tw.completed);
+    assert_eq!(tc.prefill_steps, 8 * tc.completed, "1024/128 = 8 chunks per stream");
+    // Both runs observed decode gaps while prompts were processing.
+    assert!(tw.tbt.count > 10 && tc.tbt.count > 10, "{} / {}", tw.tbt.count, tc.tbt.count);
+    // The acceptance bar: chunked prefill lowers co-tenant TBT p99 at
+    // equal offered rate.
+    assert!(
+        tc.tbt.p99_ms < tw.tbt.p99_ms,
+        "chunked TBT p99 {} ms should beat unchunked {} ms",
+        tc.tbt.p99_ms,
+        tw.tbt.p99_ms
+    );
+    // And the report is a deterministic, seeded artifact: byte-identical
+    // on a re-run.
+    let again = run_serve(
+        NpuConfig::server(),
+        Box::new(Fcfs::new()),
+        &prefill_scenario(1024, 128, 32, 100_000.0),
+    )
+    .unwrap();
+    assert_eq!(chunked.to_json(), again.to_json());
+}
+
+#[test]
+fn preemptive_slo_slack_never_worse_for_tight_tenant() {
+    // Same two-tenant scenario as the SLO-slack test: the preemptive
+    // variant may additionally revoke the hog's uncommitted prefetch
+    // tiles when a tight request starves, so the tight tenant's SLO
+    // attainment must never drop below the non-preemptive policy's.
+    let scfg = tight_vs_hog_scenario();
+    let freq = NpuConfig::mobile().core_freq_ghz;
+    let plain = run_serve(
+        NpuConfig::mobile(),
+        Box::new(SloSlack::new(scfg.slo_cycles(freq))),
+        &scfg,
+    )
+    .unwrap();
+    let preempt = run_serve(
+        NpuConfig::mobile(),
+        Box::new(SloSlack::preemptive(scfg.slo_cycles(freq))),
+        &scfg,
+    )
+    .unwrap();
+    assert_eq!(preempt.policy, "slo-slack-preempt");
+    let (p0, q0) = (&plain.tenants[0], &preempt.tenants[0]);
+    assert_eq!(p0.offered, q0.offered);
+    assert_eq!(q0.completed, q0.admitted);
+    assert!(
+        q0.slo_attainment >= p0.slo_attainment,
+        "preemptive attainment {} dropped below non-preemptive {}",
+        q0.slo_attainment,
+        p0.slo_attainment
+    );
+    // Revocation reorders, never starves: the hog still completes its
+    // admitted work under preemption.
+    assert_eq!(preempt.tenants[1].completed, plain.tenants[1].completed);
+    // Deterministic like every other policy.
+    let again = run_serve(
+        NpuConfig::mobile(),
+        Box::new(SloSlack::preemptive(scfg.slo_cycles(freq))),
+        &scfg,
+    )
+    .unwrap();
+    assert_eq!(preempt.to_json(), again.to_json());
+}
+
+#[test]
+fn serve_config_replay_tenant_round_trips_trace_gen() {
+    // PR 1 leftover: `process = "replay"` directly inside a ServeConfig
+    // tenant. Freeze a stochastic stream with the `trace gen` machinery,
+    // point a scenario tenant at the file, and the serving run must offer
+    // exactly the frozen arrivals — byte-identically across runs.
+    let mut load = TenantLoadConfig::poisson("mlp", 30_000.0);
+    load.cv = 1.0;
+    let mut sampler = TrafficGen::from_load(&load, 1.0, 77).unwrap();
+    let window: Cycle = 400_000; // matches duration_ms 0.4 at 1 GHz
+    let trace = sampler.sample_trace("mlp", 0, window);
+    assert!(!trace.entries.is_empty(), "no arrivals sampled");
+    let path = std::env::temp_dir().join("onnxim_serve_replay_roundtrip.json");
+    let path_str = path.to_str().unwrap().to_string();
+    trace.save(&path_str).unwrap();
+
+    let mut tenant = TenantLoadConfig::poisson("mlp", 1.0);
+    tenant.process = "replay".into();
+    tenant.trace = Some(path_str);
+    tenant.max_batch = 4;
+    tenant.batch_timeout_us = 20.0;
+    let scfg = ServeConfig { seed: 7, duration_ms: 0.4, slo_ms: 5.0, tenants: vec![tenant] };
+    let rep = run_serve(NpuConfig::mobile(), Box::new(Fcfs::new()), &scfg).unwrap();
+    let t = &rep.tenants[0];
+    assert_eq!(t.offered as usize, trace.entries.len(), "replay must offer the frozen load");
+    assert_eq!(t.offered, t.admitted + t.rejected);
+    assert_eq!(t.completed, t.admitted);
+    let again = run_serve(NpuConfig::mobile(), Box::new(Fcfs::new()), &scfg).unwrap();
+    assert_eq!(rep.to_json(), again.to_json());
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
