@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""CI gate for `onnxim bench kernel` output.
+
+Usage: check_kernel_bench.py BENCH_kernel.json bench/baseline_kernel.json
+
+Two kinds of gates:
+
+- Relative (always armed, machine-independent): the windowed kernel must
+  beat the in-tree reference kernel on the dense-contention workload, and
+  the parallel sweep must beat serial when more than one thread ran.
+  These compare two measurements from the *same* run on the *same*
+  machine, so runner speed cancels out.
+
+- Absolute (armed once the committed baseline carries a measured
+  windowed_cycles_per_sec): fail when throughput regresses more than
+  `max_regression_frac` (default 30%) below the baseline.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        cur = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+
+    failures = []
+
+    dense = cur["dense"]
+    min_dense = base.get("dense", {}).get("min_speedup", 1.05)
+    print(f"dense: {dense['windowed_cycles_per_sec']:.0f} sim-cycles/s windowed, "
+          f"{dense['reference_cycles_per_sec']:.0f} reference, "
+          f"speedup {dense['speedup']:.2f}x (gate >= {min_dense}x)")
+    if dense["speedup"] < min_dense:
+        failures.append(
+            f"windowed kernel only {dense['speedup']:.2f}x over reference "
+            f"(gate {min_dense}x)")
+
+    sweep = cur["sweep"]
+    min_sweep = base.get("sweep", {}).get("min_speedup", 1.1)
+    print(f"sweep: serial {sweep['serial_sec']:.2f}s, parallel {sweep['parallel_sec']:.2f}s "
+          f"on {sweep['threads']:.0f} threads, speedup {sweep['speedup']:.2f}x "
+          f"(gate >= {min_sweep}x when threads > 1)")
+    if sweep["threads"] > 1 and sweep["speedup"] < min_sweep:
+        failures.append(
+            f"parallel sweep only {sweep['speedup']:.2f}x over serial on "
+            f"{sweep['threads']:.0f} threads (gate {min_sweep}x)")
+
+    base_tput = base.get("dense", {}).get("windowed_cycles_per_sec", 0)
+    frac = base.get("max_regression_frac", 0.3)
+    if base_tput > 0:
+        floor = (1.0 - frac) * base_tput
+        print(f"absolute: {dense['windowed_cycles_per_sec']:.0f} vs baseline "
+              f"{base_tput:.0f} sim-cycles/s (floor {floor:.0f})")
+        if dense["windowed_cycles_per_sec"] < floor:
+            failures.append(
+                f"dense throughput {dense['windowed_cycles_per_sec']:.0f} sim-cycles/s "
+                f"regressed >{frac:.0%} below baseline {base_tput:.0f}")
+    else:
+        print("absolute: baseline not yet recorded (windowed_cycles_per_sec=0) — "
+              "relative gates only")
+
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("OK: all kernel-bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
 use onnxim::scheduler::{Fcfs, SloSlack};
 use onnxim::serve::run_serve;
+use onnxim::sim::sweep;
 use onnxim::util::stats::Table;
 
 /// One decode-heavy GPT tenant: `decode_tokens` one-token steps per
@@ -69,23 +70,34 @@ fn main() {
         "batching", "rate r/s", "completed", "p50 ms", "p99 ms", "TTFT p99", "queue p99",
         "pool occ",
     ]);
-    for &rate in rates {
-        for continuous in [false, true] {
-            let scfg = decode_scenario(rate, duration_ms, continuous);
-            let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
-                .expect("decode scenario");
-            let t = &rep.tenants[0];
-            table.row(&[
-                t.mode.clone(),
-                format!("{rate:.0}"),
-                format!("{}", t.completed),
-                format!("{:.4}", t.e2e.p50_ms),
-                format!("{:.4}", t.e2e.p99_ms),
-                format!("{:.4}", t.ttft.p99_ms),
-                format!("{:.4}", t.queue_delay.p99_ms),
-                format!("{:.2}", t.mean_batch_units),
-            ]);
-        }
+    // Independent points, each with its own seeded RNG: run the sweep
+    // across threads (byte-identical to a serial run), render in order.
+    let points: Vec<(f64, bool)> =
+        rates.iter().flat_map(|&r| [false, true].map(|c| (r, c))).collect();
+    let jobs: Vec<_> = points
+        .iter()
+        .map(|&(rate, continuous)| {
+            move || {
+                let scfg = decode_scenario(rate, duration_ms, continuous);
+                run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
+                    .expect("decode scenario")
+            }
+        })
+        .collect();
+    for (&(rate, _), rep) in
+        points.iter().zip(&sweep::run_jobs(jobs, sweep::available_threads()))
+    {
+        let t = &rep.tenants[0];
+        table.row(&[
+            t.mode.clone(),
+            format!("{rate:.0}"),
+            format!("{}", t.completed),
+            format!("{:.4}", t.e2e.p50_ms),
+            format!("{:.4}", t.e2e.p99_ms),
+            format!("{:.4}", t.ttft.p99_ms),
+            format!("{:.4}", t.queue_delay.p99_ms),
+            format!("{:.2}", t.mean_batch_units),
+        ]);
     }
     table.print();
     println!("\n(continuous merges requests at iteration boundaries instead of");
@@ -99,17 +111,25 @@ fn main() {
     let mut table = Table::new(&[
         "policy", "tenant", "SLO ms", "p99 ms", "SLO att", "goodput r/s",
     ]);
-    for use_slack in [false, true] {
-        let rep = if use_slack {
-            run_serve(
-                NpuConfig::mobile(),
-                Box::new(SloSlack::new(scfg.slo_cycles(freq))),
-                &scfg,
-            )
-        } else {
-            run_serve(NpuConfig::mobile(), Box::new(Fcfs::new()), &scfg)
-        }
-        .expect("two-tenant scenario");
+    let jobs: Vec<_> = [false, true]
+        .into_iter()
+        .map(|use_slack| {
+            let scfg = scfg.clone();
+            move || {
+                if use_slack {
+                    run_serve(
+                        NpuConfig::mobile(),
+                        Box::new(SloSlack::new(scfg.slo_cycles(freq))),
+                        &scfg,
+                    )
+                } else {
+                    run_serve(NpuConfig::mobile(), Box::new(Fcfs::new()), &scfg)
+                }
+                .expect("two-tenant scenario")
+            }
+        })
+        .collect();
+    for rep in sweep::run_jobs(jobs, 2) {
         for t in &rep.tenants {
             table.row(&[
                 rep.policy.clone(),

@@ -25,6 +25,7 @@ use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
 use onnxim::scheduler::Fcfs;
 use onnxim::serve::run_serve;
+use onnxim::sim::sweep;
 use onnxim::util::stats::Table;
 
 /// A decode-heavy GPT tenant with long prompts; chunk size switchable.
@@ -52,10 +53,19 @@ fn main() {
         "chunk", "completed", "prefill passes", "TTFT p50", "TTFT p99", "TBT p50", "TBT p99",
         "e2e p99",
     ]);
-    for &chunk in chunks {
-        let scfg = prefill_scenario(prompt, chunk, duration_ms);
-        let rep = run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
-            .expect("prefill scenario");
+    // Each chunk size is an independent simulation point: sweep across
+    // threads (byte-identical to serial), render in order.
+    let jobs: Vec<_> = chunks
+        .iter()
+        .map(|&chunk| {
+            move || {
+                let scfg = prefill_scenario(prompt, chunk, duration_ms);
+                run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
+                    .expect("prefill scenario")
+            }
+        })
+        .collect();
+    for (&chunk, rep) in chunks.iter().zip(&sweep::run_jobs(jobs, sweep::available_threads())) {
         let t = &rep.tenants[0];
         table.row(&[
             if chunk == 0 { "whole".to_string() } else { format!("{chunk}") },

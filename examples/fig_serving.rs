@@ -17,6 +17,7 @@ use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
 use onnxim::scheduler::{Fcfs, Policy, TimeShared};
 use onnxim::serve::run_serve;
+use onnxim::sim::sweep;
 use onnxim::util::stats::Table;
 
 fn scenario(total_rate_rps: f64, duration_ms: f64) -> ServeConfig {
@@ -54,31 +55,44 @@ fn main() {
     let mut table = Table::new(&[
         "policy", "rate r/s", "tenant", "p50 ms", "p99 ms", "SLO att", "goodput r/s", "rejected",
     ]);
-    for policy_name in ["fcfs", "time-shared"] {
-        for &rate in rates {
-            let scfg = scenario(rate, duration_ms);
-            let report = run_serve(NpuConfig::server(), policy_by_name(policy_name), &scfg)
-                .expect("serve scenario");
-            for t in &report.tenants {
-                table.row(&[
-                    policy_name.to_string(),
-                    format!("{rate:.0}"),
-                    t.model.clone(),
-                    format!("{:.3}", t.e2e.p50_ms),
-                    format!("{:.3}", t.e2e.p99_ms),
-                    format!("{:.0}%", 100.0 * t.slo_attainment),
-                    format!("{:.1}", t.goodput_rps),
-                    format!("{}", t.rejected),
-                ]);
+    // Every (policy, rate) point is an independent simulation with its own
+    // seeded RNG: fan the sweep out across threads (results are identical
+    // to a serial run), then render in order.
+    let points: Vec<(&str, f64)> = ["fcfs", "time-shared"]
+        .iter()
+        .flat_map(|&p| rates.iter().map(move |&r| (p, r)))
+        .collect();
+    let jobs: Vec<_> = points
+        .iter()
+        .map(|&(policy_name, rate)| {
+            move || {
+                let scfg = scenario(rate, duration_ms);
+                run_serve(NpuConfig::server(), policy_by_name(policy_name), &scfg)
+                    .expect("serve scenario")
             }
-            println!(
-                "  {policy_name} @ {rate:.0} r/s: worst p99 {:.3} ms, total rejected {}",
-                report.tenants.iter().map(|t| t.e2e.p99_ms).fold(0.0, f64::max),
-                report.tenants.iter().map(|t| t.rejected).sum::<u64>()
-            );
+        })
+        .collect();
+    let reports = sweep::run_jobs(jobs, sweep::available_threads());
+    for ((policy_name, rate), report) in points.iter().zip(&reports) {
+        for t in &report.tenants {
+            table.row(&[
+                policy_name.to_string(),
+                format!("{rate:.0}"),
+                t.model.clone(),
+                format!("{:.3}", t.e2e.p50_ms),
+                format!("{:.3}", t.e2e.p99_ms),
+                format!("{:.0}%", 100.0 * t.slo_attainment),
+                format!("{:.1}", t.goodput_rps),
+                format!("{}", t.rejected),
+            ]);
         }
-        println!();
+        println!(
+            "  {policy_name} @ {rate:.0} r/s: worst p99 {:.3} ms, total rejected {}",
+            report.tenants.iter().map(|t| t.e2e.p99_ms).fold(0.0, f64::max),
+            report.tenants.iter().map(|t| t.rejected).sum::<u64>()
+        );
     }
+    println!();
     table.print();
     println!("\n(p99 grows with offered rate as queueing dominates; policies split");
     println!(" the pain differently — time-shared serializes layers, FCFS interleaves)");

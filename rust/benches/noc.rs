@@ -3,7 +3,7 @@
 
 use onnxim::config::{DramConfig, NocConfig};
 use onnxim::dram::{DramSystem, MemRequest};
-use onnxim::noc::build_noc;
+use onnxim::noc::{build_noc, Noc};
 use onnxim::util::stats::Table;
 use std::time::Instant;
 

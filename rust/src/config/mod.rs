@@ -181,6 +181,11 @@ pub struct NpuConfig {
     pub vector_latency: VectorLatency,
     pub dram: DramConfig,
     pub noc: NocConfig,
+    /// Simulation safety cap in cycles (0 = unlimited, the default): a
+    /// run whose clock passes this fails with a diagnostic naming the
+    /// stuck components instead of busy-spinning forever. Also settable
+    /// per-run via `--max-cycles`.
+    pub max_cycles: u64,
 }
 
 impl NpuConfig {
@@ -203,6 +208,7 @@ impl NpuConfig {
             vector_latency: VectorLatency::default(),
             dram: DramConfig::ddr4_mobile(),
             noc: NocConfig::simple(),
+            max_cycles: 0,
         }
     }
 
@@ -242,6 +248,7 @@ impl NpuConfig {
                 link_bytes_per_cycle: 160.0,
                 input_queue_flits: 256,
             },
+            max_cycles: 0,
         }
     }
 
@@ -308,6 +315,7 @@ impl NpuConfig {
             ("element_bytes", Json::num(self.element_bytes as f64)),
             ("acc_element_bytes", Json::num(self.acc_element_bytes as f64)),
             ("dma_max_inflight", Json::num(self.dma_max_inflight as f64)),
+            ("max_cycles", Json::num(self.max_cycles as f64)),
             (
                 "vector_latency",
                 Json::obj(vec![
@@ -379,6 +387,11 @@ impl NpuConfig {
             element_bytes: j.req("element_bytes")?.as_usize()?,
             acc_element_bytes: j.req("acc_element_bytes")?.as_usize()?,
             dma_max_inflight: j.req("dma_max_inflight")?.as_usize()?,
+            // Optional (absent in pre-cap config files): 0 = unlimited.
+            max_cycles: match j.get("max_cycles") {
+                Some(v) => v.as_u64()?,
+                None => 0,
+            },
             vector_latency: VectorLatency {
                 add: vj.req("add")?.as_u64()?,
                 mul: vj.req("mul")?.as_u64()?,

@@ -21,13 +21,22 @@
 //! branch checks.
 
 use crate::config::NpuConfig;
-use crate::dram::{MemRequest, MemResponse};
+use crate::dram::{MemRequest, MemResponse, RespSink};
 use crate::isa::{LatencyModel, Opcode, Unit};
 use crate::lowering::{JobRef, Tile};
-use crate::noc::Noc;
+use crate::noc::{Noc, NocKind};
 use crate::{Cycle, NEVER};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+/// NoC-delivered memory responses land directly on their core: the event
+/// kernel passes `&mut [Core]` as the response sink, so the per-cycle
+/// scratch-buffer round-trip through the simulator is gone.
+impl RespSink for [Core] {
+    fn deliver(&mut self, now: Cycle, resp: MemResponse) {
+        self[resp.core].on_response(&resp, now);
+    }
+}
 
 /// Aggregate per-core statistics.
 #[derive(Debug, Clone, Copy, Default)]
@@ -68,6 +77,11 @@ struct TileExec {
     /// has begun — or finished and moved on to write-back — is past the
     /// revocable window; only pure-prefetch tiles may be descheduled.
     compute_issued: bool,
+    /// Memory-traffic instructions (MVIN/MVOUT) not yet completed. While
+    /// any remain, the tile may still inject NoC requests, so the core is
+    /// not decoupled from the shared memory system (see
+    /// [`Core::tick_window`]'s fast-forward guard).
+    mem_left: u32,
 }
 
 impl TileExec {
@@ -75,13 +89,25 @@ impl TileExec {
         let n = tile.instrs.len();
         let mut deps_left = vec![0u32; n];
         let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut mem_left = 0u32;
         for (i, instr) in tile.instrs.iter().enumerate() {
             deps_left[i] = instr.deps.len() as u32;
             for &d in &instr.deps {
                 dependents[d as usize].push(i as u32);
             }
+            if matches!(instr.op, Opcode::Mvin { .. } | Opcode::Mvout { .. }) {
+                mem_left += 1;
+            }
         }
-        TileExec { tile, deps_left, dependents, dma: vec![None; n], n_done: 0, compute_issued: false }
+        TileExec {
+            tile,
+            deps_left,
+            dependents,
+            dma: vec![None; n],
+            n_done: 0,
+            compute_issued: false,
+            mem_left,
+        }
     }
 
     fn complete(&self) -> bool {
@@ -116,6 +142,16 @@ pub struct Core {
     dma_blocked: bool,
     /// Completed tiles not yet drained by the scheduler.
     finished: Vec<JobRef>,
+    /// Cycle the earliest undrained tile completion became visible
+    /// (`NEVER` when `finished` is empty). May lie ahead of the global
+    /// clock after an in-window fast-forward; the kernel hands the tile
+    /// to the scheduler exactly then.
+    finish_at: Cycle,
+    /// Cached [`Self::next_event`] with dirty-flag invalidation: every
+    /// mutating entry point marks the cache dirty, so the kernel's
+    /// per-iteration `next_cycle` min stops recomputing untouched cores.
+    next_cache: Cycle,
+    next_dirty: bool,
     pub stats: CoreStats,
 }
 
@@ -143,6 +179,9 @@ impl Core {
             next_req_id: (id as u64) << 48, // per-core unique id space
             dma_blocked: false,
             finished: Vec::new(),
+            finish_at: NEVER,
+            next_cache: NEVER,
+            next_dirty: true,
             stats: CoreStats::default(),
         }
     }
@@ -160,6 +199,7 @@ impl Core {
     /// Dispatch a tile into a free slot. Panics if none (check
     /// [`Self::wants_tile`] first).
     pub fn start_tile(&mut self, tile: Tile) {
+        self.next_dirty = true;
         let slot = self
             .slots
             .iter()
@@ -184,9 +224,20 @@ impl Core {
     }
 
     /// Mark instruction complete; release dependents into ready queues.
-    fn complete_instr(&mut self, slot: u8, idx: u32) {
+    /// When the tile's last instruction retires, the tile moves to the
+    /// finished list immediately — visible to the scheduler at `now`.
+    /// (Pre-refactor, collection waited for the *next* core tick, which
+    /// under the event horizon could be an arbitrarily later global
+    /// event; completion latency was silently stretched.)
+    fn complete_instr(&mut self, slot: u8, idx: u32, now: Cycle) {
         let te = self.slots[slot as usize].as_mut().expect("slot live");
         te.n_done += 1;
+        if matches!(
+            te.tile.instrs[idx as usize].op,
+            Opcode::Mvin { .. } | Opcode::Mvout { .. }
+        ) {
+            te.mem_left -= 1;
+        }
         let deps = std::mem::take(&mut te.dependents[idx as usize]);
         for &dep in &deps {
             let te = self.slots[slot as usize].as_mut().unwrap();
@@ -196,39 +247,51 @@ impl Core {
                 self.enqueue_ready(slot, dep, unit);
             }
         }
+        if self.slots[slot as usize].as_ref().is_some_and(|te| te.complete()) {
+            let te = self.slots[slot as usize].take().unwrap();
+            self.stats.tiles_completed += 1;
+            self.finished.push(te.tile.job);
+            self.finish_at = self.finish_at.min(now);
+        }
     }
 
-    /// Handle a returning memory response.
-    pub fn on_response(&mut self, resp: &MemResponse) {
+    /// Handle a returning memory response arriving at cycle `now`.
+    pub fn on_response(&mut self, resp: &MemResponse, now: Cycle) {
         let Some((slot, idx)) = self.inflight.remove(&resp.id) else {
             return;
         };
+        self.next_dirty = true;
         self.dma_blocked = false; // window space freed; resume generation
         let te = self.slots[slot as usize].as_mut().expect("slot live");
         let st = te.dma[idx as usize].as_mut().expect("dma state");
         st.outstanding -= 1;
         if st.remaining == 0 && st.outstanding == 0 {
             te.dma[idx as usize] = None;
-            self.complete_instr(slot, idx);
+            self.complete_instr(slot, idx, now);
         }
     }
 
-    /// True if the core has nothing in flight and no queued work.
+    /// True if the core has nothing in flight, no queued work, and no
+    /// finished tile awaiting scheduler pickup.
     pub fn idle(&self) -> bool {
-        self.slots.iter().all(|s| s.is_none()) && self.inflight.is_empty()
+        self.slots.iter().all(|s| s.is_none())
+            && self.inflight.is_empty()
+            && self.finished.is_empty()
     }
 
     /// Advance to `now`: retire compute completions, issue ready
-    /// instructions, generate DMA requests into the NoC, and collect
-    /// finished tiles. Amortized O(1) per instruction event.
-    pub fn tick(&mut self, now: Cycle, noc: &mut dyn Noc) {
+    /// instructions, and generate DMA requests into the NoC. Completed
+    /// tiles become visible via [`Self::take_finished`] the cycle their
+    /// last instruction retires. Amortized O(1) per instruction event.
+    pub fn tick(&mut self, now: Cycle, noc: &mut NocKind) {
+        self.next_dirty = true;
         // 1. Retire compute completions due by `now`.
         while let Some(&Reverse((c, slot, idx))) = self.completions.peek() {
             if c > now {
                 break;
             }
             self.completions.pop();
-            self.complete_instr(slot, idx);
+            self.complete_instr(slot, idx, now);
         }
 
         // 2. Issue: one instruction may occupy each compute unit.
@@ -292,19 +355,49 @@ impl Core {
 
         // 4. Generate memory requests round-robin across active DMA
         //    instructions, bounded by the window and NoC backpressure.
+        //    (Finished tiles are collected inline by `complete_instr`.)
         self.pump_dma(now, noc);
+    }
 
-        // 5. Collect finished tiles.
-        for slot in 0..Self::NUM_SLOTS {
-            if self.slots[slot].as_ref().is_some_and(|te| te.complete()) {
-                let te = self.slots[slot].take().unwrap();
-                self.stats.tiles_completed += 1;
-                self.finished.push(te.tile.job);
+    /// Advance over the dense window `[now, until)`: one tick at `now`,
+    /// then — while the core is provably [`Self::decoupled`] from every
+    /// other component — its compute events run ahead of the global clock
+    /// *inside* the component, so a long all-compute stretch costs one
+    /// kernel entry instead of one per event.
+    pub fn tick_window(&mut self, now: Cycle, until: Cycle, noc: &mut NocKind) {
+        self.tick(now, noc);
+        let mut t = now;
+        while self.decoupled() {
+            let n = self.next_event(t);
+            if n >= until {
+                break;
             }
+            t = n;
+            self.tick(t, noc);
         }
     }
 
-    fn pump_dma(&mut self, now: Cycle, noc: &mut dyn Noc) {
+    /// True when nothing outside the core can observe or influence it
+    /// before its own next event: no memory responses pending, no DMA
+    /// traffic generated or generatable (every live tile's MVIN/MVOUTs
+    /// have completed), no free slot the scheduler could fill mid-window,
+    /// no revocable tile a preemptive policy could reclaim, and no
+    /// finished tile awaiting pickup. Under these conditions in-window
+    /// fast-forward is byte-identical to cycle-stepped execution.
+    fn decoupled(&self) -> bool {
+        self.finish_at == NEVER
+            && self.inflight.is_empty()
+            && self.active_dma.is_empty()
+            && !self.dma_blocked
+            && self.slots.iter().all(|s| s.is_some())
+            && self
+                .slots
+                .iter()
+                .flatten()
+                .all(|te| te.compute_issued && te.mem_left == 0)
+    }
+
+    fn pump_dma(&mut self, now: Cycle, noc: &mut NocKind) {
         self.dma_blocked = false;
         while !self.active_dma.is_empty() {
             if self.inflight.len() as u64 >= self.dma_max_inflight {
@@ -346,6 +439,16 @@ impl Core {
     /// Drain tiles that finished since the last call.
     pub fn take_finished(&mut self, out: &mut Vec<JobRef>) {
         out.append(&mut self.finished);
+        self.finish_at = NEVER;
+        self.next_dirty = true;
+    }
+
+    /// True when a finished tile is visible at cycle `now` (the kernel's
+    /// window-break condition: the scheduler must see it this cycle). A
+    /// fast-forwarded core may hold a completion with `finish_at` still
+    /// ahead of the global clock; it stays invisible until then.
+    pub fn finished_ready(&self, now: Cycle) -> bool {
+        self.finish_at <= now
     }
 
     /// The job occupying `slot`, if that tile is still **revocable**: no
@@ -369,6 +472,7 @@ impl Core {
         if self.revocable_job(slot).is_none() {
             return None;
         }
+        self.next_dirty = true;
         let te = self.slots[slot].take().expect("checked occupied");
         let s = slot as u8;
         // No completions reference this slot (compute never issued); the
@@ -385,21 +489,30 @@ impl Core {
     /// Earliest cycle at which this core can make progress, or `NEVER`.
     /// O(1): the ready/active queues are explicit.
     pub fn next_event(&self, now: Cycle) -> Cycle {
-        if !self.finished.is_empty() || !self.ready_dma.is_empty() {
+        if !self.ready_dma.is_empty() {
             return now + 1;
         }
-        if !self.active_dma.is_empty()
-            && (self.inflight.len() as u64) < self.dma_max_inflight
-            && !self.dma_blocked
-        {
+        if self.dma_blocked {
+            // NoC injection failed on the last pump: retry every dense
+            // cycle while the network drains. (The saturated NoC keeps
+            // the loop dense anyway; an explicit `now + 1` is required so
+            // the kernel's due-only ticking never strands a blocked DMA.)
+            return now + 1;
+        }
+        if !self.active_dma.is_empty() && (self.inflight.len() as u64) < self.dma_max_inflight {
             // Window space available and the NoC accepted last time:
             // generation can proceed immediately.
             return now + 1;
         }
-        // Window-full or NoC-blocked DMA resumes via on_response /
-        // NoC drain — both are covered by the DRAM/NoC next_event in the
-        // global event-horizon min, so no dense ticking here.
+        // Window-full DMA resumes via on_response — covered by the
+        // DRAM/NoC next_event in the global event-horizon min, so no
+        // dense ticking here.
         let mut next = NEVER;
+        if self.finish_at != NEVER {
+            // A finished tile awaits scheduler pickup (possibly ahead of
+            // the global clock after an in-window fast-forward).
+            next = next.min(self.finish_at.max(now + 1));
+        }
         if let Some(&Reverse((c, _, _))) = self.completions.peek() {
             next = next.min(c.max(now + 1));
         }
@@ -410,6 +523,21 @@ impl Core {
             next = next.min(self.vector_free.max(now + 1));
         }
         next
+    }
+
+    /// [`Self::next_event`] through the dirty-flag cache: untouched cores
+    /// cost one branch instead of a recompute in the kernel's
+    /// per-iteration min. Every mutating entry point (tick, response
+    /// delivery, dispatch, revoke, drain) marks the cache dirty; cached
+    /// values are absolute event cycles, which stay valid while the
+    /// component is untouched because the kernel never advances the clock
+    /// past an unserviced cached event.
+    pub fn cached_next_event(&mut self, now: Cycle) -> Cycle {
+        if self.next_dirty {
+            self.next_cache = self.next_event(now);
+            self.next_dirty = false;
+        }
+        self.next_cache
     }
 }
 
@@ -422,7 +550,7 @@ mod tests {
     use crate::noc::{build_noc, Noc};
 
     /// Build a standalone memory system for core tests.
-    fn memory(cfg: &NpuConfig) -> (Box<dyn Noc>, DramSystem) {
+    fn memory(cfg: &NpuConfig) -> (NocKind, DramSystem) {
         let noc = build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels);
         let dram = DramSystem::new(&cfg.dram, cfg.core_freq_ghz);
         (noc, dram)
@@ -435,7 +563,7 @@ mod tests {
         let mut done = Vec::new();
         let mut now = 0;
         while !core.idle() {
-            core.tick(now, noc.as_mut());
+            core.tick(now, &mut noc);
             delivered.clear();
             noc.tick(now, &mut dram, &mut delivered);
             dram_out.clear();
@@ -446,7 +574,7 @@ mod tests {
             }
             // NoC-delivered responses reach the core.
             for r in &delivered {
-                core.on_response(r);
+                core.on_response(r, now);
             }
             core.take_finished(&mut done);
             now += 1;
@@ -493,7 +621,7 @@ mod tests {
         core.start_tile(gemm_tile(0, 8));
         let (mut noc, mut dram) = memory(&cfg);
         // Tick once without any memory responses: GEMM must not issue.
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         assert_eq!(core.stats.macs, 0, "GEMM issued before its MVINs completed");
         let _ = &mut dram;
     }
@@ -549,7 +677,7 @@ mod tests {
         };
         core.start_tile(tile);
         let (mut noc, _dram) = memory(&cfg);
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         // Both issued in the same cycle: units are independent.
         assert_eq!(core.stats.instrs_issued, 2);
     }
@@ -569,7 +697,7 @@ mod tests {
         };
         core.start_tile(tile);
         let (mut noc, _dram) = memory(&cfg);
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         assert_eq!(core.stats.instrs_issued, 1, "one systolic array: second GEMM must wait");
         let (done, t) = run_core(&mut core, &cfg, 10_000);
         assert_eq!(done.len(), 1);
@@ -588,7 +716,7 @@ mod tests {
         };
         core.start_tile(tile);
         let (mut noc, _d) = memory(&cfg);
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         assert!(core.inflight.len() as u64 <= cfg.dma_max_inflight as u64);
     }
 
@@ -613,7 +741,7 @@ mod tests {
         // One tick: DMA prefetch begins for both tiles, but no memory
         // responses have returned, so no compute has issued — both tiles
         // are still in the revocable window.
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         assert_eq!(core.stats.macs, 0);
         assert!(core.revocable_job(0).is_some());
         assert!(core.revocable_job(1).is_some());
@@ -624,13 +752,16 @@ mod tests {
         assert!(core.revoke_slot(1).is_none(), "empty slot has nothing to revoke");
         // Stale responses from the abandoned prefetch are dropped, not
         // misattributed.
-        core.on_response(&MemResponse {
-            id: 123_456_789,
-            core: 0,
-            is_write: false,
-            completed_at: 5,
-            channel: 0,
-        });
+        core.on_response(
+            &MemResponse {
+                id: 123_456_789,
+                core: 0,
+                is_write: false,
+                completed_at: 5,
+                channel: 0,
+            },
+            5,
+        );
         // Revoke the other prefetching tile too (its outstanding requests
         // live in the first NoC instance, which we now abandon), then
         // re-dispatch both from scratch against fresh memory: both
@@ -663,7 +794,7 @@ mod tests {
         };
         core.start_tile(tile);
         let (mut noc, _dram) = memory(&cfg);
-        core.tick(0, noc.as_mut());
+        core.tick(0, &mut noc);
         assert!(core.revocable_job(0).is_none());
         assert!(core.revoke_slot(0).is_none());
         let (done, _) = run_core(&mut core, &cfg, 10_000);

@@ -23,7 +23,9 @@
 //! - [`dram`] — cycle-level DRAM (DDR4/HBM2 timing, FR-FCFS, IPOLY hashing).
 //! - [`noc`] — simple latency-bandwidth NoC and a flit-level crossbar.
 //! - [`scheduler`] — the global tile scheduler with multi-tenant policies.
-//! - [`sim`] — the top-level simulator loop and statistics.
+//! - [`sim`] — the event kernel (windowed component ticking with an
+//!   in-window event horizon, a per-cycle reference mode for equivalence
+//!   goldens), the parallel sweep runner, and statistics.
 //! - [`tenant`] — multi-tenant request traces.
 //! - [`serve`] — open-loop DNN serving frontend: stochastic traffic
 //!   generators, dynamic batching with admission control, and SLO

@@ -37,8 +37,18 @@
 //!                              [--batch 1] [--tenant 0] [--out trace.json]
 //!   graph     Export a model graph: onnxim graph --model gpt3-small-decode
 //!                                   [--optimize] [--out g.json]
+//!   bench kernel  Event-kernel micro-benchmark: windowed vs reference
+//!             kernel on a dense-contention workload, and a parallel vs
+//!             serial 8-point serve sweep. Asserts byte-identical results
+//!             on both comparisons and writes a JSON summary:
+//!             onnxim bench kernel [--out BENCH_kernel.json] [--threads N]
 //!   validate  Core-model validation vs the RTL reference (Fig. 3b).
 //!   verify    Load artifacts/ and check functional numerics (L1/L2/L3).
+//!
+//! Global simulation flags: `--max-cycles N` (safety cap; a run whose
+//! clock passes N fails naming the stuck components) and
+//! `--kernel windowed|reference` (main-loop strategy; `reference` is the
+//! pre-refactor per-cycle loop kept as the equivalence baseline).
 //!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
 
@@ -48,12 +58,14 @@ use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
 use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
 use onnxim::Cycle;
-use onnxim::serve::{run_serve, TrafficGen};
-use onnxim::sim::{NoDriver, Simulator};
+use onnxim::serve::{run_serve_mode, TrafficGen};
+use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
 use onnxim::tenant::Trace;
+use onnxim::util::json::Json;
 use onnxim::util::stats::{correlation, mape};
 use std::collections::HashMap;
 use std::process::ExitCode;
+use std::time::Instant;
 
 fn parse_args(args: &[String]) -> HashMap<String, String> {
     let mut map = HashMap::new();
@@ -91,7 +103,19 @@ fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
     if let Some(cores) = opts.get("cores") {
         cfg.num_cores = cores.parse()?;
     }
+    if let Some(cap) = opts.get("max-cycles") {
+        cfg.max_cycles = cap.parse()?;
+    }
     Ok(cfg)
+}
+
+/// Parse `--kernel windowed|reference` (default windowed).
+fn kernel_mode(opts: &HashMap<String, String>) -> anyhow::Result<KernelMode> {
+    Ok(match opts.get("kernel").map(String::as_str) {
+        None | Some("windowed") => KernelMode::Windowed,
+        Some("reference") => KernelMode::Reference,
+        Some(other) => anyhow::bail!("unknown kernel mode '{other}' (windowed|reference)"),
+    })
 }
 
 /// Build a scheduling policy. `serve` carries the scenario + core clock
@@ -153,16 +177,18 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
             NocModel::Crossbar => "crossbar",
         }
     );
-    let mut sim = Simulator::new(cfg, policy);
+    let mut sim = Simulator::new(cfg, policy).with_kernel(kernel_mode(&opts)?);
     sim.add_request(graph, 0, 0);
-    let t0 = std::time::Instant::now();
-    let report = sim.run(&mut NoDriver);
+    let t0 = Instant::now();
+    let report = sim.try_run(&mut NoDriver)?;
     let wall = t0.elapsed();
     println!("{}", report.summary());
     println!(
-        "simulation wall-clock: {:.2}s ({:.2}M cycles/s)",
+        "simulation wall-clock: {:.2}s ({:.2}M cycles/s, {} control passes / {} dense steps)",
         wall.as_secs_f64(),
-        report.total_cycles as f64 / wall.as_secs_f64() / 1e6
+        report.total_cycles as f64 / wall.as_secs_f64() / 1e6,
+        sim.iterations,
+        sim.dense_ticks,
     );
     Ok(())
 }
@@ -174,7 +200,7 @@ fn cmd_trace(opts: HashMap<String, String>) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--trace <file.json> required"))?;
     let trace = Trace::load(path)?;
     let policy = make_policy(&opts, cfg.num_cores, None)?;
-    let mut sim = Simulator::new(cfg, policy);
+    let mut sim = Simulator::new(cfg, policy).with_kernel(kernel_mode(&opts)?);
     for e in &trace.entries {
         for _ in 0..e.count {
             let mut g = models::by_name(&e.model, e.batch)?;
@@ -182,7 +208,7 @@ fn cmd_trace(opts: HashMap<String, String>) -> anyhow::Result<()> {
             sim.add_request(g, e.arrival, e.tenant);
         }
     }
-    let report = sim.run(&mut NoDriver);
+    let report = sim.try_run(&mut NoDriver)?;
     println!("{}", report.summary());
     for (i, lat) in report.request_latency.iter().enumerate() {
         if let Some(l) = lat {
@@ -293,7 +319,7 @@ fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
         scfg.duration_ms,
         scfg.seed
     );
-    let report = run_serve(cfg, policy, &scfg)?;
+    let report = run_serve_mode(cfg, policy, &scfg, kernel_mode(&opts)?)?;
     eprintln!("{}", report.render_table());
     let json = report.to_json();
     match opts.get("out") {
@@ -338,6 +364,136 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `bench kernel` — two fixed workloads with built-in equivalence checks:
+///
+/// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
+///    hog, Mobile NPU, 4 cores): the windowed event kernel vs the
+///    reference per-cycle loop on identical inputs. Reports must be
+///    byte-identical; the speedup is the kernel refactor's payoff on the
+///    workload where DRAM/NoC hold in-flight work nearly every cycle.
+/// 2. **Serve sweep** (8 offered-rate points): the parallel sweep runner
+///    vs serial execution of the same points. JSON reports must be
+///    byte-identical; the speedup is bounded by available cores.
+fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    use onnxim::graph::{Activation, Graph, OpKind};
+
+    let threads: usize = opt_parse(&opts, "threads", sweep::available_threads().min(8))?;
+    let matmul = |name: &str, m: usize, k: usize, n: usize| -> Graph {
+        let mut g = Graph::new(name);
+        let x = g.activation("x", &[1, m, k]);
+        let w = g.weight("w", &[k, n]);
+        let y = g.activation("y", &[1, m, n]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        g
+    };
+
+    // --- Workload 1: dense contention, windowed vs reference kernel. ---
+    let dense_run = |mode: KernelMode| -> anyhow::Result<(f64, onnxim::sim::SimReport, u64, u64)> {
+        let mut sim =
+            Simulator::new(NpuConfig::mobile(), Box::new(Spatial::new(vec![0, 1, 1, 1])))
+                .with_kernel(mode);
+        sim.add_request(matmul("gemv", 1, 2048, 2048), 0, 0);
+        sim.add_request(matmul("hog", 512, 2048, 2048), 0, 1);
+        let t0 = Instant::now();
+        let report = sim.try_run(&mut NoDriver)?;
+        Ok((t0.elapsed().as_secs_f64(), report, sim.iterations, sim.dense_ticks))
+    };
+    eprintln!("bench kernel: dense-contention workload (GEMV + hog, 4 cores, mobile)...");
+    let (ref_s, ref_rep, ref_iters, _) = dense_run(KernelMode::Reference)?;
+    let (win_s, win_rep, win_iters, win_dense) = dense_run(KernelMode::Windowed)?;
+    if win_rep.total_cycles != ref_rep.total_cycles
+        || win_rep.total_macs != ref_rep.total_macs
+        || win_rep.request_latency != ref_rep.request_latency
+    {
+        anyhow::bail!(
+            "kernel equivalence violated: windowed {} cycles vs reference {} cycles",
+            win_rep.total_cycles,
+            ref_rep.total_cycles
+        );
+    }
+    let dense_speedup = ref_s / win_s.max(1e-9);
+    eprintln!(
+        "  {} sim cycles: reference {ref_s:.3}s ({ref_iters} passes), windowed {win_s:.3}s \
+         ({win_iters} passes, {win_dense} dense steps) -> {dense_speedup:.2}x",
+        win_rep.total_cycles
+    );
+
+    // --- Workload 2: serial vs parallel 8-point serve sweep. ---
+    let rates =
+        [5_000.0, 10_000.0, 20_000.0, 30_000.0, 40_000.0, 60_000.0, 80_000.0, 100_000.0];
+    let scenario = |rate: f64| -> ServeConfig {
+        let mut t = TenantLoadConfig::poisson("mlp", rate);
+        t.max_batch = 4;
+        t.batch_timeout_us = 50.0;
+        t.max_queue = 64;
+        ServeConfig { seed: 42, duration_ms: 1.0, slo_ms: 1.0, tenants: vec![t] }
+    };
+    let point = |rate: f64| -> String {
+        run_serve_mode(
+            NpuConfig::mobile(),
+            Box::new(Fcfs::new()),
+            &scenario(rate),
+            KernelMode::Windowed,
+        )
+        .expect("sweep point")
+        .to_json()
+    };
+    eprintln!("bench kernel: 8-point serve sweep, serial vs {threads} threads...");
+    let t0 = Instant::now();
+    let serial: Vec<String> = rates.iter().map(|&r| point(r)).collect();
+    let serial_s = t0.elapsed().as_secs_f64();
+    let jobs: Vec<_> = rates.iter().map(|&r| move || point(r)).collect();
+    let t0 = Instant::now();
+    let parallel = sweep::run_jobs(jobs, threads);
+    let parallel_s = t0.elapsed().as_secs_f64();
+    if serial != parallel {
+        anyhow::bail!("parallel sweep diverged from serial results");
+    }
+    let sweep_speedup = serial_s / parallel_s.max(1e-9);
+    eprintln!(
+        "  serial {serial_s:.3}s, parallel {parallel_s:.3}s ({threads} threads) \
+         -> {sweep_speedup:.2}x, results byte-identical"
+    );
+
+    let json = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        (
+            "dense",
+            Json::obj(vec![
+                ("sim_cycles", Json::num(win_rep.total_cycles as f64)),
+                ("reference_sec", Json::num(ref_s)),
+                ("windowed_sec", Json::num(win_s)),
+                ("reference_cycles_per_sec", Json::num(ref_rep.total_cycles as f64 / ref_s)),
+                ("windowed_cycles_per_sec", Json::num(win_rep.total_cycles as f64 / win_s)),
+                ("speedup", Json::num(dense_speedup)),
+                ("control_passes", Json::num(win_iters as f64)),
+                ("dense_steps", Json::num(win_dense as f64)),
+            ]),
+        ),
+        (
+            "sweep",
+            Json::obj(vec![
+                ("points", Json::num(rates.len() as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("serial_sec", Json::num(serial_s)),
+                ("parallel_sec", Json::num(parallel_s)),
+                ("speedup", Json::num(sweep_speedup)),
+            ]),
+        ),
+    ])
+    .pretty();
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
 fn cmd_validate(_opts: HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = NpuConfig::mobile();
     let pairs = rtl_ref::run_validation(&cfg);
@@ -365,13 +521,17 @@ fn cmd_verify(opts: HashMap<String, String>) -> anyhow::Result<()> {
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
-        eprintln!("usage: onnxim <sim|serve|trace|trace gen|graph|validate|verify> [--flags]");
+        eprintln!(
+            "usage: onnxim <sim|serve|trace|trace gen|graph|bench kernel|validate|verify> [--flags]"
+        );
         eprintln!("see rust/src/main.rs header for the full flag list");
         return ExitCode::FAILURE;
     };
-    // `trace gen` is the one two-word subcommand.
+    // `trace gen` and `bench kernel` are the two-word subcommands.
     let (cmd, rest) = if cmd == "trace" && args.get(1).map(String::as_str) == Some("gen") {
         ("trace-gen", &args[2..])
+    } else if cmd == "bench" && args.get(1).map(String::as_str) == Some("kernel") {
+        ("bench-kernel", &args[2..])
     } else {
         (cmd.as_str(), &args[1..])
     };
@@ -382,6 +542,7 @@ fn main() -> ExitCode {
         "trace" => cmd_trace(opts),
         "trace-gen" => cmd_trace_gen(opts),
         "graph" => cmd_graph(opts),
+        "bench-kernel" => cmd_bench_kernel(opts),
         "validate" => cmd_validate(opts),
         "verify" => cmd_verify(opts),
         other => {

@@ -13,7 +13,7 @@
 
 use super::{request_bytes, response_bytes, Noc};
 use crate::config::NocConfig;
-use crate::dram::{DramSystem, MemRequest, MemResponse};
+use crate::dram::{DramSystem, MemRequest, MemResponse, RespSink};
 use crate::{Cycle, NEVER};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -225,7 +225,7 @@ impl Noc for CrossbarNoc {
         self.resp_net.inject(from_channel, resp, dest, flits);
     }
 
-    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut Vec<MemResponse>) {
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
         self.req_net.tick(now);
         self.resp_net.tick(now);
 
@@ -243,7 +243,7 @@ impl Noc for CrossbarNoc {
         self.scratch_resp.clear();
         self.resp_net.drain(now, &mut self.scratch_resp);
         for (_core, resp) in self.scratch_resp.drain(..) {
-            responses_out.push(resp);
+            responses_out.deliver(now, resp);
         }
     }
 

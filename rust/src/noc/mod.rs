@@ -21,7 +21,7 @@ pub use crossbar::CrossbarNoc;
 pub use simple::SimpleNoc;
 
 use crate::config::{NocConfig, NocModel};
-use crate::dram::{DramSystem, MemRequest, MemResponse};
+use crate::dram::{DramSystem, MemRequest, MemResponse, RespSink};
 use crate::Cycle;
 
 /// Packet sizes in bytes: an 8 B header flit plus 64 B of data for
@@ -43,6 +43,11 @@ pub fn response_bytes(resp: &MemResponse, access_granularity: u64) -> u64 {
 }
 
 /// Common interface for both NoC models.
+///
+/// The simulator's hot loop does **not** dispatch through this trait: it
+/// holds the enum-dispatched [`NocKind`] so the per-cycle calls inline.
+/// The trait remains the model-level contract (and lets unit tests and
+/// benches drive either model through `&mut dyn Noc`).
 pub trait Noc {
     /// Inject a request from a core. Returns `false` (backpressure) if the
     /// core's injection port is full; the DMA engine must retry.
@@ -55,8 +60,9 @@ pub trait Noc {
 
     /// Advance one step: move flits/packets, deliver requests into the
     /// DRAM queues (respecting their backpressure) and completed responses
-    /// into `responses_out`.
-    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut Vec<MemResponse>);
+    /// into `responses_out` — the event kernel passes the core array
+    /// itself so delivery is direct, tests pass a `Vec`.
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink);
 
     /// Earliest next cycle this NoC needs a tick, or `crate::NEVER`.
     fn next_event(&self, now: Cycle) -> Cycle;
@@ -67,12 +73,84 @@ pub trait Noc {
     fn delivered(&self) -> (u64, u64);
 }
 
-/// Construct the configured NoC model.
-pub fn build_noc(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Box<dyn Noc> {
-    match cfg.model {
-        NocModel::Simple => Box::new(SimpleNoc::new(cfg, num_cores, num_channels)),
-        NocModel::Crossbar => Box::new(CrossbarNoc::new(cfg, num_cores, num_channels)),
+/// Enum-dispatched NoC: the densest path in the simulator (every in-flight
+/// memory request crosses it twice per round-trip) used to go through
+/// `Box<dyn Noc>` virtual calls on every dense cycle. The enum devirtualizes
+/// that: one match per call, both arms statically dispatched and inlinable.
+pub enum NocKind {
+    Simple(SimpleNoc),
+    Crossbar(CrossbarNoc),
+}
+
+impl NocKind {
+    /// Construct the configured NoC model.
+    pub fn build(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
+        match cfg.model {
+            NocModel::Simple => NocKind::Simple(SimpleNoc::new(cfg, num_cores, num_channels)),
+            NocModel::Crossbar => {
+                NocKind::Crossbar(CrossbarNoc::new(cfg, num_cores, num_channels))
+            }
+        }
     }
+}
+
+impl Noc for NocKind {
+    fn try_inject_request(&mut self, now: Cycle, req: MemRequest) -> bool {
+        match self {
+            NocKind::Simple(n) => n.try_inject_request(now, req),
+            NocKind::Crossbar(n) => n.try_inject_request(now, req),
+        }
+    }
+
+    fn inject_response(&mut self, now: Cycle, resp: MemResponse, from_channel: usize) {
+        match self {
+            NocKind::Simple(n) => n.inject_response(now, resp, from_channel),
+            NocKind::Crossbar(n) => n.inject_response(now, resp, from_channel),
+        }
+    }
+
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
+        match self {
+            NocKind::Simple(n) => n.tick(now, dram, responses_out),
+            NocKind::Crossbar(n) => n.tick(now, dram, responses_out),
+        }
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        match self {
+            NocKind::Simple(n) => n.next_event(now),
+            NocKind::Crossbar(n) => n.next_event(now),
+        }
+    }
+
+    fn idle(&self) -> bool {
+        match self {
+            NocKind::Simple(n) => n.idle(),
+            NocKind::Crossbar(n) => n.idle(),
+        }
+    }
+
+    fn delivered(&self) -> (u64, u64) {
+        match self {
+            NocKind::Simple(n) => n.delivered(),
+            NocKind::Crossbar(n) => n.delivered(),
+        }
+    }
+}
+
+/// DRAM completions feed the response network directly: the kernel passes
+/// the NoC as the DRAM tick's sink, removing the per-cycle scratch-vector
+/// round-trip the old `Simulator` loop paid.
+impl RespSink for NocKind {
+    fn deliver(&mut self, now: Cycle, resp: MemResponse) {
+        let ch = resp.channel;
+        self.inject_response(now, resp, ch);
+    }
+}
+
+/// Construct the configured NoC model (enum-dispatched).
+pub fn build_noc(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> NocKind {
+    NocKind::build(cfg, num_cores, num_channels)
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 
 use super::{request_bytes, response_bytes, Noc};
 use crate::config::NocConfig;
-use crate::dram::{DramSystem, MemRequest, MemResponse};
+use crate::dram::{DramSystem, MemRequest, MemResponse, RespSink};
 use crate::{Cycle, NEVER};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -115,7 +115,7 @@ impl Noc for SimpleNoc {
         self.resp_fly.push(Reverse((arrival, self.seq, resp.into())));
     }
 
-    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut Vec<MemResponse>) {
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
         // Requests that have arrived at the memory side.
         while let Some(Reverse((arr, _, req))) = self.req_fly.peek().copied() {
             if arr > now {
@@ -141,7 +141,7 @@ impl Noc for SimpleNoc {
             self.resp_fly.pop();
             self.inflight_per_core[resp.core] -= 1;
             self.delivered_resp += 1;
-            responses_out.push(resp.into());
+            responses_out.deliver(now, resp.into());
         }
     }
 

@@ -316,6 +316,15 @@ impl GlobalScheduler {
         out.append(&mut self.completed);
     }
 
+    /// True if completed-request ids await draining. Activation can
+    /// complete zero-tile (shape-only) requests outside the tile path, so
+    /// the kernel checks this right after the control plane: a pending
+    /// completion forces a single-cycle window so the driver hears about
+    /// it at the same cycle the pre-refactor loop reported it.
+    pub fn has_completed_pending(&self) -> bool {
+        !self.completed.is_empty()
+    }
+
     /// Latency of a finished request in cycles.
     pub fn latency(&self, id: usize) -> Option<u64> {
         let r = &self.requests[id];

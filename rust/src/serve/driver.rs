@@ -54,7 +54,7 @@ use crate::config::NpuConfig;
 use crate::graph::optimizer::{optimize, OptLevel};
 use crate::models::{self, DecodeGraphCache, PrefillGraphCache};
 use crate::scheduler::{GlobalScheduler, Policy};
-use crate::sim::{Driver, Simulator};
+use crate::sim::{Driver, KernelMode, Simulator};
 use crate::util::rng::Rng;
 use crate::{Cycle, NEVER};
 use anyhow::Result;
@@ -621,14 +621,46 @@ impl Driver for ServeDriver {
     }
 }
 
+/// The serving driver is a first-class component of the event kernel:
+/// its time-triggered work (arrival injection, batch flushes) runs at
+/// window boundaries, its `next_event` bounds every window, and
+/// `finished` is its idle predicate.
+impl crate::sim::kernel::Component for ServeDriver {
+    type Ctx<'a> = &'a mut GlobalScheduler;
+
+    fn tick_window(&mut self, now: Cycle, _until: Cycle, sched: Self::Ctx<'_>) {
+        self.on_tick(now, sched);
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        Driver::next_event(self, now)
+    }
+
+    fn idle(&self) -> bool {
+        self.finished()
+    }
+}
+
 /// Run a full serving scenario: build the driver, simulate until the load
 /// drains, and return the SLO report.
 pub fn run_serve(cfg: NpuConfig, policy: Box<dyn Policy>, scfg: &ServeConfig) -> Result<SloReport> {
+    run_serve_mode(cfg, policy, scfg, KernelMode::Windowed)
+}
+
+/// [`run_serve`] with an explicit kernel mode — the equivalence goldens
+/// and `bench kernel` run the same scenario through the windowed and
+/// reference kernels and assert byte-identical reports.
+pub fn run_serve_mode(
+    cfg: NpuConfig,
+    policy: Box<dyn Policy>,
+    scfg: &ServeConfig,
+    mode: KernelMode,
+) -> Result<SloReport> {
     let policy_name = policy.name().to_string();
     let freq = cfg.core_freq_ghz;
     let mut driver = ServeDriver::new(scfg, freq)?;
-    let mut sim = Simulator::new(cfg, policy);
-    let rep = sim.run(&mut driver);
+    let mut sim = Simulator::new(cfg, policy).with_kernel(mode);
+    let rep = sim.try_run(&mut driver)?;
     Ok(driver.report(rep.total_cycles, &policy_name, scfg, freq))
 }
 

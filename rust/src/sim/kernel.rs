@@ -1,0 +1,207 @@
+//! The event kernel's component interface.
+//!
+//! Everything the simulator clocks — cores, the NoC, DRAM, the global
+//! scheduler, and drivers — implements [`Component`]: a windowed tick, an
+//! earliest-next-event query, and an idle predicate. The kernel
+//! ([`crate::sim::Simulator::run`]) advances the *data plane* (cores +
+//! NoC + DRAM) over a whole window of dense cycles per control-plane
+//! pass, instead of re-entering the top-level loop once per cycle; the
+//! *control plane* (driver hooks, arrival activation, tile dispatch,
+//! completion delivery) runs only at window boundaries, where its effects
+//! are actually observable.
+//!
+//! Windowing is sound because every cross-component interaction is pinned
+//! to a boundary:
+//!
+//! - drivers inject work only at [`crate::sim::Driver::next_event`] times
+//!   or in response to request completions;
+//! - arrivals activate at their (known-in-advance) arrival cycles;
+//! - dispatch needs a free tile slot, which appears only when a tile
+//!   completes — and a tile completion ends the window;
+//! - utilization sampling is pinned by clamping windows to bucket edges.
+//!
+//! Inside a window, components interact per-cycle through the
+//! fixed-order dense loop (cores → NoC → DRAM), with responses delivered
+//! directly ([`RespSink`]) rather than staged through scratch buffers.
+//! The `Reference` kernel mode degenerates every window to a single
+//! cycle, reproducing the pre-refactor per-cycle loop; golden tests
+//! assert the two modes produce byte-identical reports.
+
+use crate::core::Core;
+use crate::dram::{DramSystem, RespSink};
+use crate::noc::{Noc, NocKind};
+use crate::scheduler::GlobalScheduler;
+use crate::Cycle;
+
+/// Which main-loop strategy [`crate::sim::Simulator::run`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Windowed event kernel: control plane per window, dense data plane
+    /// inside. The default.
+    Windowed,
+    /// One-cycle windows: control plane every visited cycle, exactly the
+    /// pre-refactor loop. Kept as the equivalence baseline for golden
+    /// tests and `bench kernel`.
+    Reference,
+}
+
+/// A clocked simulation component on the event kernel.
+///
+/// `Ctx` is the external state the component interacts with while
+/// ticking: cores pump the NoC, the NoC drains into DRAM and delivers to
+/// cores, DRAM completions feed the NoC's response network, the
+/// scheduler and drivers touch each other. The kernel supplies the
+/// context; components never own references to their peers.
+pub trait Component {
+    /// External state this component interacts with during a tick.
+    type Ctx<'a>;
+
+    /// Advance over the dense window `[now, until)`. Components whose
+    /// progress is entangled with their peers every cycle (the NoC, DRAM)
+    /// tick exactly once at `now` and are re-invoked by the kernel's
+    /// dense loop at each due cycle; components that can prove themselves
+    /// decoupled (a core in an all-compute stretch) run their inner event
+    /// loop forward to `until` in this single call.
+    fn tick_window(&mut self, now: Cycle, until: Cycle, ctx: Self::Ctx<'_>);
+
+    /// Earliest future cycle at which this component can make progress,
+    /// or [`crate::NEVER`]. The kernel never advances the clock past an
+    /// unserviced next-event, which is what makes cached values safe.
+    fn next_event(&self, now: Cycle) -> Cycle;
+
+    /// True when the component holds no queued or in-flight work.
+    fn idle(&self) -> bool;
+}
+
+impl Component for Core {
+    type Ctx<'a> = &'a mut NocKind;
+
+    fn tick_window(&mut self, now: Cycle, until: Cycle, noc: Self::Ctx<'_>) {
+        Core::tick_window(self, now, until, noc);
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        Core::next_event(self, now)
+    }
+
+    fn idle(&self) -> bool {
+        Core::idle(self)
+    }
+}
+
+impl Component for NocKind {
+    type Ctx<'a> = (&'a mut DramSystem, &'a mut [Core]);
+
+    /// The NoC cannot run ahead of the window start: cores inject new
+    /// flits and DRAM backpressure changes every cycle, so its window is
+    /// always the single cycle `now` — the kernel's dense loop re-invokes
+    /// it at each due cycle.
+    fn tick_window(&mut self, now: Cycle, _until: Cycle, (dram, cores): Self::Ctx<'_>) {
+        Noc::tick(self, now, dram, cores);
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        Noc::next_event(self, now)
+    }
+
+    fn idle(&self) -> bool {
+        Noc::idle(self)
+    }
+}
+
+impl Component for DramSystem {
+    type Ctx<'a> = &'a mut dyn RespSink;
+
+    /// Like the NoC, DRAM is entangled per-cycle (new requests arrive
+    /// from the NoC each cycle); its controller's internal catch-up loop
+    /// already advances all banks/buses to `now` in one call.
+    fn tick_window(&mut self, now: Cycle, _until: Cycle, responses: Self::Ctx<'_>) {
+        DramSystem::tick(self, now, responses);
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        DramSystem::next_event(self, now)
+    }
+
+    fn idle(&self) -> bool {
+        DramSystem::idle(self)
+    }
+}
+
+impl Component for GlobalScheduler {
+    type Ctx<'a> = ();
+
+    /// The scheduler's only time-triggered work is arrival activation;
+    /// dispatch and completion handling are control-plane steps the
+    /// kernel drives explicitly.
+    fn tick_window(&mut self, now: Cycle, _until: Cycle, _ctx: Self::Ctx<'_>) {
+        self.activate_arrivals(now);
+    }
+
+    fn next_event(&self, now: Cycle) -> Cycle {
+        if self.has_pending_activation(now) {
+            now + 1
+        } else {
+            self.next_arrival(now)
+        }
+    }
+
+    /// "Idle" for the scheduler means nothing dispatchable and nothing
+    /// completed-but-undelivered; requests whose tiles are executing on
+    /// cores are the cores' work, not the scheduler's.
+    fn idle(&self) -> bool {
+        !self.has_ready_tiles() && !self.has_completed_pending()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::lowering::LoweringParams;
+    use crate::noc::build_noc;
+    use crate::scheduler::Fcfs;
+    use crate::NEVER;
+
+    /// Exercise every implementor through the trait: idle components
+    /// report NEVER and idle() = true.
+    fn assert_quiet<C: Component>(c: &C, what: &str) {
+        assert!(c.idle(), "{what} should start idle");
+        assert_eq!(c.next_event(10), NEVER, "{what} idle next_event");
+    }
+
+    #[test]
+    fn idle_components_report_never() {
+        let cfg = NpuConfig::mobile();
+        assert_quiet(&Core::new(0, &cfg), "core");
+        assert_quiet(&build_noc(&cfg.noc, 4, 1), "noc");
+        assert_quiet(&DramSystem::new(&cfg.dram, 1.0), "dram");
+        let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), Box::new(Fcfs::new()));
+        assert_quiet(&sched, "scheduler");
+    }
+
+    #[test]
+    fn scheduler_component_reports_arrivals() {
+        let cfg = NpuConfig::mobile();
+        let mut sched =
+            GlobalScheduler::new(LoweringParams::from_config(&cfg), Box::new(Fcfs::new()));
+        let mut g = crate::graph::Graph::new("t");
+        let x = g.activation("x", &[1, 16, 16]);
+        let w = g.weight("w", &[16, 16]);
+        let y = g.activation("y", &[1, 16, 16]);
+        g.node(
+            "mm",
+            crate::graph::OpKind::MatMul { activation: crate::graph::Activation::None },
+            &[x, w],
+            &[y],
+        );
+        g.inputs = vec![x];
+        g.outputs = vec![y];
+        sched.add_request(g, 100, 0);
+        assert_eq!(Component::next_event(&sched, 0), 100);
+        // Past the arrival, activation is pending: needs a tick now.
+        assert_eq!(Component::next_event(&sched, 100), 101);
+        sched.tick_window(100, 101, ());
+        assert!(!Component::idle(&sched), "activated request has ready tiles");
+    }
+}

@@ -1,41 +1,72 @@
 //! Top-level simulator: ties cores, NoC, DRAM and the global scheduler
-//! into one clocked system (Fig. 1 of the paper).
+//! into one clocked system (Fig. 1 of the paper) behind an explicit
+//! **event kernel** (see [`kernel`]).
 //!
-//! The loop is tick-based with an **event horizon** fast-forward: when no
-//! component has work at the current cycle, the clock jumps to the
-//! earliest next event (compute completion, packet arrival, DRAM
-//! completion, request arrival). Dense cycle-by-cycle ticking happens only
-//! while the cycle-level shared resources (NoC/DRAM) hold in-flight work —
-//! which is exactly the paper's hybrid-fidelity speed argument in
-//! scheduling form.
+//! The loop separates two planes:
+//!
+//! - **Control plane** (once per window): driver time-trigger hooks,
+//!   arrival activation, preemption, tile dispatch, completion delivery,
+//!   utilization sampling, termination, clock advance.
+//! - **Data plane** (dense, inside [`Simulator::advance_dataplane`]):
+//!   cores → NoC → DRAM in fixed order at each due cycle, with responses
+//!   delivered directly to cores ([`crate::dram::RespSink`]) and the
+//!   event-horizon skip applied *inside* the window.
+//!
+//! A window ends at the earliest control-plane event (driver trigger,
+//! request arrival, utilization-bucket edge) or the moment a tile
+//! completes — every cycle where the control plane could observe or
+//! influence anything. Between those cycles the control plane is provably
+//! a no-op, so skipping it changes nothing except wall-clock time; the
+//! single-cycle-window [`KernelMode::Reference`] keeps the pre-refactor
+//! behavior as an in-tree baseline, and golden tests assert both modes
+//! produce byte-identical reports.
 
+pub mod kernel;
 pub mod stats;
+pub mod sweep;
 
 use crate::config::NpuConfig;
 use crate::core::Core;
 use crate::dram::DramSystem;
 use crate::lowering::LoweringParams;
-use crate::noc::{build_noc, Noc};
+use crate::noc::{build_noc, Noc, NocKind};
 use crate::scheduler::{GlobalScheduler, Policy};
 use crate::{Cycle, NEVER};
+// NB: `kernel::Component` is deliberately NOT re-imported into this
+// module's scope — `NocKind` implements both `Noc` and `Component`, and
+// having both traits in scope would make every `noc.next_event(..)` call
+// ambiguous. Import it from `sim::kernel` where needed.
+pub use kernel::KernelMode;
 pub use stats::SimReport;
 
 /// Hook for drivers that react to request completions (e.g. autoregressive
 /// LLM generation: token t+1's request is created when token t finishes)
 /// or inject work as simulated time advances (open-loop serving traffic).
+///
+/// Drivers are [`kernel::Component`]s of the event kernel in all but
+/// name: the kernel clamps every window to [`Driver::next_event`], calls
+/// [`Driver::on_tick`] at each window boundary (its `tick_window`), and
+/// uses [`Driver::finished`] as its idle predicate. Concrete drivers
+/// (e.g. [`crate::serve::ServeDriver`]) also implement
+/// [`kernel::Component`] directly so generic kernel tooling can treat
+/// them uniformly.
 pub trait Driver {
     /// Called once per completed request. May add new requests.
     fn on_request_done(&mut self, request_id: usize, now: Cycle, sched: &mut GlobalScheduler);
 
-    /// Called once per event-loop iteration, before arrivals are
+    /// Called once per control-plane pass, before arrivals are
     /// activated. Open-loop drivers (e.g. [`crate::serve::ServeDriver`])
     /// inject stochastic arrivals and flush batching queues here.
     fn on_tick(&mut self, _now: Cycle, _sched: &mut GlobalScheduler) {}
 
     /// Earliest future cycle at which the driver has time-triggered work
-    /// (a generated arrival, a batch-timeout flush). Feeds the
-    /// event-horizon clock advance so work injected mid-run wakes the
-    /// scheduler punctually; [`NEVER`] when idle.
+    /// (a generated arrival, a batch-timeout flush). Bounds the kernel's
+    /// window and feeds the event-horizon clock advance, so work injected
+    /// mid-run wakes the scheduler punctually; [`NEVER`] when idle.
+    ///
+    /// Correctness contract: the kernel runs no control plane before the
+    /// reported cycle, so under-reporting is safe (a degenerate window)
+    /// but *over*-reporting delays the driver's own injections.
     fn next_event(&self, _now: Cycle) -> Cycle {
         NEVER
     }
@@ -53,24 +84,48 @@ impl Driver for NoDriver {
     fn on_request_done(&mut self, _: usize, _: Cycle, _: &mut GlobalScheduler) {}
 }
 
+impl kernel::Component for NoDriver {
+    type Ctx<'a> = &'a mut GlobalScheduler;
+
+    fn tick_window(&mut self, _now: Cycle, _until: Cycle, _sched: Self::Ctx<'_>) {}
+
+    fn next_event(&self, _now: Cycle) -> Cycle {
+        NEVER
+    }
+
+    fn idle(&self) -> bool {
+        true
+    }
+}
+
 /// The simulator.
 pub struct Simulator {
     pub cfg: NpuConfig,
     pub cores: Vec<Core>,
-    pub noc: Box<dyn Noc>,
+    /// Enum-dispatched NoC: the densest path in the loop, devirtualized.
+    pub noc: NocKind,
     pub dram: DramSystem,
     pub sched: GlobalScheduler,
     pub clock: Cycle,
+    /// Main-loop strategy; [`KernelMode::Windowed`] unless overridden.
+    pub mode: KernelMode,
+    /// Hard safety cap on the simulated clock (0 = unlimited). When the
+    /// clock passes it, [`Simulator::try_run`] returns an error naming
+    /// the components that still hold work — turning a silent busy-spin
+    /// (e.g. a driver misreporting [`Driver::next_event`]) into a
+    /// diagnosable failure.
+    pub max_cycles: Cycle,
     /// Utilization timeline bucket size in cycles (0 = disabled).
     pub util_bucket: Cycle,
     util_timeline: Vec<Vec<f64>>,
     last_bucket_busy: Vec<u64>,
     next_bucket_at: Cycle,
-    resp_scratch: Vec<crate::dram::MemResponse>,
-    dram_resp_scratch: Vec<crate::dram::MemResponse>,
-    /// Loop iterations executed (for the perf log: iterations/cycle shows
-    /// how well the event horizon skips idle cycles).
+    /// Control-plane passes executed (scheduler/driver/dispatch work).
     pub iterations: u64,
+    /// Dense data-plane steps executed. `dense_ticks / iterations` is the
+    /// mean window length; `total_cycles / dense_ticks` shows how well
+    /// the event horizon skips idle cycles.
+    pub dense_ticks: u64,
 }
 
 impl Simulator {
@@ -80,6 +135,7 @@ impl Simulator {
         let dram = DramSystem::new(&cfg.dram, cfg.core_freq_ghz);
         let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), policy);
         let n = cfg.num_cores;
+        let max_cycles = cfg.max_cycles;
         Simulator {
             cfg,
             cores,
@@ -87,13 +143,14 @@ impl Simulator {
             dram,
             sched,
             clock: 0,
+            mode: KernelMode::Windowed,
+            max_cycles,
             util_bucket: 0,
             util_timeline: Vec::new(),
             last_bucket_busy: vec![0; n],
             next_bucket_at: 0,
-            resp_scratch: Vec::new(),
-            dram_resp_scratch: Vec::new(),
             iterations: 0,
+            dense_ticks: 0,
         }
     }
 
@@ -105,29 +162,56 @@ impl Simulator {
         self
     }
 
+    /// Select the kernel strategy (default [`KernelMode::Windowed`]).
+    pub fn with_kernel(mut self, mode: KernelMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the simulated-clock safety cap (see [`Simulator::max_cycles`]).
+    pub fn with_max_cycles(mut self, cap: Cycle) -> Self {
+        self.max_cycles = cap;
+        self
+    }
+
     /// Add a request (thin wrapper over the scheduler).
     pub fn add_request(&mut self, graph: crate::graph::Graph, arrival: Cycle, tenant: usize) -> usize {
         self.sched.add_request(graph, arrival, tenant)
     }
 
     /// Run until all requests (including driver-injected ones) complete.
-    /// Returns the final report.
+    /// Panics if the [`Simulator::max_cycles`] cap is exceeded — use
+    /// [`Simulator::try_run`] to handle that as an error.
     pub fn run(&mut self, driver: &mut dyn Driver) -> SimReport {
+        match self.try_run(driver) {
+            Ok(report) => report,
+            Err(e) => panic!("{e:#}"),
+        }
+    }
+
+    /// Run until all requests complete, or fail if the clock passes
+    /// [`Simulator::max_cycles`].
+    pub fn try_run(&mut self, driver: &mut dyn Driver) -> anyhow::Result<SimReport> {
         let mut finished_tiles = Vec::new();
         let mut completed_reqs = Vec::new();
         loop {
             let now = self.clock;
+            if self.max_cycles > 0 && now > self.max_cycles {
+                return Err(self.stuck_error(now, driver));
+            }
+            self.iterations += 1;
 
+            // Control plane at `now`:
             // 0. Time-triggered driver work (open-loop arrival injection,
-            //    batch flushes) lands before activation so requests created
-            //    "now" dispatch this very cycle.
+            //    batch flushes) lands before activation so requests
+            //    created "now" dispatch this very pass.
             driver.on_tick(now, &mut self.sched);
 
             // 1. Activate arrivals and dispatch tiles to free cores. A
             //    preemptive policy may first revoke uncommitted tiles of
             //    slack-rich requests so urgent work lands this cycle.
             self.sched.activate_arrivals(now);
-            self.sched.preempt(&mut self.cores, now);
+            let revoked = self.sched.preempt(&mut self.cores, now);
             for c in 0..self.cores.len() {
                 while self.cores[c].wants_tile() {
                     match self.sched.pick_tile(c, now) {
@@ -137,62 +221,139 @@ impl Simulator {
                 }
             }
 
-            // 2. Cores: retire/issue/pump DMA into the NoC.
-            for core in &mut self.cores {
-                core.tick(now, self.noc.as_mut());
+            // 2. Window end: the earliest cycle the control plane could
+            //    observe or influence anything. Reference mode pins it to
+            //    one cycle, reproducing the pre-refactor per-cycle loop.
+            let mut until = match self.mode {
+                KernelMode::Reference => now + 1,
+                KernelMode::Windowed => {
+                    if self.sched.has_completed_pending() || revoked > 0 {
+                        // Two cases that pin the window to one cycle:
+                        // activation completed a zero-tile (shape-only)
+                        // request the driver must hear about at `now`; or
+                        // the preemptive policy revoked slots this pass —
+                        // it frees at most one slot per core per pass, so
+                        // the per-cycle loop may revoke again next cycle
+                        // and the window must give it that chance.
+                        now + 1
+                    } else {
+                        let mut u =
+                            driver.next_event(now).min(self.sched.next_arrival(now));
+                        if self.util_bucket > 0 {
+                            // Never let a window straddle a bucket edge:
+                            // sampling stays pinned to exact boundaries.
+                            u = u.min(self.next_bucket_at);
+                        }
+                        u.max(now + 1)
+                    }
+                }
+            };
+            if self.max_cycles > 0 {
+                // Bound dense windows so the cap check above still fires
+                // even if the data plane livelocks.
+                until = until.min(self.max_cycles + 1);
             }
 
-            // 3. NoC moves flits; delivers requests to DRAM queues and
-            //    responses back to the core side.
-            self.resp_scratch.clear();
-            self.noc.tick(now, &mut self.dram, &mut self.resp_scratch);
+            // 3. Dense data-plane advance over [now, until); stops early
+            //    the cycle a tile completes.
+            let stop = self.advance_dataplane(now, until);
 
-            // 4. DRAM advances; completions enter the response network.
-            self.dram_resp_scratch.clear();
-            self.dram.tick(now, &mut self.dram_resp_scratch);
-            for r in &self.dram_resp_scratch {
-                self.noc.inject_response(now, *r, r.channel);
-            }
-
-            // 5. Deliver NoC responses to cores.
-            for r in &self.resp_scratch {
-                self.cores[r.core].on_response(r);
-            }
-
-            // 6. Tile completions -> scheduler; request completions -> driver.
-            finished_tiles.clear();
-            for core in &mut self.cores {
-                core.take_finished(&mut finished_tiles);
-            }
-            for job in &finished_tiles {
-                self.sched.on_tile_done(*job, now);
+            // 4. Tile completions -> scheduler; request completions ->
+            //    driver. Only completions *visible* at `stop` are drained:
+            //    a fast-forwarded core may already hold a completion from
+            //    later in the window, delivered when the clock gets there.
+            if self.cores.iter().any(|c| c.finished_ready(stop)) {
+                finished_tiles.clear();
+                for core in &mut self.cores {
+                    if core.finished_ready(stop) {
+                        core.take_finished(&mut finished_tiles);
+                    }
+                }
+                for job in &finished_tiles {
+                    self.sched.on_tile_done(*job, stop);
+                }
             }
             completed_reqs.clear();
             self.sched.take_completed(&mut completed_reqs);
             for &rid in &completed_reqs {
-                driver.on_request_done(rid, now, &mut self.sched);
+                driver.on_request_done(rid, stop, &mut self.sched);
             }
 
-            // 7. Utilization timeline sampling.
-            if self.util_bucket > 0 && now >= self.next_bucket_at {
-                let mut sample = Vec::with_capacity(self.cores.len());
-                for (i, core) in self.cores.iter().enumerate() {
-                    let busy = core.stats.systolic_busy - self.last_bucket_busy[i];
-                    self.last_bucket_busy[i] = core.stats.systolic_busy;
-                    sample.push(busy as f64 / self.util_bucket as f64);
-                }
-                self.util_timeline.push(sample);
-                self.next_bucket_at += self.util_bucket;
-            }
+            // 5. Utilization timeline sampling (all buckets elapsed by
+            //    `stop`, interpolated across event-horizon jumps).
+            self.sample_util(stop);
 
-            // 8. Termination / clock advance.
-            self.iterations += 1;
+            // 6. Termination / clock advance.
             if self.sched.all_done() && driver.finished() && self.quiescent() {
+                self.clock = stop;
                 break;
             }
-            self.clock = self.next_cycle(now, driver.next_event(now));
+            self.clock = self.next_cycle(stop, driver.next_event(stop));
         }
-        self.report()
+        Ok(self.report())
+    }
+
+    /// Advance the data plane (cores → NoC → DRAM, in the fixed
+    /// pre-refactor order) over `[start, until)`, skipping both idle
+    /// cycles (event-horizon jumps to the earliest due component) and
+    /// idle components (cached next-events gate each tick). Returns the
+    /// last cycle ticked: `until`-bounded, or earlier if a tile
+    /// completed and the scheduler must run.
+    fn advance_dataplane(&mut self, start: Cycle, until: Cycle) -> Cycle {
+        debug_assert!(until > start);
+        let mut t = start;
+        // The control plane may have touched anything at the boundary:
+        // the window's first cycle ticks every component.
+        let mut all_due = true;
+        let mut noc_next = 0;
+        let mut dram_next = 0;
+        loop {
+            self.dense_ticks += 1;
+            let Simulator { cores, noc, dram, .. } = &mut *self;
+            let mut core_ticked = false;
+            for core in cores.iter_mut() {
+                if all_due || core.cached_next_event(t) <= t {
+                    core.tick_window(t, until, noc);
+                    core_ticked = true;
+                }
+            }
+            // `noc_next`/`dram_next` were computed at the END of the
+            // previous pass, so they predate this cycle's upstream
+            // hand-offs: a core that ticked may have injected into the
+            // NoC this very cycle, and a NoC tick may have handed DRAM
+            // new work. A tick by an upstream component therefore forces
+            // its downstream neighbour's tick — the same-cycle ordering
+            // the reference loop gets by ticking everything everywhere.
+            let mut noc_ticked = false;
+            if all_due || core_ticked || noc_next <= t {
+                // The NoC delivers requests into DRAM queues and
+                // responses directly onto their cores.
+                noc.tick(t, dram, cores.as_mut_slice());
+                noc_ticked = true;
+            }
+            if all_due || noc_ticked || dram_next <= t {
+                // DRAM completions enter the response network directly.
+                dram.tick(t, noc);
+            }
+            // A visible tile completion ends the window: the scheduler
+            // must see it this cycle.
+            if self.cores.iter().any(|c| c.finished_ready(t)) {
+                return t;
+            }
+            // Event-horizon skip within the window.
+            let mut next = NEVER;
+            for core in self.cores.iter_mut() {
+                next = next.min(core.cached_next_event(t));
+            }
+            noc_next = self.noc.next_event(t);
+            dram_next = self.dram.next_event(t);
+            next = next.min(noc_next).min(dram_next);
+            if next >= until {
+                return t;
+            }
+            t = next;
+            all_due = false;
+        }
     }
 
     fn quiescent(&self) -> bool {
@@ -201,11 +362,13 @@ impl Simulator {
 
     /// Event-horizon clock advance. `driver_next` is the driver's earliest
     /// time-triggered event (arrival injection, batch flush), so open-loop
-    /// work created mid-run wakes the scheduler on time.
-    fn next_cycle(&self, now: Cycle, driver_next: Cycle) -> Cycle {
+    /// work created mid-run wakes the scheduler on time. Core next-events
+    /// come from their dirty-flag caches: untouched cores cost a branch,
+    /// not a recompute.
+    fn next_cycle(&mut self, now: Cycle, driver_next: Cycle) -> Cycle {
         let mut next = driver_next;
-        for core in &self.cores {
-            next = next.min(core.next_event(now));
+        for core in &mut self.cores {
+            next = next.min(core.cached_next_event(now));
         }
         next = next.min(self.noc.next_event(now));
         next = next.min(self.dram.next_event(now));
@@ -224,6 +387,63 @@ impl Simulator {
         }
     }
 
+    /// Emit every utilization bucket elapsed by `now`. When the clock
+    /// jumped several buckets at once the observed busy delta spans all
+    /// of them: it is interpolated evenly, instead of crediting one
+    /// bucket and silently dropping the rest (the pre-refactor bug:
+    /// `next_bucket_at` advanced one bucket per sample regardless of the
+    /// jump, skewing every later bucket's normalization).
+    fn sample_util(&mut self, now: Cycle) {
+        if self.util_bucket == 0 || now < self.next_bucket_at {
+            return;
+        }
+        let k = (now - self.next_bucket_at) / self.util_bucket + 1;
+        let denom = (k * self.util_bucket) as f64;
+        for _ in 0..k {
+            let sample: Vec<f64> = self
+                .cores
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (c.stats.systolic_busy - self.last_bucket_busy[i]) as f64 / denom)
+                .collect();
+            self.util_timeline.push(sample);
+        }
+        for (i, c) in self.cores.iter().enumerate() {
+            self.last_bucket_busy[i] = c.stats.systolic_busy;
+        }
+        self.next_bucket_at += k * self.util_bucket;
+    }
+
+    /// Build the max-cycles diagnostic: name every component still
+    /// holding work, so a misreported `next_event` points at its owner.
+    fn stuck_error(&mut self, now: Cycle, driver: &dyn Driver) -> anyhow::Error {
+        let mut stuck = Vec::new();
+        for (i, c) in self.cores.iter().enumerate() {
+            if !c.idle() {
+                stuck.push(format!("core{i}"));
+            }
+        }
+        if !self.noc.idle() {
+            stuck.push("noc".into());
+        }
+        if !self.dram.idle() {
+            stuck.push("dram".into());
+        }
+        if !self.sched.all_done() {
+            stuck.push("scheduler".into());
+        }
+        if !driver.finished() {
+            stuck.push("driver".into());
+        }
+        anyhow::anyhow!(
+            "simulation exceeded max_cycles={} at cycle {now}; busy components: [{}] \
+             (a component or driver may be misreporting next_event; raise the cap if the \
+             workload is legitimately this long)",
+            self.max_cycles,
+            stuck.join(", ")
+        )
+    }
+
     /// Build the final report.
     pub fn report(&self) -> SimReport {
         SimReport::collect(self)
@@ -238,7 +458,7 @@ impl Simulator {
 mod tests {
     use super::*;
     use crate::graph::{Activation, Graph, OpKind};
-    use crate::scheduler::{Fcfs, Spatial, TimeShared};
+    use crate::scheduler::{Fcfs, SloSlack, Spatial, TimeShared};
 
     fn matmul_graph(name: &str, m: usize, k: usize, n: usize) -> Graph {
         let mut g = Graph::new(name);
@@ -420,5 +640,141 @@ mod tests {
                 assert!((0.0..=1.001).contains(&u), "utilization {u} out of range");
             }
         }
+    }
+
+    #[test]
+    fn util_timeline_covers_event_horizon_jumps() {
+        // Regression for the multi-bucket-jump sampling bug: two bursts of
+        // work separated by a long idle gap the event horizon skips in one
+        // jump. Every elapsed bucket must be emitted (none dropped), and
+        // the interpolated samples must stay in range.
+        let bucket = 1_000;
+        let gap = 400 * bucket;
+        let mut sim =
+            Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new())).with_util_timeline(bucket);
+        sim.add_request(matmul_graph("a", 64, 64, 64), 0, 0);
+        sim.add_request(matmul_graph("b", 64, 64, 64), gap, 0);
+        let report = sim.run(&mut NoDriver);
+        let n = sim.util_timeline().len() as u64;
+        // One sample per full bucket elapsed over the run, +/- the final
+        // partial bucket. (Pre-fix, the jump to the second arrival
+        // emitted ONE sample and shifted every later bucket.)
+        let expect = report.total_cycles / bucket;
+        assert!(
+            n >= expect && n <= expect + 1,
+            "buckets dropped across the jump: {n} samples for {} cycles (bucket {bucket})",
+            report.total_cycles
+        );
+        for sample in sim.util_timeline() {
+            for &u in sample {
+                assert!((0.0..=1.001).contains(&u), "utilization {u} out of range");
+            }
+        }
+        // A bucket strictly inside the idle gap must be (near-)idle —
+        // the first burst's busy cycles may not smear across the jump.
+        let fin_a = sim.sched.requests[0].finished_at.expect("request a finished");
+        assert!(fin_a + 2 * bucket < gap, "first burst unexpectedly slow: {fin_a} cycles");
+        let idle_idx = (fin_a / bucket + 1) as usize;
+        let mid = sim.util_timeline()[idle_idx][0];
+        assert!(mid <= 0.05, "idle-gap bucket {idle_idx} shows {mid} utilization");
+    }
+
+    /// A deliberately broken driver: claims it is never finished but
+    /// reports no next event — the `NEVER -> now + 1` fallback then
+    /// busy-spins forever without a cap.
+    struct StuckDriver;
+    impl Driver for StuckDriver {
+        fn on_request_done(&mut self, _: usize, _: Cycle, _: &mut GlobalScheduler) {}
+        fn finished(&self) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn max_cycles_cap_names_stuck_component() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()))
+            .with_max_cycles(10_000);
+        let err = sim.try_run(&mut StuckDriver).expect_err("must hit the cap");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("max_cycles=10000"), "got: {msg}");
+        assert!(msg.contains("driver"), "stuck driver not named: {msg}");
+    }
+
+    #[test]
+    fn max_cycles_cap_off_by_default_and_generous_cap_passes() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()))
+            .with_max_cycles(100_000_000);
+        sim.add_request(matmul_graph("m", 64, 64, 64), 0, 0);
+        let report = sim.try_run(&mut NoDriver).expect("well under the cap");
+        assert_eq!(report.requests_completed, 1);
+    }
+
+    /// Windowed and reference kernels must agree byte-for-byte: same
+    /// cycles, same stats, same per-request latencies, same timeline.
+    fn assert_modes_agree(mk: &dyn Fn() -> Simulator) {
+        let mut w = mk();
+        w.mode = KernelMode::Windowed;
+        let rw = w.run(&mut NoDriver);
+        let mut r = mk();
+        r.mode = KernelMode::Reference;
+        let rr = r.run(&mut NoDriver);
+        assert_eq!(rw.total_cycles, rr.total_cycles, "total_cycles diverged");
+        assert_eq!(rw.total_macs, rr.total_macs);
+        assert_eq!(rw.dram_bytes, rr.dram_bytes);
+        assert_eq!(rw.request_latency, rr.request_latency);
+        assert_eq!(w.util_timeline(), r.util_timeline(), "util timelines diverged");
+        // The windowed kernel must actually be doing less per simulated
+        // cycle: fewer control-plane passes than dense steps.
+        assert!(w.iterations <= r.iterations, "windowed ran MORE control passes");
+    }
+
+    #[test]
+    fn kernel_modes_agree_single_tenant() {
+        assert_modes_agree(&|| {
+            let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+            sim.add_request(mlp_graph("mlp", 3, 128), 0, 0);
+            sim
+        });
+    }
+
+    #[test]
+    fn kernel_modes_agree_contention_with_timeline() {
+        assert_modes_agree(&|| {
+            let mut sim =
+                Simulator::new(NpuConfig::mobile(), Box::new(Spatial::new(vec![0, 1, 1, 1])))
+                    .with_util_timeline(500);
+            sim.add_request(matmul_graph("gemv", 1, 2048, 2048), 0, 0);
+            sim.add_request(matmul_graph("hog", 256, 2048, 2048), 0, 1);
+            sim
+        });
+    }
+
+    #[test]
+    fn kernel_modes_agree_staggered_arrivals_crossbar() {
+        assert_modes_agree(&|| {
+            let mut sim = Simulator::new(
+                NpuConfig::mobile().with_crossbar_noc(),
+                Box::new(TimeShared::new()),
+            );
+            sim.add_request(matmul_graph("a", 128, 128, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 128, 128, 128), 9_000, 1);
+            sim.add_request(matmul_graph("c", 64, 256, 64), 31_000, 0);
+            sim
+        });
+    }
+
+    #[test]
+    fn kernel_modes_agree_slo_slack_server() {
+        assert_modes_agree(&|| {
+            let mut sim = Simulator::new(
+                NpuConfig::server(),
+                Box::new(SloSlack::new(vec![1_000_000, 2_000])),
+            );
+            let a = sim.add_request(matmul_graph("loose", 512, 512, 512), 0, 0);
+            let b = sim.add_request(matmul_graph("tight", 64, 512, 64), 500, 1);
+            sim.sched.set_deadline(a, 1_000_000);
+            sim.sched.set_deadline(b, 3_000);
+            sim
+        });
     }
 }

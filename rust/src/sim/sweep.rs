@@ -1,0 +1,101 @@
+//! Parallel sweep runner: run independent simulation points across OS
+//! threads (std only — scoped threads, no external dependencies).
+//!
+//! Sweeps — the `fig_*` examples, `bench kernel`, parameter studies — are
+//! embarrassingly parallel: every point builds its own `Simulator` (and
+//! serving driver) from a config plus a seed, so points share no mutable
+//! state. [`run_jobs`] executes a vector of such closures across up to
+//! `threads` workers and returns results **in input order**; because each
+//! point owns its seeded RNG, the results are byte-identical to running
+//! the same closures serially (asserted by the determinism tests and by
+//! `bench kernel` on every CI run).
+//!
+//! Scope note: this parallelizes *across* simulations. Partitioning a
+//! single simulation across threads (per-channel DRAM shards, per-core
+//! instruction streams) is future work — see ROADMAP.md.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of hardware threads available, with a serial fallback of 1.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run every closure in `jobs` (work-stealing over an atomic cursor,
+/// at most `threads` workers) and return their results in input order.
+///
+/// `threads <= 1` or a single job runs serially on the caller's thread.
+/// A panicking job propagates the panic to the caller after the scope
+/// joins, like the serial path would.
+pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if threads <= 1 || n <= 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    // Each job is taken exactly once (guarded by the claiming cursor);
+    // each result slot is written exactly once. Mutexes rather than
+    // unsafe cells — the per-job lock cost is noise next to a simulation.
+    let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = slots[i]
+                    .lock()
+                    .expect("job slot lock poisoned")
+                    .take()
+                    .expect("job claimed twice");
+                let out = job();
+                *results[i].lock().expect("result slot lock poisoned") = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result lock poisoned")
+                .expect("worker exited without storing its result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let jobs: Vec<_> = (0..32usize).map(|i| move || i * i).collect();
+        let got = run_jobs(jobs, 4);
+        let want: Vec<usize> = (0..32).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let mk = || (0..16usize).map(|i| move || i.wrapping_mul(0x9E37_79B9)).collect::<Vec<_>>();
+        assert_eq!(run_jobs(mk(), 1), run_jobs(mk(), 8));
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        assert_eq!(run_jobs(vec![|| 7usize], 64), vec![7]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<fn() -> usize> = Vec::new();
+        assert!(run_jobs(jobs, 4).is_empty());
+    }
+}

@@ -1,0 +1,213 @@
+//! Event-kernel equivalence goldens.
+//!
+//! The windowed event kernel must be *behavior-preserving*: same simulated
+//! cycles, same stats, same per-request latencies — byte-identical
+//! reports. The baseline is [`KernelMode::Reference`], the pre-refactor
+//! per-cycle loop kept in-tree as an executable recording of the old
+//! semantics (a frozen JSON golden would rot the first time a timing
+//! model legitimately changes; the reference kernel re-derives the
+//! baseline from the same source of truth on every run).
+//!
+//! Coverage: every scheduling policy (FCFS, TimeShared, Spatial,
+//! SloSlack, preemptive SloSlack) on both Table-II hardware configs, the
+//! crossbar NoC, serving scenarios across all three batching shapes, and
+//! the parallel-sweep-equals-serial determinism guarantee.
+
+use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
+use onnxim::config::NpuConfig;
+use onnxim::graph::{Activation, Graph, OpKind};
+use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
+use onnxim::serve::run_serve_mode;
+use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
+
+fn matmul(name: &str, m: usize, k: usize, n: usize) -> Graph {
+    let mut g = Graph::new(name);
+    let x = g.activation("x", &[1, m, k]);
+    let w = g.weight("w", &[k, n]);
+    let y = g.activation("y", &[1, m, n]);
+    g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+    g.inputs = vec![x];
+    g.outputs = vec![y];
+    g
+}
+
+fn policy(name: &str) -> Box<dyn Policy> {
+    match name {
+        "fcfs" => Box::new(Fcfs::new()),
+        "time-shared" => Box::new(TimeShared::new()),
+        "spatial" => Box::new(Spatial::new(vec![0, 0, 1, 1])),
+        "slo-slack" => Box::new(SloSlack::new(vec![1_000_000, 2_000])),
+        "slo-slack-preempt" => Box::new(SloSlack::preemptive(vec![1_000_000, 2_000])),
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+/// A mixed two-tenant workload: a large compute-heavy GEMM, a
+/// memory-bound GEMV arriving mid-flight (exercising the event horizon
+/// and, under the preemptive policy, the revoke path), and a late third
+/// request landing after a long idle gap (exercising multi-bucket clock
+/// jumps).
+fn workload(sim: &mut Simulator) {
+    let a = sim.add_request(matmul("big", 256, 256, 256), 0, 0);
+    let b = sim.add_request(matmul("gemv", 1, 1024, 1024), 1_000, 1);
+    let c = sim.add_request(matmul("late", 128, 256, 128), 400_000, 0);
+    sim.sched.set_deadline(a, 5_000_000);
+    sim.sched.set_deadline(b, 50_000);
+    sim.sched.set_deadline(c, 800_000);
+}
+
+/// Full-report fingerprint: Debug formatting covers every field
+/// (cycles, per-core stats, per-channel DRAM stats, latencies, derived
+/// utilizations) bit-for-bit.
+fn fingerprint(cfg: NpuConfig, pname: &str, mode: KernelMode) -> String {
+    let mut sim = Simulator::new(cfg, policy(pname)).with_kernel(mode).with_util_timeline(2_000);
+    workload(&mut sim);
+    let rep = sim.run(&mut NoDriver);
+    format!("{rep:?}|{:?}", sim.util_timeline())
+}
+
+#[test]
+fn windowed_matches_reference_every_policy_mobile() {
+    for p in ["fcfs", "time-shared", "spatial", "slo-slack", "slo-slack-preempt"] {
+        assert_eq!(
+            fingerprint(NpuConfig::mobile(), p, KernelMode::Windowed),
+            fingerprint(NpuConfig::mobile(), p, KernelMode::Reference),
+            "kernel divergence on mobile/{p}"
+        );
+    }
+}
+
+#[test]
+fn windowed_matches_reference_every_policy_server() {
+    for p in ["fcfs", "time-shared", "spatial", "slo-slack", "slo-slack-preempt"] {
+        assert_eq!(
+            fingerprint(NpuConfig::server(), p, KernelMode::Windowed),
+            fingerprint(NpuConfig::server(), p, KernelMode::Reference),
+            "kernel divergence on server/{p}"
+        );
+    }
+}
+
+#[test]
+fn windowed_matches_reference_crossbar_noc() {
+    for p in ["fcfs", "spatial"] {
+        assert_eq!(
+            fingerprint(NpuConfig::mobile().with_crossbar_noc(), p, KernelMode::Windowed),
+            fingerprint(NpuConfig::mobile().with_crossbar_noc(), p, KernelMode::Reference),
+            "kernel divergence on mobile-crossbar/{p}"
+        );
+    }
+}
+
+/// Serving scenarios drive the kernel through its hardest corners:
+/// driver-injected arrivals mid-window, completion-driven decode
+/// iterations launching requests at the drain cycle, and batch-timeout
+/// flushes. All three batching shapes must agree across kernels.
+fn serve_fingerprint(scfg: &ServeConfig, mode: KernelMode) -> String {
+    run_serve_mode(NpuConfig::server(), Box::new(Fcfs::new()), scfg, mode)
+        .expect("serve scenario")
+        .to_json()
+}
+
+fn static_scenario() -> ServeConfig {
+    let mut t = TenantLoadConfig::poisson("mlp", 30_000.0);
+    t.max_batch = 4;
+    t.batch_timeout_us = 20.0;
+    let mut u = TenantLoadConfig::poisson("mlp", 10_000.0);
+    u.process = "gamma".into();
+    u.cv = 2.0;
+    ServeConfig { seed: 7, duration_ms: 0.4, slo_ms: 1.0, tenants: vec![t, u] }
+}
+
+fn continuous_scenario() -> ServeConfig {
+    let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 4);
+    t.process = "constant".into();
+    t.max_batch = 4;
+    t.kv_init = 32;
+    t.kv_block = 32;
+    t.max_queue = 64;
+    ServeConfig { seed: 11, duration_ms: 0.05, slo_ms: 2.0, tenants: vec![t] }
+}
+
+fn prefill_scenario() -> ServeConfig {
+    let mut t =
+        TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 4).with_prefill(256, 64);
+    t.process = "constant".into();
+    t.max_batch = 4;
+    t.kv_block = 64;
+    t.max_queue = 64;
+    ServeConfig { seed: 5, duration_ms: 0.05, slo_ms: 5.0, tenants: vec![t] }
+}
+
+#[test]
+fn serve_static_batching_agrees_across_kernels() {
+    let scfg = static_scenario();
+    assert_eq!(
+        serve_fingerprint(&scfg, KernelMode::Windowed),
+        serve_fingerprint(&scfg, KernelMode::Reference),
+        "static whole-graph serving diverged"
+    );
+}
+
+#[test]
+fn serve_continuous_batching_agrees_across_kernels() {
+    let scfg = continuous_scenario();
+    assert_eq!(
+        serve_fingerprint(&scfg, KernelMode::Windowed),
+        serve_fingerprint(&scfg, KernelMode::Reference),
+        "continuous batching serving diverged"
+    );
+}
+
+#[test]
+fn serve_chunked_prefill_agrees_across_kernels() {
+    let scfg = prefill_scenario();
+    assert_eq!(
+        serve_fingerprint(&scfg, KernelMode::Windowed),
+        serve_fingerprint(&scfg, KernelMode::Reference),
+        "chunked-prefill serving diverged"
+    );
+}
+
+#[test]
+fn parallel_sweep_equals_serial_sweep() {
+    // The determinism guarantee the fig_* examples and `bench kernel`
+    // rely on: each point owns its seeded RNG, so thread scheduling
+    // cannot leak into results.
+    let rates = [10_000.0, 20_000.0, 40_000.0, 60_000.0, 80_000.0, 120_000.0];
+    let point = |rate: f64| {
+        let mut t = TenantLoadConfig::poisson("mlp", rate);
+        t.max_batch = 4;
+        t.batch_timeout_us = 20.0;
+        let scfg = ServeConfig { seed: 3, duration_ms: 0.2, slo_ms: 1.0, tenants: vec![t] };
+        run_serve_mode(NpuConfig::mobile(), Box::new(Fcfs::new()), &scfg, KernelMode::Windowed)
+            .expect("sweep point")
+            .to_json()
+    };
+    let serial: Vec<String> = rates.iter().map(|&r| point(r)).collect();
+    let jobs: Vec<_> = rates.iter().map(|&r| move || point(r)).collect();
+    let parallel = sweep::run_jobs(jobs, 4);
+    assert_eq!(serial, parallel, "parallel sweep must be byte-identical to serial");
+}
+
+#[test]
+fn windowed_kernel_does_less_control_work() {
+    // Not just equivalent — the point of the refactor: the windowed
+    // kernel runs strictly fewer control-plane passes than the per-cycle
+    // reference on a dense workload.
+    let run = |mode: KernelMode| {
+        let mut sim =
+            Simulator::new(NpuConfig::mobile(), Box::new(Spatial::new(vec![0, 1, 1, 1])))
+                .with_kernel(mode);
+        sim.add_request(matmul("gemv", 1, 2048, 2048), 0, 0);
+        sim.add_request(matmul("hog", 128, 2048, 2048), 0, 1);
+        sim.run(&mut NoDriver);
+        sim.iterations
+    };
+    let windowed = run(KernelMode::Windowed);
+    let reference = run(KernelMode::Reference);
+    assert!(
+        windowed * 2 < reference,
+        "windowed kernel should halve control passes at least: {windowed} vs {reference}"
+    );
+}
