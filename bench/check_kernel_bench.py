@@ -51,6 +51,24 @@ def main() -> int:
             f"parallel sweep only {sweep['speedup']:.2f}x over serial on "
             f"{sweep['threads']:.0f} threads (gate {min_sweep}x)")
 
+    # Parallel single-simulation data plane: correctness (byte-identical
+    # reports across thread counts) is a hard bail inside the bench
+    # binary; the speedup number here is ADVISORY per the noisy-runner
+    # policy — shared CI machines can have fewer usable cores than the
+    # bench's 4 threads, so a wall-clock gate would flake. The headline
+    # number lives in the uploaded BENCH_kernel artifact.
+    par = cur.get("parallel_dataplane")
+    if par is not None:
+        min_par = base.get("parallel_dataplane", {}).get("min_speedup", 1.0)
+        s = par["parallel_dataplane_speedup"]
+        print(f"parallel dataplane ({par['channels']:.0f} channels): "
+              f"serial {par['serial_sec']:.2f}s, 2t {par['threads2_sec']:.2f}s, "
+              f"4t {par['threads4_sec']:.2f}s, speedup {s:.2f}x "
+              f"(advisory target >= {min_par}x)")
+        if s < min_par:
+            print(f"WARN (advisory): parallel data plane speedup {s:.2f}x is below the "
+                  f"{min_par}x target on this runner; not failing the job")
+
     base_tput = base.get("dense", {}).get("windowed_cycles_per_sec", 0)
     frac = base.get("max_regression_frac", 0.3)
     if base_tput > 0:
@@ -64,6 +82,9 @@ def main() -> int:
     else:
         print("absolute: baseline not yet recorded (windowed_cycles_per_sec=0) — "
               "relative gates only")
+        print("to arm the absolute gate, set dense.windowed_cycles_per_sec in "
+              "bench/baseline_kernel.json to this run's measured value: "
+              f"{dense['windowed_cycles_per_sec']:.0f}")
 
     if failures:
         for msg in failures:

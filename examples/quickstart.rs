@@ -37,7 +37,16 @@ fn build_model(batch: usize, dim: usize) -> Graph {
 }
 
 fn main() {
-    for cfg in [NpuConfig::mobile(), NpuConfig::server()] {
+    // ONNXIM_SIM_THREADS=N routes the run through the parallel
+    // single-simulation data plane (per-channel DRAM shards + per-core
+    // lanes; byte-identical reports). CI smoke uses this to exercise the
+    // parallel path on every push.
+    let sim_threads: usize = std::env::var("ONNXIM_SIM_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    for mut cfg in [NpuConfig::mobile(), NpuConfig::server()] {
+        cfg.sim_threads = sim_threads;
         let mut graph = build_model(1, 512);
         let report = optimize(&mut graph, OptLevel::Extended);
         println!("== {} NPU ==", cfg.name);

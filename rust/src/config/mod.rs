@@ -186,6 +186,14 @@ pub struct NpuConfig {
     /// stuck components instead of busy-spinning forever. Also settable
     /// per-run via `--max-cycles`.
     pub max_cycles: u64,
+    /// Data-plane worker threads for a *single* simulation (1 = serial,
+    /// the default). With N ≥ 2, per-channel DRAM shards and per-core
+    /// lanes tick in parallel inside each dense kernel cycle, with
+    /// deterministic merges keeping reports byte-identical to serial.
+    /// Pays off on multi-channel configs under memory pressure; sweeps
+    /// should prefer parallelizing across points instead. Also settable
+    /// per-run via `--sim-threads`.
+    pub sim_threads: usize,
 }
 
 impl NpuConfig {
@@ -209,6 +217,7 @@ impl NpuConfig {
             dram: DramConfig::ddr4_mobile(),
             noc: NocConfig::simple(),
             max_cycles: 0,
+            sim_threads: 1,
         }
     }
 
@@ -249,6 +258,7 @@ impl NpuConfig {
                 input_queue_flits: 256,
             },
             max_cycles: 0,
+            sim_threads: 1,
         }
     }
 
@@ -316,6 +326,7 @@ impl NpuConfig {
             ("acc_element_bytes", Json::num(self.acc_element_bytes as f64)),
             ("dma_max_inflight", Json::num(self.dma_max_inflight as f64)),
             ("max_cycles", Json::num(self.max_cycles as f64)),
+            ("sim_threads", Json::num(self.sim_threads as f64)),
             (
                 "vector_latency",
                 Json::obj(vec![
@@ -391,6 +402,11 @@ impl NpuConfig {
             max_cycles: match j.get("max_cycles") {
                 Some(v) => v.as_u64()?,
                 None => 0,
+            },
+            // Optional (absent in pre-parallel config files): 1 = serial.
+            sim_threads: match j.get("sim_threads") {
+                Some(v) => v.as_usize()?.max(1),
+                None => 1,
             },
             vector_latency: VectorLatency {
                 add: vj.req("add")?.as_u64()?,
@@ -468,6 +484,20 @@ mod tests {
         assert_eq!(c2.name, "server");
         assert_eq!(c2.systolic_width, c.systolic_width);
         assert_eq!(c2.dram.channels, c.dram.channels);
+        assert_eq!(c2.sim_threads, 1, "default must stay serial");
+    }
+
+    #[test]
+    fn sim_threads_roundtrips_and_defaults_serial() {
+        let mut c = NpuConfig::mobile();
+        c.sim_threads = 4;
+        let c2 = NpuConfig::from_json(&Json::parse(&c.to_json()).unwrap()).unwrap();
+        assert_eq!(c2.sim_threads, 4);
+        // Absent in legacy files -> serial (rename the key so the loader
+        // sees a file from before the field existed).
+        let legacy = NpuConfig::mobile().to_json().replace("\"sim_threads\"", "\"_legacy\"");
+        let c3 = NpuConfig::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(c3.sim_threads, 1);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::config::NpuConfig;
 use crate::dram::{MemRequest, MemResponse, RespSink};
 use crate::isa::{LatencyModel, Opcode, Unit};
 use crate::lowering::{JobRef, Tile};
-use crate::noc::{Noc, NocKind};
+use crate::noc::ReqSink;
 use crate::{Cycle, NEVER};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -152,6 +152,12 @@ pub struct Core {
     /// per-iteration `next_cycle` min stops recomputing untouched cores.
     next_cache: Cycle,
     next_dirty: bool,
+    /// Set by the kernel at each window boundary when the scheduler has
+    /// **no dispatchable tiles anywhere** (`!has_ready_tiles()` after the
+    /// dispatch pass). While true, a free tile slot cannot be filled
+    /// mid-window, which lets [`Self::decoupled`] fast-forward single-slot
+    /// tails (see the proof there).
+    dispatch_quiet: bool,
     pub stats: CoreStats,
 }
 
@@ -182,8 +188,16 @@ impl Core {
             finish_at: NEVER,
             next_cache: NEVER,
             next_dirty: true,
+            dispatch_quiet: false,
             stats: CoreStats::default(),
         }
+    }
+
+    /// Kernel hook: record whether the global scheduler left this window
+    /// with zero dispatchable tiles (see [`Self::decoupled`]). Does not
+    /// affect [`Self::next_event`], so the cache stays clean.
+    pub fn set_dispatch_quiet(&mut self, quiet: bool) {
+        self.dispatch_quiet = quiet;
     }
 
     /// True if a tile slot is free (the scheduler may dispatch a tile).
@@ -280,10 +294,12 @@ impl Core {
     }
 
     /// Advance to `now`: retire compute completions, issue ready
-    /// instructions, and generate DMA requests into the NoC. Completed
+    /// instructions, and generate DMA requests into the NoC (or, on the
+    /// parallel data plane, into this core's
+    /// [`crate::noc::IngressLane`] — any [`ReqSink`]). Completed
     /// tiles become visible via [`Self::take_finished`] the cycle their
     /// last instruction retires. Amortized O(1) per instruction event.
-    pub fn tick(&mut self, now: Cycle, noc: &mut NocKind) {
+    pub fn tick<S: ReqSink>(&mut self, now: Cycle, noc: &mut S) {
         self.next_dirty = true;
         // 1. Retire compute completions due by `now`.
         while let Some(&Reverse((c, slot, idx))) = self.completions.peek() {
@@ -364,7 +380,7 @@ impl Core {
     /// other component — its compute events run ahead of the global clock
     /// *inside* the component, so a long all-compute stretch costs one
     /// kernel entry instead of one per event.
-    pub fn tick_window(&mut self, now: Cycle, until: Cycle, noc: &mut NocKind) {
+    pub fn tick_window<S: ReqSink>(&mut self, now: Cycle, until: Cycle, noc: &mut S) {
         self.tick(now, noc);
         let mut t = now;
         while self.decoupled() {
@@ -380,16 +396,46 @@ impl Core {
     /// True when nothing outside the core can observe or influence it
     /// before its own next event: no memory responses pending, no DMA
     /// traffic generated or generatable (every live tile's MVIN/MVOUTs
-    /// have completed), no free slot the scheduler could fill mid-window,
-    /// no revocable tile a preemptive policy could reclaim, and no
-    /// finished tile awaiting pickup. Under these conditions in-window
-    /// fast-forward is byte-identical to cycle-stepped execution.
+    /// have completed), no slot the scheduler could fill or revoke
+    /// mid-window, and no finished tile awaiting pickup. Under these
+    /// conditions in-window fast-forward is byte-identical to
+    /// cycle-stepped execution.
+    ///
+    /// **Single-slot tails.** A free slot normally blocks fast-forward
+    /// (the scheduler might dispatch into it mid-window), but when the
+    /// kernel flagged the window [`Self::dispatch_quiet`] — the scheduler
+    /// had *zero* dispatchable tiles after the window-boundary dispatch
+    /// pass — an empty slot is provably inert for the rest of the window:
+    ///
+    /// - **Dispatch** requires a ready tile. Ready-tile queues change only
+    ///   through (a) arrival activation — arrivals clamp the window, so a
+    ///   new activation implies a new window; (b) node completion
+    ///   releasing successor tiles — driven by `on_tile_done`, which runs
+    ///   only in the control plane, and the data plane *ends the window*
+    ///   the cycle any tile completion becomes visible; (c) revoked tiles
+    ///   re-queued by a preemptive pass — `preempt` runs only in the
+    ///   control plane, and a revoking pass pins the window to one cycle.
+    ///   Driver-injected requests likewise land only at control-plane
+    ///   passes (windows clamp to `Driver::next_event`). So with
+    ///   `has_ready_tiles() == false` at the boundary, no dispatch can
+    ///   occur before the next boundary.
+    /// - **Revocation** of the *occupied* slot mid-window is impossible
+    ///   for the same reason: `preempt` runs only at boundaries. (And a
+    ///   tile this predicate lets fast-forward has `compute_issued`, which
+    ///   makes it non-revocable anyway.)
+    ///
+    /// Hence dispatch/revoke interleavings are unchanged: the first cycle
+    /// at which either could happen is a window boundary, and the
+    /// fast-forward never crosses one. The threaded/serial/reference
+    /// equivalence goldens in `rust/tests/kernel.rs` exercise this across
+    /// every policy (including the preemptive one), both hardware
+    /// configs, and all serving shapes.
     fn decoupled(&self) -> bool {
         self.finish_at == NEVER
             && self.inflight.is_empty()
             && self.active_dma.is_empty()
             && !self.dma_blocked
-            && self.slots.iter().all(|s| s.is_some())
+            && (self.dispatch_quiet || self.slots.iter().all(|s| s.is_some()))
             && self
                 .slots
                 .iter()
@@ -397,7 +443,7 @@ impl Core {
                 .all(|te| te.compute_issued && te.mem_left == 0)
     }
 
-    fn pump_dma(&mut self, now: Cycle, noc: &mut NocKind) {
+    fn pump_dma<S: ReqSink>(&mut self, now: Cycle, noc: &mut S) {
         self.dma_blocked = false;
         while !self.active_dma.is_empty() {
             if self.inflight.len() as u64 >= self.dma_max_inflight {
@@ -547,7 +593,7 @@ mod tests {
     use crate::config::NpuConfig;
     use crate::dram::DramSystem;
     use crate::isa::Instr;
-    use crate::noc::{build_noc, Noc};
+    use crate::noc::{build_noc, Noc, NocKind};
 
     /// Build a standalone memory system for core tests.
     fn memory(cfg: &NpuConfig) -> (NocKind, DramSystem) {

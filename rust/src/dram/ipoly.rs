@@ -88,6 +88,33 @@ mod tests {
         assert_eq!(ipoly_hash(12345, 4), ipoly_hash(12345, 4));
     }
 
+    /// The property the parallel data plane's channel shards rest on:
+    /// IPOLY induces a *partition* of the block-address space — every
+    /// block lands in exactly one shard (so shards share no addresses and
+    /// never race on bank/bus state), and every shard is non-empty (the
+    /// shards jointly cover the space).
+    #[test]
+    fn shard_address_sets_are_disjoint_and_cover() {
+        for k in 1..=6u32 {
+            let n = 1u64 << k;
+            let blocks = n * 1024;
+            let mut per_shard = vec![0u64; n as usize];
+            for a in 0..blocks {
+                let ch = ipoly_hash(a, k);
+                assert!(ch < n, "k={k}: block {a} mapped outside the shard space");
+                per_shard[ch as usize] += 1;
+            }
+            // Disjoint + total: shard counts sum to the block count (each
+            // block counted exactly once — ipoly_hash is a function, so
+            // no block can be in two shards).
+            assert_eq!(per_shard.iter().sum::<u64>(), blocks);
+            // Cover: no shard is empty.
+            for (ch, &c) in per_shard.iter().enumerate() {
+                assert!(c > 0, "k={k}: shard {ch} owns no addresses");
+            }
+        }
+    }
+
     #[test]
     fn zero_maps_to_zero() {
         assert_eq!(ipoly_hash(0, 4), 0);

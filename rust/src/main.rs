@@ -38,17 +38,22 @@
 //!   graph     Export a model graph: onnxim graph --model gpt3-small-decode
 //!                                   [--optimize] [--out g.json]
 //!   bench kernel  Event-kernel micro-benchmark: windowed vs reference
-//!             kernel on a dense-contention workload, and a parallel vs
-//!             serial 8-point serve sweep. Asserts byte-identical results
-//!             on both comparisons and writes a JSON summary:
+//!             kernel on a dense-contention workload, the parallel
+//!             single-sim data plane (--sim-threads 1/2/4 on a
+//!             16-channel config), and a parallel vs serial 8-point
+//!             serve sweep. Asserts byte-identical results on all three
+//!             comparisons and writes a JSON summary:
 //!             onnxim bench kernel [--out BENCH_kernel.json] [--threads N]
 //!   validate  Core-model validation vs the RTL reference (Fig. 3b).
 //!   verify    Load artifacts/ and check functional numerics (L1/L2/L3).
 //!
 //! Global simulation flags: `--max-cycles N` (safety cap; a run whose
-//! clock passes N fails naming the stuck components) and
+//! clock passes N fails naming the stuck components),
 //! `--kernel windowed|reference` (main-loop strategy; `reference` is the
-//! pre-refactor per-cycle loop kept as the equivalence baseline).
+//! pre-refactor per-cycle loop kept as the equivalence baseline) and
+//! `--sim-threads N` (parallel single-simulation data plane: per-channel
+//! DRAM shards + per-core lanes on N threads, byte-identical to serial;
+//! default 1).
 //!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
 
@@ -105,6 +110,9 @@ fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
     }
     if let Some(cap) = opts.get("max-cycles") {
         cfg.max_cycles = cap.parse()?;
+    }
+    if let Some(threads) = opts.get("sim-threads") {
+        cfg.sim_threads = threads.parse::<usize>()?.max(1);
     }
     Ok(cfg)
 }
@@ -364,14 +372,19 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench kernel` — two fixed workloads with built-in equivalence checks:
+/// `bench kernel` — three fixed workloads with built-in equivalence
+/// checks:
 ///
 /// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
 ///    hog, Mobile NPU, 4 cores): the windowed event kernel vs the
 ///    reference per-cycle loop on identical inputs. Reports must be
 ///    byte-identical; the speedup is the kernel refactor's payoff on the
 ///    workload where DRAM/NoC hold in-flight work nearly every cycle.
-/// 2. **Serve sweep** (8 offered-rate points): the parallel sweep runner
+/// 2. **Parallel data plane** (16-channel HBM2 server under cross-tenant
+///    memory pressure): one simulation at `--sim-threads` 1, 2 and 4.
+///    Reports must be byte-identical; the speedup is the per-channel
+///    shard / per-core lane payoff (`parallel_dataplane_speedup`).
+/// 3. **Serve sweep** (8 offered-rate points): the parallel sweep runner
 ///    vs serial execution of the same points. JSON reports must be
 ///    byte-identical; the speedup is bounded by available cores.
 fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
@@ -420,7 +433,34 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
         win_rep.total_cycles
     );
 
-    // --- Workload 2: serial vs parallel 8-point serve sweep. ---
+    // --- Workload 2: parallel single-sim data plane, --sim-threads {1,2,4}
+    //     on a 16-channel config (HBM2 server under cross-tenant memory
+    //     pressure: the per-channel shards and per-core lanes all stay
+    //     busy). Reports must be byte-identical across thread counts. ---
+    let par_run = |threads: usize| -> anyhow::Result<(f64, String)> {
+        let mut cfg = NpuConfig::server();
+        cfg.sim_threads = threads;
+        let mut sim = Simulator::new(cfg, Box::new(Spatial::new(vec![0, 1, 1, 1])));
+        sim.add_request(matmul("gemv", 1, 4096, 4096), 0, 0);
+        sim.add_request(matmul("hog", 1536, 1536, 1536), 0, 1);
+        let t0 = Instant::now();
+        let report = sim.try_run(&mut NoDriver)?;
+        Ok((t0.elapsed().as_secs_f64(), format!("{report:?}")))
+    };
+    eprintln!("bench kernel: parallel data plane (16-channel server), --sim-threads 1/2/4...");
+    let (par1_s, par1_fp) = par_run(1)?;
+    let (par2_s, par2_fp) = par_run(2)?;
+    let (par4_s, par4_fp) = par_run(4)?;
+    if par2_fp != par1_fp || par4_fp != par1_fp {
+        anyhow::bail!("parallel data plane diverged from serial (fingerprint mismatch)");
+    }
+    let par_speedup = par1_s / par2_s.min(par4_s).max(1e-9);
+    eprintln!(
+        "  serial {par1_s:.3}s, 2 threads {par2_s:.3}s, 4 threads {par4_s:.3}s \
+         -> {par_speedup:.2}x, reports byte-identical"
+    );
+
+    // --- Workload 3: serial vs parallel 8-point serve sweep. ---
     let rates =
         [5_000.0, 10_000.0, 20_000.0, 30_000.0, 40_000.0, 60_000.0, 80_000.0, 100_000.0];
     let scenario = |rate: f64| -> ServeConfig {
@@ -470,6 +510,16 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 ("speedup", Json::num(dense_speedup)),
                 ("control_passes", Json::num(win_iters as f64)),
                 ("dense_steps", Json::num(win_dense as f64)),
+            ]),
+        ),
+        (
+            "parallel_dataplane",
+            Json::obj(vec![
+                ("channels", Json::num(16.0)),
+                ("serial_sec", Json::num(par1_s)),
+                ("threads2_sec", Json::num(par2_s)),
+                ("threads4_sec", Json::num(par4_s)),
+                ("parallel_dataplane_speedup", Json::num(par_speedup)),
             ]),
         ),
         (

@@ -198,6 +198,24 @@ impl CrossbarNoc {
     fn flits(&self, bytes: u64) -> u64 {
         bytes.div_ceil(self.flit_bytes).max(1)
     }
+
+    /// Remaining injection credit for `core`'s
+    /// [`crate::noc::IngressLane`], in flits of request-switch input-queue
+    /// space. Input port `core` is written only by this core's injections
+    /// and drained only by the switch tick (after the core phase), so the
+    /// admission decision is per-core-local — the invariant the parallel
+    /// core phase rests on.
+    pub(crate) fn lane_credit(&self, core: usize) -> u64 {
+        self.req_net.max_queue_flits - self.req_net.input_flits[core]
+    }
+
+    pub(crate) fn flit_bytes(&self) -> u64 {
+        self.flit_bytes
+    }
+
+    pub(crate) fn access_granularity(&self) -> u64 {
+        self.access_granularity
+    }
 }
 
 impl Noc for CrossbarNoc {

@@ -15,9 +15,11 @@
 //! avoid protocol deadlock.
 
 mod crossbar;
+mod lane;
 mod simple;
 
 pub use crossbar::CrossbarNoc;
+pub use lane::{IngressLane, ReqSink};
 pub use simple::SimpleNoc;
 
 use crate::config::{NocConfig, NocModel};
@@ -91,6 +93,36 @@ impl NocKind {
                 NocKind::Crossbar(CrossbarNoc::new(cfg, num_cores, num_channels))
             }
         }
+    }
+
+    /// Build `core`'s [`IngressLane`] — a snapshot of the NoC state that
+    /// governs this core's injection admission (see the [`lane`] module
+    /// docs for why that state is per-core-local in both models).
+    pub fn lane(&self, core: usize) -> IngressLane {
+        match self {
+            NocKind::Simple(n) => IngressLane::per_request(n.lane_credit(core)),
+            NocKind::Crossbar(n) => {
+                IngressLane::flits(n.lane_credit(core), n.flit_bytes(), n.access_granularity())
+            }
+        }
+    }
+
+    /// Re-snapshot `lane`'s admission credit for the current dense cycle
+    /// (keeps its buffer allocation; the cost model never changes).
+    pub fn refresh_lane(&self, core: usize, lane: &mut IngressLane) {
+        lane.reset(match self {
+            NocKind::Simple(n) => n.lane_credit(core),
+            NocKind::Crossbar(n) => n.lane_credit(core),
+        });
+    }
+}
+
+/// The real NoC is itself a [`ReqSink`]: the serial data plane hands
+/// cores the NoC directly (no staging), the parallel plane hands them
+/// lanes and replays. Same `Core` code either way.
+impl ReqSink for NocKind {
+    fn try_inject_request(&mut self, now: Cycle, req: MemRequest) -> bool {
+        Noc::try_inject_request(self, now, req)
     }
 }
 

@@ -71,6 +71,15 @@ impl From<MemResponseOrd> for MemResponse {
 }
 
 impl SimpleNoc {
+    /// Remaining injection credit for `core`'s [`crate::noc::IngressLane`]
+    /// (requests): the per-core in-flight window is the *only* admission
+    /// state [`Noc::try_inject_request`] consults, and it is untouched by
+    /// other cores' same-cycle injections — the invariant the parallel
+    /// core phase rests on.
+    pub(crate) fn lane_credit(&self, core: usize) -> u64 {
+        (MAX_INFLIGHT_PER_CORE - self.inflight_per_core[core]) as u64
+    }
+
     pub fn new(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
         SimpleNoc {
             latency: cfg.latency,

@@ -26,6 +26,18 @@
 //! The `Reference` kernel mode degenerates every window to a single
 //! cycle, reproducing the pre-refactor per-cycle loop; golden tests
 //! assert the two modes produce byte-identical reports.
+//!
+//! The **parallel data plane** (`sim_threads > 1`) is a parallel driver
+//! *around* this interface rather than a change to it: the kernel still
+//! invokes each component's `tick_window` at its due cycles, but due
+//! cores tick concurrently against per-core ingress lanes
+//! ([`crate::noc::IngressLane`] substitutes for the NoC as the core's
+//! `Ctx` via the [`crate::noc::ReqSink`] bound) and DRAM's channel
+//! shards tick concurrently into per-shard staging, with every
+//! cross-shard hand-off replayed serially in the fixed component order.
+//! Components therefore never observe a different call sequence than the
+//! serial kernel produces — which is why the byte-identical guarantee
+//! extends to any thread count.
 
 use crate::core::Core;
 use crate::dram::{DramSystem, RespSink};

@@ -20,8 +20,16 @@
 //! single-cycle-window [`KernelMode::Reference`] keeps the pre-refactor
 //! behavior as an in-tree baseline, and golden tests assert both modes
 //! produce byte-identical reports.
+//!
+//! With `sim_threads > 1` the dense data plane additionally shards
+//! *within* each cycle — per-core ingress lanes and per-channel DRAM
+//! shards tick on a [`parallel::WorkerPool`], with the serial total order
+//! restored at deterministic merge points (see
+//! [`Simulator::advance_dataplane`]); the control plane stays
+//! single-threaded and reports stay byte-identical to serial.
 
 pub mod kernel;
+pub mod parallel;
 pub mod stats;
 pub mod sweep;
 
@@ -29,9 +37,10 @@ use crate::config::NpuConfig;
 use crate::core::Core;
 use crate::dram::DramSystem;
 use crate::lowering::LoweringParams;
-use crate::noc::{build_noc, Noc, NocKind};
+use crate::noc::{build_noc, IngressLane, Noc, NocKind};
 use crate::scheduler::{GlobalScheduler, Policy};
 use crate::{Cycle, NEVER};
+use parallel::WorkerPool;
 // NB: `kernel::Component` is deliberately NOT re-imported into this
 // module's scope — `NocKind` implements both `Noc` and `Component`, and
 // having both traits in scope would make every `noc.next_event(..)` call
@@ -115,6 +124,16 @@ pub struct Simulator {
     /// (e.g. a driver misreporting [`Driver::next_event`]) into a
     /// diagnosable failure.
     pub max_cycles: Cycle,
+    /// Worker threads for the parallel single-simulation data plane
+    /// (1 = serial, the default: the exact pre-parallel code path with no
+    /// staging-buffer overhead). With N ≥ 2, dense-cycle DRAM channel
+    /// shards and per-core lanes tick on a [`parallel::WorkerPool`] of
+    /// N − 1 workers plus the kernel thread, with deterministic merges at
+    /// the phase boundaries — reports stay byte-identical to serial.
+    pub sim_threads: usize,
+    /// Per-core ingress lanes (parallel core phase staging; see
+    /// [`crate::noc::IngressLane`]). Unused while `sim_threads == 1`.
+    lanes: Vec<IngressLane>,
     /// Utilization timeline bucket size in cycles (0 = disabled).
     pub util_bucket: Cycle,
     util_timeline: Vec<Vec<f64>>,
@@ -136,6 +155,8 @@ impl Simulator {
         let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), policy);
         let n = cfg.num_cores;
         let max_cycles = cfg.max_cycles;
+        let sim_threads = cfg.sim_threads.max(1);
+        let lanes = (0..n).map(|i| noc.lane(i)).collect();
         Simulator {
             cfg,
             cores,
@@ -145,6 +166,8 @@ impl Simulator {
             clock: 0,
             mode: KernelMode::Windowed,
             max_cycles,
+            sim_threads,
+            lanes,
             util_bucket: 0,
             util_timeline: Vec::new(),
             last_bucket_busy: vec![0; n],
@@ -174,6 +197,13 @@ impl Simulator {
         self
     }
 
+    /// Set the data-plane thread count (see [`Simulator::sim_threads`];
+    /// also settable via `NpuConfig::sim_threads` / `--sim-threads`).
+    pub fn with_sim_threads(mut self, threads: usize) -> Self {
+        self.sim_threads = threads.max(1);
+        self
+    }
+
     /// Add a request (thin wrapper over the scheduler).
     pub fn add_request(&mut self, graph: crate::graph::Graph, arrival: Cycle, tenant: usize) -> usize {
         self.sched.add_request(graph, arrival, tenant)
@@ -194,6 +224,9 @@ impl Simulator {
     pub fn try_run(&mut self, driver: &mut dyn Driver) -> anyhow::Result<SimReport> {
         let mut finished_tiles = Vec::new();
         let mut completed_reqs = Vec::new();
+        // The data-plane worker pool lives for the whole run (persistent
+        // threads; per-phase broadcasts are two atomics, not spawns).
+        let mut pool = (self.sim_threads > 1).then(|| WorkerPool::new(self.sim_threads - 1));
         loop {
             let now = self.clock;
             if self.max_cycles > 0 && now > self.max_cycles {
@@ -219,6 +252,14 @@ impl Simulator {
                         None => break,
                     }
                 }
+            }
+            // Nothing dispatchable left anywhere ⇒ no core's free slot
+            // can be filled before the next window boundary, which lets
+            // cores fast-forward single-slot tails (proof in
+            // `Core::decoupled`).
+            let dispatch_quiet = !self.sched.has_ready_tiles();
+            for core in &mut self.cores {
+                core.set_dispatch_quiet(dispatch_quiet);
             }
 
             // 2. Window end: the earliest cycle the control plane could
@@ -256,7 +297,7 @@ impl Simulator {
 
             // 3. Dense data-plane advance over [now, until); stops early
             //    the cycle a tile completes.
-            let stop = self.advance_dataplane(now, until);
+            let stop = self.advance_dataplane(now, until, pool.as_mut());
 
             // 4. Tile completions -> scheduler; request completions ->
             //    driver. Only completions *visible* at `stop` are drained:
@@ -293,13 +334,45 @@ impl Simulator {
         Ok(self.report())
     }
 
+    /// Minimum due cores / busy DRAM channel shards before a dense-cycle
+    /// phase is worth a pool broadcast. Below these, the phase runs
+    /// serially even when a pool exists — the result is byte-identical
+    /// either way (that is the whole merge-order design), so the
+    /// thresholds are pure wall-clock tuning, not semantics.
+    const MIN_PAR_CORES: usize = 2;
+    const MIN_PAR_CHANNELS: usize = 4;
+
     /// Advance the data plane (cores → NoC → DRAM, in the fixed
     /// pre-refactor order) over `[start, until)`, skipping both idle
     /// cycles (event-horizon jumps to the earliest due component) and
     /// idle components (cached next-events gate each tick). Returns the
     /// last cycle ticked: `until`-bounded, or earlier if a tile
     /// completed and the scheduler must run.
-    fn advance_dataplane(&mut self, start: Cycle, until: Cycle) -> Cycle {
+    ///
+    /// With a worker `pool` (`sim_threads > 1`), the two embarrassingly
+    /// shardable passes inside each dense cycle run concurrently, with
+    /// the serial total order restored at explicit merge points:
+    ///
+    /// 1. **Core lanes**: due cores tick in parallel, each injecting into
+    ///    its private [`IngressLane`] (admission is per-core-local in
+    ///    both NoC models — see `noc::lane`); accepted requests are then
+    ///    replayed into the real NoC in (cycle, core, id) order — cycle
+    ///    by the dense loop, core by the replay scan, id by each lane's
+    ///    in-order buffer — exactly the serial injection sequence.
+    /// 2. **DRAM channel shards**: busy channels tick in parallel
+    ///    (channels share no state; IPOLY partitions the address space),
+    ///    staging completions per shard; `drain_stage` then merges the
+    ///    batches into the NoC response network in channel order, the
+    ///    serial delivery order.
+    ///
+    /// The NoC tick between them — the one pass with genuinely shared
+    /// state — stays single-threaded, as does the whole control plane.
+    fn advance_dataplane(
+        &mut self,
+        start: Cycle,
+        until: Cycle,
+        mut pool: Option<&mut WorkerPool>,
+    ) -> Cycle {
         debug_assert!(until > start);
         let mut t = start;
         // The control plane may have touched anything at the boundary:
@@ -309,12 +382,51 @@ impl Simulator {
         let mut dram_next = 0;
         loop {
             self.dense_ticks += 1;
-            let Simulator { cores, noc, dram, .. } = &mut *self;
+            let Simulator { cores, noc, dram, lanes, .. } = &mut *self;
             let mut core_ticked = false;
-            for core in cores.iter_mut() {
-                if all_due || core.cached_next_event(t) <= t {
-                    core.tick_window(t, until, noc);
-                    core_ticked = true;
+            let mut due = 0usize;
+            for (core, lane) in cores.iter_mut().zip(lanes.iter_mut()) {
+                lane.due = all_due || core.cached_next_event(t) <= t;
+                due += lane.due as usize;
+            }
+            match pool.as_deref_mut() {
+                Some(pool) if due >= Self::MIN_PAR_CORES => {
+                    for (i, lane) in lanes.iter_mut().enumerate() {
+                        if lane.due {
+                            noc.refresh_lane(i, lane);
+                        }
+                    }
+                    pool.for_each2_mut(cores, lanes, |_, core, lane| {
+                        if lane.due {
+                            core.tick_window(t, until, lane);
+                            lane.ticked = true;
+                        }
+                    });
+                    // Deterministic merge: replay accepted requests into
+                    // the NoC in core order = the serial injection order.
+                    for lane in lanes.iter_mut() {
+                        if !lane.ticked {
+                            continue;
+                        }
+                        core_ticked = true;
+                        lane.ticked = false;
+                        for req in lane.accepted.drain(..) {
+                            let ok = Noc::try_inject_request(noc, t, req);
+                            // The lane mirrored the NoC's admission state;
+                            // a rejection here means a NoC model broke the
+                            // per-core-admission invariant. Fail loudly
+                            // rather than silently dropping traffic.
+                            assert!(ok, "ingress-lane admission diverged from the NoC");
+                        }
+                    }
+                }
+                _ => {
+                    for (core, lane) in cores.iter_mut().zip(lanes.iter()) {
+                        if lane.due {
+                            core.tick_window(t, until, noc);
+                            core_ticked = true;
+                        }
+                    }
                 }
             }
             // `noc_next`/`dram_next` were computed at the END of the
@@ -332,8 +444,16 @@ impl Simulator {
                 noc_ticked = true;
             }
             if all_due || noc_ticked || dram_next <= t {
-                // DRAM completions enter the response network directly.
-                dram.tick(t, noc);
+                match pool.as_deref_mut() {
+                    Some(pool) if dram.busy_channels() >= Self::MIN_PAR_CHANNELS => {
+                        // Shards tick concurrently; completions merge into
+                        // the response network in channel order.
+                        dram.par_tick(t, pool);
+                        dram.drain_stage(t, noc);
+                    }
+                    // DRAM completions enter the response network directly.
+                    _ => dram.tick(t, noc),
+                }
             }
             // A visible tile completion ends the window: the scheduler
             // must see it this cycle.
@@ -346,7 +466,7 @@ impl Simulator {
                 next = next.min(core.cached_next_event(t));
             }
             noc_next = self.noc.next_event(t);
-            dram_next = self.dram.next_event(t);
+            dram_next = self.dram.cached_next_event(t);
             next = next.min(noc_next).min(dram_next);
             if next >= until {
                 return t;
@@ -362,16 +482,16 @@ impl Simulator {
 
     /// Event-horizon clock advance. `driver_next` is the driver's earliest
     /// time-triggered event (arrival injection, batch flush), so open-loop
-    /// work created mid-run wakes the scheduler on time. Core next-events
-    /// come from their dirty-flag caches: untouched cores cost a branch,
-    /// not a recompute.
+    /// work created mid-run wakes the scheduler on time. Core and DRAM
+    /// next-events come from their dirty-flag caches: untouched cores and
+    /// channels cost a branch, not a recompute.
     fn next_cycle(&mut self, now: Cycle, driver_next: Cycle) -> Cycle {
         let mut next = driver_next;
         for core in &mut self.cores {
             next = next.min(core.cached_next_event(now));
         }
         next = next.min(self.noc.next_event(now));
-        next = next.min(self.dram.next_event(now));
+        next = next.min(self.dram.cached_next_event(now));
         next = next.min(self.sched.next_arrival(now));
         if self.sched.has_pending_activation(now)
             || (self.sched.has_ready_tiles() && self.cores.iter().any(|c| c.wants_tile()))
@@ -774,6 +894,59 @@ mod tests {
             let b = sim.add_request(matmul_graph("tight", 64, 512, 64), 500, 1);
             sim.sched.set_deadline(a, 1_000_000);
             sim.sched.set_deadline(b, 3_000);
+            sim
+        });
+    }
+
+    /// The parallel data plane must be invisible in the results: for any
+    /// thread count, reports and timelines are byte-identical to serial.
+    fn assert_threads_agree(mk: &dyn Fn() -> Simulator) {
+        let run = |threads: usize| {
+            let mut s = mk().with_sim_threads(threads);
+            let rep = s.run(&mut NoDriver);
+            format!("{rep:?}|{:?}", s.util_timeline())
+        };
+        let serial = run(1);
+        for threads in [2, 4] {
+            assert_eq!(serial, run(threads), "data plane diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn parallel_dataplane_agrees_multichannel_server() {
+        assert_threads_agree(&|| {
+            let mut sim = Simulator::new(
+                NpuConfig::server(),
+                Box::new(Spatial::new(vec![0, 1, 1, 1])),
+            )
+            .with_util_timeline(2_000);
+            sim.add_request(matmul_graph("gemv", 1, 1024, 1024), 0, 0);
+            sim.add_request(matmul_graph("hog", 512, 512, 512), 0, 1);
+            sim
+        });
+    }
+
+    #[test]
+    fn parallel_dataplane_agrees_single_channel_mobile() {
+        // One DRAM channel: the channel phase never parallelizes, the
+        // core-lane phase does. Exercises the lane replay path alone.
+        assert_threads_agree(&|| {
+            let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+            sim.add_request(matmul_graph("a", 128, 256, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 256, 128, 64), 2_000, 1);
+            sim
+        });
+    }
+
+    #[test]
+    fn parallel_dataplane_agrees_crossbar() {
+        assert_threads_agree(&|| {
+            let mut sim = Simulator::new(
+                NpuConfig::mobile().with_crossbar_noc(),
+                Box::new(TimeShared::new()),
+            );
+            sim.add_request(matmul_graph("a", 128, 128, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 128, 128, 128), 9_000, 1);
             sim
         });
     }

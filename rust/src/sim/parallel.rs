@@ -1,0 +1,345 @@
+//! Scoped worker pool for the **parallel single-simulation data plane**.
+//!
+//! Unlike [`super::sweep`] (which parallelizes *across* independent
+//! simulation points), this pool parallelizes *inside* one simulation:
+//! per-channel DRAM shards and per-core lanes tick concurrently within a
+//! dense kernel cycle, with deterministic merges at the phase boundaries
+//! (see `Simulator::advance_dataplane`). The pool is therefore built for
+//! **fine-grained broadcast**: the same task is published to every worker
+//! potentially millions of times per run, so workers spin briefly before
+//! parking and the publish path is two atomics plus an uncontended mutex
+//! — no per-phase thread spawns, no channels.
+//!
+//! Safety model: [`WorkerPool::run_parts`] publishes a *borrowed* closure
+//! to the workers and does not return until every worker has finished
+//! executing it (a panic in any part is re-raised on the caller after the
+//! barrier), so the borrow is live for exactly the span the workers use
+//! it. The slice helpers ([`WorkerPool::for_each_mut`],
+//! [`WorkerPool::for_each2_mut`]) hand each part a *disjoint* contiguous
+//! index range, so the `&mut` aliasing discipline is upheld by
+//! construction.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Spins before a worker parks while waiting for the next broadcast.
+/// Dense-plane phases arrive back-to-back, so the common case is a hit
+/// within a few hundred spins; parking only happens across control-plane
+/// gaps and run boundaries.
+const SPIN_LIMIT: u32 = 20_000;
+
+/// Type-erased pointer to the broadcast task. The pointee is only
+/// dereferenced between the epoch observation and the done-counter
+/// increment, both inside the span of the `run_parts` call that owns the
+/// borrow.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointer crosses threads, but the pointee is `Sync` and the
+// barrier protocol in `run_parts` guarantees it outlives every use.
+unsafe impl Send for TaskPtr {}
+
+struct Shared {
+    /// Bumped once per broadcast; workers run the task exactly once per
+    /// observed bump.
+    epoch: AtomicU64,
+    /// Workers that have finished the current broadcast.
+    done: AtomicU64,
+    /// The current task; written under the lock *before* the epoch bump.
+    task: Mutex<Option<TaskPtr>>,
+    /// First worker panic of the current broadcast (re-raised by main).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    stop: AtomicBool,
+}
+
+/// A persistent pool of `workers` OS threads plus the calling thread.
+/// Created once per simulation run (or sweep) and reused for every
+/// parallel phase; dropped (joining its threads) when the run ends.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` background threads. The caller participates in
+    /// every broadcast as part 0, so total parallelism is `workers + 1`;
+    /// `WorkerPool::new(0)` degenerates to serial execution on the caller.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            task: Mutex::new(None),
+            panic: Mutex::new(None),
+            stop: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("onnxim-sim-{}", i + 1))
+                    .spawn(move || worker_loop(&shared, i + 1))
+                    .expect("spawn sim worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Total parts per broadcast (the caller plus every worker).
+    pub fn parts(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(part)` once for every part in `0..self.parts()`, caller
+    /// included, and return only when all parts have finished. Panics in
+    /// any part propagate to the caller after the barrier.
+    ///
+    /// Takes `&mut self` deliberately: the epoch/done barrier protocol
+    /// (and with it the lifetime-erasing transmute below) is only sound
+    /// for one broadcast at a time, so exclusive access makes concurrent
+    /// broadcasts from safe code a compile error rather than a
+    /// use-after-free.
+    pub fn run_parts(&mut self, f: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        // SAFETY: only the lifetime is erased; the barrier below keeps
+        // the borrow live until every worker is done with it.
+        let ptr: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f) };
+        self.shared.done.store(0, Ordering::Release);
+        *self.shared.task.lock().expect("task lock") = Some(TaskPtr(ptr));
+        self.shared.epoch.fetch_add(1, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        // The caller is part 0. Catch its panic so the barrier still
+        // completes (a worker may still hold the task pointer).
+        let main_result = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let workers = self.handles.len() as u64;
+        let mut spins = 0u32;
+        while self.shared.done.load(Ordering::Acquire) < workers {
+            spins = spins.wrapping_add(1);
+            if spins % 16_384 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        *self.shared.task.lock().expect("task lock") = None;
+        if let Some(p) = self.shared.panic.lock().expect("panic lock").take() {
+            std::panic::resume_unwind(p);
+        }
+        if let Err(p) = main_result {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Run `f(i, &mut items[i])` for every element, partitioned into
+    /// disjoint contiguous chunks across the parts. Deterministic output
+    /// is the *caller's* responsibility: elements must be independent
+    /// (which per-core lanes and per-channel DRAM shards are by
+    /// construction), and any cross-element merge must happen after this
+    /// returns, in a fixed order.
+    pub fn for_each_mut<T, F>(&mut self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        let parts = self.parts();
+        let base = SendPtr(items.as_mut_ptr());
+        self.run_parts(&move |part| {
+            let (lo, hi) = chunk_bounds(n, part, parts);
+            for i in lo..hi {
+                // SAFETY: parts cover disjoint index ranges, so no two
+                // threads alias the same element.
+                let item = unsafe { &mut *base.0.add(i) };
+                f(i, item);
+            }
+        });
+    }
+
+    /// Like [`Self::for_each_mut`] over two equal-length slices zipped by
+    /// index (e.g. DRAM channels with their per-channel response staging
+    /// buffers, or cores with their ingress lanes).
+    pub fn for_each2_mut<A, B, F>(&mut self, a: &mut [A], b: &mut [B], f: F)
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut A, &mut B) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "zipped slices must have equal length");
+        let n = a.len();
+        let parts = self.parts();
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        self.run_parts(&move |part| {
+            let (lo, hi) = chunk_bounds(n, part, parts);
+            for i in lo..hi {
+                // SAFETY: disjoint index ranges per part (see above).
+                let (ia, ib) = unsafe { (&mut *pa.0.add(i), &mut *pb.0.add(i)) };
+                f(i, ia, ib);
+            }
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.epoch.fetch_add(1, Ordering::Release);
+        for h in &self.handles {
+            h.thread().unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Balanced contiguous partition of `0..n` into `parts` ranges.
+fn chunk_bounds(n: usize, part: usize, parts: usize) -> (usize, usize) {
+    (part * n / parts, (part + 1) * n / parts)
+}
+
+// Manual Copy/Clone: a derive would demand `T: Clone`, which the pointee
+// types (DRAM channels, cores) do not and should not implement.
+struct SendPtr<T>(*mut T);
+// SAFETY: used only by the disjoint-range helpers above, whose `T: Send`
+// bounds gate what actually crosses threads.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Copy for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+fn worker_loop(shared: &Shared, part: usize) {
+    let mut seen = 0u64;
+    loop {
+        let mut spins = 0u32;
+        loop {
+            let e = shared.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break;
+            }
+            spins = spins.wrapping_add(1);
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                // Parked workers are woken by the next publish (or stop);
+                // the timeout is a belt-and-braces fallback.
+                std::thread::park_timeout(std::time::Duration::from_millis(1));
+            }
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let task = shared.task.lock().expect("task lock").as_ref().map(|t| t.0);
+        if let Some(ptr) = task {
+            // SAFETY: the publisher blocks until `done` reaches the
+            // worker count, so the pointee outlives this call.
+            let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*ptr)(part) }));
+            if let Err(p) = r {
+                shared.panic.lock().expect("panic lock").get_or_insert(p);
+            }
+        }
+        shared.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn all_parts_run_exactly_once() {
+        let mut pool = WorkerPool::new(3);
+        let counts: Vec<AtomicUsize> = (0..pool.parts()).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..100 {
+            pool.run_parts(&|p| {
+                counts[p].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (p, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 100, "part {p} ran a wrong number of times");
+        }
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_element_once() {
+        let mut pool = WorkerPool::new(2);
+        let mut items = vec![0u64; 1000];
+        pool.for_each_mut(&mut items, |i, x| *x += i as u64 + 1);
+        for (i, x) in items.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn for_each2_mut_zips_by_index() {
+        let mut pool = WorkerPool::new(3);
+        let mut a: Vec<u64> = (0..257).collect();
+        let mut b = vec![0u64; 257];
+        pool.for_each2_mut(&mut a, &mut b, |i, x, y| {
+            *x *= 2;
+            *y = *x + i as u64;
+        });
+        for i in 0..257u64 {
+            assert_eq!(a[i as usize], 2 * i);
+            assert_eq!(b[i as usize], 3 * i);
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_is_serial() {
+        let mut pool = WorkerPool::new(0);
+        assert_eq!(pool.parts(), 1);
+        let mut items = vec![1u32; 8];
+        pool.for_each_mut(&mut items, |_, x| *x += 1);
+        assert!(items.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_barrier() {
+        let mut pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_parts(&|p| {
+                if p == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // The pool stays usable after a propagated panic.
+        let hits = AtomicUsize::new(0);
+        pool.run_parts(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), pool.parts());
+    }
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for n in [0usize, 1, 7, 16, 1000] {
+            for parts in 1..=5 {
+                let mut covered = 0;
+                for p in 0..parts {
+                    let (lo, hi) = chunk_bounds(n, p, parts);
+                    assert!(lo <= hi && hi <= n);
+                    covered += hi - lo;
+                }
+                assert_eq!(covered, n);
+                // Contiguous: part p ends where p+1 begins.
+                for p in 0..parts - 1 {
+                    assert_eq!(chunk_bounds(n, p, parts).1, chunk_bounds(n, p + 1, parts).0);
+                }
+            }
+        }
+    }
+}

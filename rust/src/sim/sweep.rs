@@ -10,10 +10,14 @@
 //! the same closures serially (asserted by the determinism tests and by
 //! `bench kernel` on every CI run).
 //!
-//! Scope note: this parallelizes *across* simulations. Partitioning a
-//! single simulation across threads (per-channel DRAM shards, per-core
-//! instruction streams) is future work — see ROADMAP.md.
+//! Scope note: this parallelizes *across* simulations; `sim_threads`
+//! (the [`super::parallel`] worker pool, which this runner reuses as its
+//! thread substrate) partitions *one* simulation. Prefer this runner for
+//! sweeps — independent points scale perfectly — and reserve
+//! `sim_threads` for single long runs on multi-channel configs; stacking
+//! both oversubscribes the machine.
 
+use super::parallel::WorkerPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -23,11 +27,13 @@ pub fn available_threads() -> usize {
 }
 
 /// Run every closure in `jobs` (work-stealing over an atomic cursor,
-/// at most `threads` workers) and return their results in input order.
+/// at most `threads` workers including the caller) and return their
+/// results in input order.
 ///
 /// `threads <= 1` or a single job runs serially on the caller's thread.
-/// A panicking job propagates the panic to the caller after the scope
-/// joins, like the serial path would.
+/// A panicking job propagates the panic to the caller after the pool
+/// joins the broadcast, like the serial path would. Thread substrate is
+/// the same [`WorkerPool`] the parallel data plane uses.
 pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
 where
     T: Send,
@@ -37,28 +43,36 @@ where
     if threads <= 1 || n <= 1 {
         return jobs.into_iter().map(|f| f()).collect();
     }
+    let mut pool = WorkerPool::new(threads.min(n) - 1);
+    run_jobs_on(&mut pool, jobs)
+}
+
+/// [`run_jobs`] on an existing pool (callers running several sweep
+/// batches amortize the thread spawns).
+pub fn run_jobs_on<T, F>(pool: &mut WorkerPool, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
     // Each job is taken exactly once (guarded by the claiming cursor);
     // each result slot is written exactly once. Mutexes rather than
     // unsafe cells — the per-job lock cost is noise next to a simulation.
     let slots: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
     let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(n) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let job = slots[i]
-                    .lock()
-                    .expect("job slot lock poisoned")
-                    .take()
-                    .expect("job claimed twice");
-                let out = job();
-                *results[i].lock().expect("result slot lock poisoned") = Some(out);
-            });
+    pool.run_parts(&|_part| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
+        let job = slots[i]
+            .lock()
+            .expect("job slot lock poisoned")
+            .take()
+            .expect("job claimed twice");
+        let out = job();
+        *results[i].lock().expect("result slot lock poisoned") = Some(out);
     });
     results
         .into_iter()
@@ -97,5 +111,15 @@ mod tests {
     fn empty_jobs() {
         let jobs: Vec<fn() -> usize> = Vec::new();
         assert!(run_jobs(jobs, 4).is_empty());
+    }
+
+    #[test]
+    fn run_jobs_on_reuses_one_pool_across_batches() {
+        let mut pool = WorkerPool::new(3);
+        for batch in 0..3usize {
+            let jobs: Vec<_> = (0..10usize).map(|i| move || batch * 100 + i).collect();
+            let want: Vec<usize> = (0..10).map(|i| batch * 100 + i).collect();
+            assert_eq!(run_jobs_on(&mut pool, jobs), want);
+        }
     }
 }

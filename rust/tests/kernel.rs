@@ -11,7 +11,10 @@
 //! Coverage: every scheduling policy (FCFS, TimeShared, Spatial,
 //! SloSlack, preemptive SloSlack) on both Table-II hardware configs, the
 //! crossbar NoC, serving scenarios across all three batching shapes, and
-//! the parallel-sweep-equals-serial determinism guarantee.
+//! the parallel-sweep-equals-serial determinism guarantee. The same
+//! matrix additionally pins the **parallel single-simulation data plane**
+//! (`--sim-threads ∈ {2, 4}`) to the serial fingerprints — per-channel
+//! DRAM shards and per-core ingress lanes must be result-invisible.
 
 use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
@@ -59,11 +62,18 @@ fn workload(sim: &mut Simulator) {
 /// Full-report fingerprint: Debug formatting covers every field
 /// (cycles, per-core stats, per-channel DRAM stats, latencies, derived
 /// utilizations) bit-for-bit.
-fn fingerprint(cfg: NpuConfig, pname: &str, mode: KernelMode) -> String {
-    let mut sim = Simulator::new(cfg, policy(pname)).with_kernel(mode).with_util_timeline(2_000);
+fn fingerprint_threads(cfg: NpuConfig, pname: &str, mode: KernelMode, threads: usize) -> String {
+    let mut sim = Simulator::new(cfg, policy(pname))
+        .with_kernel(mode)
+        .with_sim_threads(threads)
+        .with_util_timeline(2_000);
     workload(&mut sim);
     let rep = sim.run(&mut NoDriver);
     format!("{rep:?}|{:?}", sim.util_timeline())
+}
+
+fn fingerprint(cfg: NpuConfig, pname: &str, mode: KernelMode) -> String {
+    fingerprint_threads(cfg, pname, mode, 1)
 }
 
 #[test]
@@ -99,12 +109,53 @@ fn windowed_matches_reference_crossbar_noc() {
     }
 }
 
+/// The parallel single-simulation data plane must be result-invisible:
+/// for every policy, `--sim-threads ∈ {2, 4}` reproduces both the serial
+/// windowed fingerprint *and* the reference-kernel fingerprint byte for
+/// byte (per-channel shard merges and per-core lane replays restore the
+/// serial total order exactly).
+fn assert_threads_equivalent(mk_cfg: &dyn Fn() -> NpuConfig, label: &str) {
+    for p in ["fcfs", "time-shared", "spatial", "slo-slack", "slo-slack-preempt"] {
+        let serial = fingerprint_threads(mk_cfg(), p, KernelMode::Windowed, 1);
+        let reference = fingerprint_threads(mk_cfg(), p, KernelMode::Reference, 1);
+        assert_eq!(serial, reference, "windowed/reference divergence on {label}/{p}");
+        for threads in [2usize, 4] {
+            assert_eq!(
+                fingerprint_threads(mk_cfg(), p, KernelMode::Windowed, threads),
+                serial,
+                "parallel data plane diverged on {label}/{p} at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_dataplane_matches_serial_every_policy_mobile() {
+    assert_threads_equivalent(&NpuConfig::mobile, "mobile");
+}
+
+#[test]
+fn parallel_dataplane_matches_serial_every_policy_server() {
+    assert_threads_equivalent(&NpuConfig::server, "server");
+}
+
+#[test]
+fn parallel_dataplane_matches_serial_crossbar() {
+    assert_threads_equivalent(&|| NpuConfig::mobile().with_crossbar_noc(), "mobile-crossbar");
+}
+
 /// Serving scenarios drive the kernel through its hardest corners:
 /// driver-injected arrivals mid-window, completion-driven decode
 /// iterations launching requests at the drain cycle, and batch-timeout
 /// flushes. All three batching shapes must agree across kernels.
 fn serve_fingerprint(scfg: &ServeConfig, mode: KernelMode) -> String {
-    run_serve_mode(NpuConfig::server(), Box::new(Fcfs::new()), scfg, mode)
+    serve_fingerprint_threads(scfg, mode, 1)
+}
+
+fn serve_fingerprint_threads(scfg: &ServeConfig, mode: KernelMode, threads: usize) -> String {
+    let mut cfg = NpuConfig::server();
+    cfg.sim_threads = threads;
+    run_serve_mode(cfg, Box::new(Fcfs::new()), scfg, mode)
         .expect("serve scenario")
         .to_json()
 }
@@ -167,6 +218,53 @@ fn serve_chunked_prefill_agrees_across_kernels() {
         serve_fingerprint(&scfg, KernelMode::Reference),
         "chunked-prefill serving diverged"
     );
+}
+
+/// All three serving shapes, threaded: the open-loop driver (mid-run
+/// injections, completion-driven decode iterations, chunked prefill)
+/// rides on the parallel data plane without a byte of drift.
+#[test]
+fn serve_shapes_agree_across_sim_threads() {
+    for (name, scfg) in [
+        ("static", static_scenario()),
+        ("continuous", continuous_scenario()),
+        ("prefill", prefill_scenario()),
+    ] {
+        let serial = serve_fingerprint_threads(&scfg, KernelMode::Windowed, 1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                serve_fingerprint_threads(&scfg, KernelMode::Windowed, threads),
+                serial,
+                "{name} serving diverged at {threads} sim-threads"
+            );
+        }
+    }
+}
+
+/// Multi-seed stress on the crossbar NoC: the flit-level switch is the
+/// NoC model with the most intricate shared state (wormhole locks,
+/// round-robin pointers, bounded input queues), so hammer the lane
+/// replay + shard merge across several traffic randomizations.
+#[test]
+fn parallel_dataplane_multi_seed_stress_crossbar() {
+    for seed in [1u64, 7, 23, 101, 4242] {
+        let mut t = TenantLoadConfig::poisson("mlp", 25_000.0);
+        t.max_batch = 4;
+        t.batch_timeout_us = 20.0;
+        let mut u = TenantLoadConfig::poisson("mlp", 10_000.0);
+        u.process = "gamma".into();
+        u.cv = 2.0;
+        let scfg = ServeConfig { seed, duration_ms: 0.3, slo_ms: 1.0, tenants: vec![t, u] };
+        let run = |threads: usize| {
+            let mut cfg = NpuConfig::mobile().with_crossbar_noc();
+            cfg.sim_threads = threads;
+            run_serve_mode(cfg, Box::new(Fcfs::new()), &scfg, KernelMode::Windowed)
+                .expect("stress point")
+                .to_json()
+        };
+        let serial = run(1);
+        assert_eq!(run(4), serial, "crossbar stress diverged at seed {seed}");
+    }
 }
 
 #[test]
