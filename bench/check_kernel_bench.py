@@ -69,6 +69,21 @@ def main() -> int:
             print(f"WARN (advisory): parallel data plane speedup {s:.2f}x is below the "
                   f"{min_par}x target on this runner; not failing the job")
 
+    # Tracing overhead: ADVISORY, same noisy-runner policy as above. The
+    # hard guarantee (telemetry off => no telemetry state at all) is
+    # enforced by the relative gates running untraced; this just surfaces
+    # when the tracer's recording cost drifts.
+    tracing = cur.get("tracing")
+    if tracing is not None:
+        max_overhead = base.get("tracing", {}).get("max_overhead_pct", 25.0)
+        pct = tracing["trace_overhead_pct"]
+        print(f"tracing: untraced {tracing['untraced_sec']:.2f}s, traced "
+              f"{tracing['traced_sec']:.2f}s ({tracing['trace_events']:.0f} events), "
+              f"overhead {pct:+.1f}% (advisory target <= {max_overhead}%)")
+        if pct > max_overhead:
+            print(f"WARN (advisory): tracing overhead {pct:+.1f}% exceeds the "
+                  f"{max_overhead}% target on this runner; not failing the job")
+
     base_tput = base.get("dense", {}).get("windowed_cycles_per_sec", 0)
     frac = base.get("max_regression_frac", 0.3)
     if base_tput > 0:

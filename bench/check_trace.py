@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""CI validator for sim-time traces written by `--trace-out`.
+
+Usage: check_trace.py TRACE.json
+
+Checks the Chrome trace-event schema the simulator promises:
+
+- top level is an object with a `traceEvents` array (and a
+  `displayTimeUnit`),
+- every event carries `name`, `ph`, `pid`, `tid`,
+- `ph` is one of `M` (metadata), `X` (complete span, with `ts` + `dur`)
+  or `i` (instant, with `ts` + `s`),
+- non-metadata events are sorted by `ts` (the canonical export order),
+- timestamps and durations are non-negative integers (simulated cycles).
+
+Byte-level determinism (identical traces across kernel modes and thread
+counts) is asserted separately with `cmp` in CI; this script guards the
+schema so the file stays loadable in Perfetto / chrome://tracing.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> int:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        trace = json.load(f)
+
+    if not isinstance(trace, dict) or "traceEvents" not in trace:
+        return fail("top level must be an object with a traceEvents array")
+    events = trace["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return fail("traceEvents must be a non-empty array")
+
+    counts = {"M": 0, "X": 0, "i": 0}
+    last_ts = 0
+    for i, e in enumerate(events):
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in e:
+                return fail(f"event {i} is missing '{key}': {e}")
+        ph = e["ph"]
+        if ph not in counts:
+            return fail(f"event {i} has unexpected phase {ph!r}")
+        counts[ph] += 1
+        if ph == "M":
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            return fail(f"event {i} has non-cycle ts {ts!r}")
+        if ts < last_ts:
+            return fail(f"event {i} breaks the canonical ts order "
+                        f"({ts} after {last_ts})")
+        last_ts = ts
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                return fail(f"complete event {i} has non-cycle dur {dur!r}")
+        else:  # instant
+            if e.get("s") != "t":
+                return fail(f"instant event {i} is missing its scope")
+
+    if counts["X"] + counts["i"] == 0:
+        return fail("trace holds metadata only — no recorded events")
+    print(f"OK: {counts['X']} spans, {counts['i']} instants, "
+          f"{counts['M']} metadata records, cycles 0..{last_ts}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,7 @@ fn drive(model: &str, cores: usize, hotspot: bool, n: u64) -> (u64, f64) {
     let dram_cfg = DramConfig::hbm2_server();
     let mut dram = DramSystem::new(&dram_cfg, 1.0);
     let cfg = if model == "simple" { NocConfig::simple() } else { NocConfig::crossbar() };
-    let mut noc = build_noc(&cfg, cores, dram_cfg.channels);
+    let mut noc = build_noc(&cfg, cores, dram_cfg.channels, dram_cfg.access_granularity);
     let mut issued = 0u64;
     let mut done = 0u64;
     let mut responses = Vec::new();

@@ -152,6 +152,10 @@ pub struct Core {
     /// per-iteration `next_cycle` min stops recomputing untouched cores.
     next_cache: Cycle,
     next_dirty: bool,
+    /// Cache misses in [`Self::cached_next_event`] — how often the kernel
+    /// actually recomputed this core's event horizon (metrics counter;
+    /// kernel-mode-dependent by design).
+    next_recomputes: u64,
     /// Set by the kernel at each window boundary when the scheduler has
     /// **no dispatchable tiles anywhere** (`!has_ready_tiles()` after the
     /// dispatch pass). While true, a free tile slot cannot be filled
@@ -188,6 +192,7 @@ impl Core {
             finish_at: NEVER,
             next_cache: NEVER,
             next_dirty: true,
+            next_recomputes: 0,
             dispatch_quiet: false,
             stats: CoreStats::default(),
         }
@@ -582,8 +587,19 @@ impl Core {
         if self.next_dirty {
             self.next_cache = self.next_event(now);
             self.next_dirty = false;
+            self.next_recomputes += 1;
         }
         self.next_cache
+    }
+
+    /// How many times the `next_event` cache missed (metrics counter).
+    pub fn next_event_recomputes(&self) -> u64 {
+        self.next_recomputes
+    }
+
+    /// Outstanding DMA memory requests right now (metrics gauge).
+    pub fn dma_inflight(&self) -> usize {
+        self.inflight.len()
     }
 }
 
@@ -597,7 +613,7 @@ mod tests {
 
     /// Build a standalone memory system for core tests.
     fn memory(cfg: &NpuConfig) -> (NocKind, DramSystem) {
-        let noc = build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels);
+        let noc = build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels, cfg.dram.access_granularity);
         let dram = DramSystem::new(&cfg.dram, cfg.core_freq_ghz);
         (noc, dram)
     }

@@ -30,6 +30,9 @@
 //! - [`serve`] — open-loop DNN serving frontend: stochastic traffic
 //!   generators, dynamic batching with admission control, and SLO
 //!   reporting (latency percentiles, goodput) on top of the simulator.
+//! - [`telemetry`] — deterministic observability: sim-time tracing
+//!   (Chrome trace-event export), bucket-edge timeline metrics, and
+//!   wall-clock kernel self-profiling; zero-cost when disabled.
 //! - [`baseline`] — an Accel-sim-like fine-grained comparator and a
 //!   Gemmini-RTL-like cycle-exact reference core for validation.
 //! - [`runtime`] — PJRT-based functional execution of AOT-compiled XLA
@@ -48,6 +51,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod tenant;
 pub mod util;
 

@@ -31,6 +31,9 @@
 //!             Emits a deterministic JSON SLO report on stdout (a
 //!             human-readable table goes to stderr).
 //!   trace     Simulate a multi-tenant trace JSON: onnxim trace --trace t.json
+//!   trace view  Summarize a sim-time trace produced by --trace-out:
+//!             onnxim trace view --trace TRACE.json (event counts, span
+//!             totals and the covered cycle range, per process)
 //!   trace gen Freeze a stochastic workload into a replayable trace:
 //!             onnxim trace gen --model resnet50 --rate 100 --duration-ms 5
 //!                              [--seed 42] [--process poisson] [--cv 1]
@@ -55,6 +58,16 @@
 //! DRAM shards + per-core lanes on N threads, byte-identical to serial;
 //! default 1).
 //!
+//! Telemetry flags (`sim` and `serve`; all off by default — the hot path
+//! then carries no telemetry state at all):
+//!   --trace-out FILE    sim-time trace (Chrome trace-event JSON, byte-
+//!                       identical across kernel modes and thread counts)
+//!   --trace-mem         also record one span per serviced DRAM request
+//!   --metrics-bucket N  sample gauges every N cycles into a metrics
+//!                       timeline embedded in the JSON report
+//!   --profile           wall-clock kernel self-profile
+//!   --profile-out FILE  where to write it (default PROFILE_kernel.json)
+//!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
 
 use onnxim::baseline::rtl_ref;
@@ -63,8 +76,9 @@ use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
 use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
 use onnxim::Cycle;
-use onnxim::serve::{run_serve_mode, TrafficGen};
+use onnxim::serve::{run_serve_mode, run_serve_telemetry, TrafficGen};
 use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
+use onnxim::telemetry::{Telemetry, TelemetryConfig};
 use onnxim::tenant::Trace;
 use onnxim::util::json::Json;
 use onnxim::util::stats::{correlation, mape};
@@ -126,6 +140,37 @@ fn kernel_mode(opts: &HashMap<String, String>) -> anyhow::Result<KernelMode> {
     })
 }
 
+/// Parse the telemetry flags shared by `sim` and `serve`.
+fn telemetry_config(opts: &HashMap<String, String>) -> anyhow::Result<TelemetryConfig> {
+    Ok(TelemetryConfig {
+        trace: opts.contains_key("trace-out"),
+        trace_mem: opts.contains_key("trace-mem"),
+        metrics_bucket: opt_parse(opts, "metrics-bucket", 0u64)?,
+        profile: opts.contains_key("profile") || opts.contains_key("profile-out"),
+    })
+}
+
+/// Write the artifacts of a detached telemetry block per the CLI flags:
+/// the trace JSON to `--trace-out` and the kernel self-profile to
+/// `--profile-out` (default `PROFILE_kernel.json`).
+fn write_telemetry_artifacts(
+    opts: &HashMap<String, String>,
+    tel: Option<Box<Telemetry>>,
+) -> anyhow::Result<()> {
+    let Some(mut t) = tel else { return Ok(()) };
+    if let (Some(path), Some(tr)) = (opts.get("trace-out"), t.tracer.as_mut()) {
+        let n = tr.event_count();
+        std::fs::write(path, tr.export().pretty())?;
+        eprintln!("wrote {path} ({n} trace events)");
+    }
+    if let Some(p) = t.prof.as_ref() {
+        let path = opts.get("profile-out").map(String::as_str).unwrap_or("PROFILE_kernel.json");
+        std::fs::write(path, p.to_json().pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 /// Build a scheduling policy. `serve` carries the scenario + core clock
 /// so `slo-slack` can derive per-tenant SLO budgets in cycles; the other
 /// subcommands have no deadline source, so `slo-slack` is rejected there
@@ -185,7 +230,10 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
             NocModel::Crossbar => "crossbar",
         }
     );
-    let mut sim = Simulator::new(cfg, policy).with_kernel(kernel_mode(&opts)?);
+    let tel_cfg = telemetry_config(&opts)?;
+    let mut sim = Simulator::new(cfg, policy)
+        .with_kernel(kernel_mode(&opts)?)
+        .with_telemetry(tel_cfg);
     sim.add_request(graph, 0, 0);
     let t0 = Instant::now();
     let report = sim.try_run(&mut NoDriver)?;
@@ -198,6 +246,11 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
         sim.iterations,
         sim.dense_ticks,
     );
+    let tel = sim.take_telemetry();
+    if let Some(m) = tel.as_deref().and_then(|t| t.metrics.as_ref()) {
+        println!("metrics timeline: {} rows every {} cycles", m.rows(), m.bucket());
+    }
+    write_telemetry_artifacts(&opts, tel)?;
     Ok(())
 }
 
@@ -327,7 +380,14 @@ fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
         scfg.duration_ms,
         scfg.seed
     );
-    let report = run_serve_mode(cfg, policy, &scfg, kernel_mode(&opts)?)?;
+    let tel_cfg = telemetry_config(&opts)?;
+    let report = if tel_cfg.enabled() {
+        let (report, tel) = run_serve_telemetry(cfg, policy, &scfg, kernel_mode(&opts)?, tel_cfg)?;
+        write_telemetry_artifacts(&opts, tel)?;
+        report
+    } else {
+        run_serve_mode(cfg, policy, &scfg, kernel_mode(&opts)?)?
+    };
     eprintln!("{}", report.render_table());
     let json = report.to_json();
     match opts.get("out") {
@@ -337,6 +397,70 @@ fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
         }
         None => println!("{json}"),
     }
+    Ok(())
+}
+
+/// `trace view` — summarize a Chrome trace-event JSON written by
+/// `--trace-out`: per-process event counts, span-duration totals, and
+/// the covered cycle range. A quick sanity check before loading the file
+/// into Perfetto.
+fn cmd_trace_view(opts: HashMap<String, String>) -> anyhow::Result<()> {
+    let path = opts
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("--trace <file.json> required"))?;
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let events = j.req("traceEvents")?.as_arr()?;
+    // pid -> process name, from the "M" metadata records.
+    let mut procs: HashMap<u64, String> = HashMap::new();
+    // (pid, event name) -> (count, total span cycles).
+    let mut by_name: Vec<((u64, String), (u64, u64))> = Vec::new();
+    let (mut t_min, mut t_max, mut total) = (u64::MAX, 0u64, 0u64);
+    for e in events {
+        let ph = e.req("ph")?.as_str().unwrap_or_default().to_string();
+        let pid = e.req("pid")?.as_u64().unwrap_or(0);
+        let name = e.req("name")?.as_str().unwrap_or_default().to_string();
+        if ph == "M" {
+            if name == "process_name" {
+                if let Ok(n) = e.req("args")?.req("name")?.as_str() {
+                    procs.insert(pid, n.to_string());
+                }
+            }
+            continue;
+        }
+        let ts = e.req("ts")?.as_u64().unwrap_or(0);
+        let dur = e.get("dur").and_then(|d| d.as_u64().ok()).unwrap_or(0);
+        t_min = t_min.min(ts);
+        t_max = t_max.max(ts + dur);
+        total += 1;
+        let key = (pid, name);
+        match by_name.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => {
+                v.0 += 1;
+                v.1 += dur;
+            }
+            None => by_name.push((key, (1, dur))),
+        }
+    }
+    if total == 0 {
+        println!("{path}: no events");
+        return Ok(());
+    }
+    println!("{path}: {total} events over cycles {t_min}..{t_max}");
+    by_name.sort_by_key(|e| (e.0 .0, e.0 .1.clone()));
+    let mut table = onnxim::util::stats::Table::new(&[
+        "process", "event", "count", "total cycles", "mean cycles",
+    ]);
+    for ((pid, name), (count, dur)) in &by_name {
+        let proc_name = procs.get(pid).cloned().unwrap_or_else(|| format!("pid {pid}"));
+        table.row(&[
+            proc_name,
+            name.clone(),
+            format!("{count}"),
+            format!("{dur}"),
+            format!("{:.1}", *dur as f64 / *count as f64),
+        ]);
+    }
+    println!("{}", table.render());
     Ok(())
 }
 
@@ -372,7 +496,7 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench kernel` — three fixed workloads with built-in equivalence
+/// `bench kernel` — four fixed workloads with built-in equivalence
 /// checks:
 ///
 /// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
@@ -387,6 +511,11 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
 /// 3. **Serve sweep** (8 offered-rate points): the parallel sweep runner
 ///    vs serial execution of the same points. JSON reports must be
 ///    byte-identical; the speedup is bounded by available cores.
+/// 4. **Tracing overhead**: workload 1 again with the sim-time tracer
+///    recording; reports `trace_overhead_pct` against the untraced
+///    windowed baseline (`bench/check_kernel_bench.py` warns when it
+///    regresses). With `--profile`, a further profiled run writes
+///    `PROFILE_kernel.json`.
 fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
     use onnxim::graph::{Activation, Graph, OpKind};
 
@@ -497,6 +626,49 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
          -> {sweep_speedup:.2}x, results byte-identical"
     );
 
+    // --- Workload 4: tracing overhead — the dense-contention run again,
+    //     with the sim-time tracer recording. The untraced baseline is
+    //     workload 1's windowed time; telemetry-off runs carry no
+    //     telemetry state at all, so that baseline is the true zero. ---
+    eprintln!("bench kernel: dense-contention workload with sim-time tracing...");
+    let traced_run = |profile: bool| -> anyhow::Result<(f64, Option<Box<Telemetry>>)> {
+        let mut sim =
+            Simulator::new(NpuConfig::mobile(), Box::new(Spatial::new(vec![0, 1, 1, 1])))
+                .with_telemetry(TelemetryConfig {
+                    trace: true,
+                    trace_mem: false,
+                    metrics_bucket: 0,
+                    profile,
+                });
+        sim.add_request(matmul("gemv", 1, 2048, 2048), 0, 0);
+        sim.add_request(matmul("hog", 512, 2048, 2048), 0, 1);
+        let t0 = Instant::now();
+        sim.try_run(&mut NoDriver)?;
+        Ok((t0.elapsed().as_secs_f64(), sim.take_telemetry()))
+    };
+    let (traced_s, traced_tel) = traced_run(false)?;
+    let trace_events = traced_tel
+        .and_then(|mut t| t.tracer.take())
+        .map_or(0, |tr| tr.event_count());
+    let trace_overhead_pct = (traced_s / win_s.max(1e-9) - 1.0) * 100.0;
+    eprintln!(
+        "  untraced {win_s:.3}s, traced {traced_s:.3}s ({trace_events} events) \
+         -> {trace_overhead_pct:+.1}% overhead"
+    );
+    if opts.contains_key("profile") || opts.contains_key("profile-out") {
+        // A separate profiled run, so its stopwatches don't pollute the
+        // overhead measurement above. Only the profile artifact is
+        // written: the tracer is dropped first.
+        let (_, tel) = traced_run(true)?;
+        write_telemetry_artifacts(
+            &opts,
+            tel.map(|mut t| {
+                t.tracer = None;
+                t
+            }),
+        )?;
+    }
+
     let json = Json::obj(vec![
         ("schema", Json::num(1.0)),
         (
@@ -530,6 +702,15 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 ("serial_sec", Json::num(serial_s)),
                 ("parallel_sec", Json::num(parallel_s)),
                 ("speedup", Json::num(sweep_speedup)),
+            ]),
+        ),
+        (
+            "tracing",
+            Json::obj(vec![
+                ("untraced_sec", Json::num(win_s)),
+                ("traced_sec", Json::num(traced_s)),
+                ("trace_events", Json::num(trace_events as f64)),
+                ("trace_overhead_pct", Json::num(trace_overhead_pct)),
             ]),
         ),
     ])
@@ -577,9 +758,12 @@ fn main() -> ExitCode {
         eprintln!("see rust/src/main.rs header for the full flag list");
         return ExitCode::FAILURE;
     };
-    // `trace gen` and `bench kernel` are the two-word subcommands.
+    // `trace gen`, `trace view` and `bench kernel` are the two-word
+    // subcommands.
     let (cmd, rest) = if cmd == "trace" && args.get(1).map(String::as_str) == Some("gen") {
         ("trace-gen", &args[2..])
+    } else if cmd == "trace" && args.get(1).map(String::as_str) == Some("view") {
+        ("trace-view", &args[2..])
     } else if cmd == "bench" && args.get(1).map(String::as_str) == Some("kernel") {
         ("bench-kernel", &args[2..])
     } else {
@@ -591,6 +775,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(opts),
         "trace" => cmd_trace(opts),
         "trace-gen" => cmd_trace_gen(opts),
+        "trace-view" => cmd_trace_view(opts),
         "graph" => cmd_graph(opts),
         "bench-kernel" => cmd_bench_kernel(opts),
         "validate" => cmd_validate(opts),

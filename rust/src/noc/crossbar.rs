@@ -173,7 +173,12 @@ pub struct CrossbarNoc {
 }
 
 impl CrossbarNoc {
-    pub fn new(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
+    pub fn new(
+        cfg: &NocConfig,
+        num_cores: usize,
+        num_channels: usize,
+        access_granularity: u64,
+    ) -> Self {
         CrossbarNoc {
             req_net: Switch::new(
                 num_cores,
@@ -189,7 +194,7 @@ impl CrossbarNoc {
             ),
             req_staged: (0..num_channels).map(|_| VecDeque::new()).collect(),
             flit_bytes: cfg.flit_bytes,
-            access_granularity: 64,
+            access_granularity,
             scratch_req: Vec::new(),
             scratch_resp: Vec::new(),
         }
@@ -290,7 +295,7 @@ mod tests {
     use crate::noc::testutil::roundtrip;
 
     fn mk(cores: usize, chans: usize) -> CrossbarNoc {
-        CrossbarNoc::new(&NocConfig::crossbar(), cores, chans)
+        CrossbarNoc::new(&NocConfig::crossbar(), cores, chans, 64)
     }
 
     fn req(id: u64, addr: u64, core: usize) -> MemRequest {
@@ -412,7 +417,7 @@ mod tests {
                 })
                 .collect()
         };
-        let mut simple = crate::noc::SimpleNoc::new(&NocConfig::simple(), 4, 1);
+        let mut simple = crate::noc::SimpleNoc::new(&NocConfig::simple(), 4, 1, 64);
         let (_, t_simple) = roundtrip(&mut simple, reqs(()));
         let mut xbar = mk(4, 1);
         let (_, t_xbar) = roundtrip(&mut xbar, reqs(()));

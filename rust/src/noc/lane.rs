@@ -129,7 +129,7 @@ mod tests {
     #[test]
     fn lane_admission_matches_noc_both_models() {
         for model in [NocConfig::simple(), NocConfig::crossbar()] {
-            let mut noc = build_noc(&model, 2, 4);
+            let mut noc = build_noc(&model, 2, 4, 64);
             let mut rng = Rng::new(0xBEEF);
             let mut lanes = [noc.lane(0), noc.lane(1)];
             let mut id = 0u64;

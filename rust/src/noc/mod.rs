@@ -85,13 +85,27 @@ pub enum NocKind {
 }
 
 impl NocKind {
-    /// Construct the configured NoC model.
-    pub fn build(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
+    /// Construct the configured NoC model. `access_granularity` is the
+    /// DRAM atom size ([`crate::config::DramConfig::access_granularity`]):
+    /// it sizes payload packets and, for the crossbar, feeds the same
+    /// address→channel hash the DRAM system uses, so routing agrees with
+    /// channel ownership at any granularity.
+    pub fn build(
+        cfg: &NocConfig,
+        num_cores: usize,
+        num_channels: usize,
+        access_granularity: u64,
+    ) -> Self {
         match cfg.model {
-            NocModel::Simple => NocKind::Simple(SimpleNoc::new(cfg, num_cores, num_channels)),
-            NocModel::Crossbar => {
-                NocKind::Crossbar(CrossbarNoc::new(cfg, num_cores, num_channels))
+            NocModel::Simple => {
+                NocKind::Simple(SimpleNoc::new(cfg, num_cores, num_channels, access_granularity))
             }
+            NocModel::Crossbar => NocKind::Crossbar(CrossbarNoc::new(
+                cfg,
+                num_cores,
+                num_channels,
+                access_granularity,
+            )),
         }
     }
 
@@ -181,8 +195,13 @@ impl RespSink for NocKind {
 }
 
 /// Construct the configured NoC model (enum-dispatched).
-pub fn build_noc(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> NocKind {
-    NocKind::build(cfg, num_cores, num_channels)
+pub fn build_noc(
+    cfg: &NocConfig,
+    num_cores: usize,
+    num_channels: usize,
+    access_granularity: u64,
+) -> NocKind {
+    NocKind::build(cfg, num_cores, num_channels, access_granularity)
 }
 
 #[cfg(test)]

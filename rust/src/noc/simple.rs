@@ -80,11 +80,16 @@ impl SimpleNoc {
         (MAX_INFLIGHT_PER_CORE - self.inflight_per_core[core]) as u64
     }
 
-    pub fn new(cfg: &NocConfig, num_cores: usize, num_channels: usize) -> Self {
+    pub fn new(
+        cfg: &NocConfig,
+        num_cores: usize,
+        num_channels: usize,
+        access_granularity: u64,
+    ) -> Self {
         SimpleNoc {
             latency: cfg.latency,
             link_bw: cfg.link_bytes_per_cycle,
-            access_granularity: 64,
+            access_granularity,
             core_link_free: vec![0.0; num_cores],
             chan_link_free: vec![0.0; num_channels],
             req_fly: BinaryHeap::new(),
@@ -186,7 +191,7 @@ mod tests {
     use crate::noc::testutil::roundtrip;
 
     fn mk(cores: usize, chans: usize) -> SimpleNoc {
-        SimpleNoc::new(&NocConfig::simple(), cores, chans)
+        SimpleNoc::new(&NocConfig::simple(), cores, chans, 64)
     }
 
     fn req(id: u64, addr: u64, core: usize) -> MemRequest {

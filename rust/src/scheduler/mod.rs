@@ -293,6 +293,16 @@ impl GlobalScheduler {
             .any(|r| r.started_at.is_some() && r.has_ready())
     }
 
+    /// Total dispatchable tiles across live requests (metrics gauge).
+    pub fn ready_tiles_total(&self) -> usize {
+        self.requests[self.done_below..].iter().map(|r| r.ready.len()).sum()
+    }
+
+    /// Total tiles currently executing on cores (metrics gauge).
+    pub fn tiles_in_flight_total(&self) -> usize {
+        self.requests[self.done_below..].iter().map(|r| r.tiles_in_flight).sum()
+    }
+
     /// Earliest future arrival, or NEVER. (The started prefix is already
     /// activated, so skipping it is exact.)
     pub fn next_arrival(&self, now: Cycle) -> Cycle {

@@ -55,6 +55,7 @@ use crate::graph::optimizer::{optimize, OptLevel};
 use crate::models::{self, DecodeGraphCache, PrefillGraphCache};
 use crate::scheduler::{GlobalScheduler, Policy};
 use crate::sim::{Driver, KernelMode, Simulator};
+use crate::telemetry::{GaugeRow, Telemetry, TelemetryConfig, TraceBuf, PID_REQUEST};
 use crate::util::rng::Rng;
 use crate::{Cycle, NEVER};
 use anyhow::Result;
@@ -163,9 +164,9 @@ enum Inflight {
     /// A whole-graph batch: completion closes out every member.
     Batch { tenant: usize, submitted: Cycle, members: Vec<Pending> },
     /// One decode step of a tenant's in-flight pool.
-    DecodeStep { tenant: usize },
+    DecodeStep { tenant: usize, submitted: Cycle },
     /// One prefill chunk of the tenant's oldest prompt-processing stream.
-    PrefillChunk { tenant: usize },
+    PrefillChunk { tenant: usize, submitted: Cycle },
 }
 
 /// Open-loop serving driver (see module docs).
@@ -175,6 +176,12 @@ pub struct ServeDriver {
     duration: Cycle,
     inflight: HashMap<usize, Inflight>,
     injection_done: bool,
+    /// Sim-time trace buffer (tid = tenant), attached by
+    /// [`ServeDriver::set_trace`]. The driver runs on the control plane
+    /// only, so recording here is single-threaded by construction; spans
+    /// are stamped from `submitted`/arrival cycles, which are externally
+    /// visible simulation results — identical across kernel modes.
+    trace: Option<Box<TraceBuf>>,
 }
 
 /// Admit one request into the generative pipeline: streams with a prompt
@@ -258,7 +265,7 @@ fn merge_and_launch(
         dec.steps += 1;
         ts.batches += 1;
         ts.units_submitted += units as u64;
-        inflight.insert(id, Inflight::DecodeStep { tenant: ti });
+        inflight.insert(id, Inflight::DecodeStep { tenant: ti, submitted: now });
     }
     // 4. Launch a prefill chunk for the oldest prompt still processing
     //    (one stream advances per iteration; chunked prefill bounds how
@@ -272,7 +279,7 @@ fn merge_and_launch(
             sched.set_deadline(id, front.p.arrival.saturating_add(ts.slo_cycles));
             dec.prefill_inflight = Some((id, chunk));
             dec.prefill_steps += 1;
-            inflight.insert(id, Inflight::PrefillChunk { tenant: ti });
+            inflight.insert(id, Inflight::PrefillChunk { tenant: ti, submitted: now });
         }
     }
 }
@@ -378,7 +385,20 @@ impl ServeDriver {
             duration: (scfg.duration_ms * core_freq_ghz * 1e6).round() as Cycle,
             inflight: HashMap::new(),
             injection_done: false,
+            trace: None,
         })
+    }
+
+    /// Attach (or detach) a request-lifecycle trace buffer; the run
+    /// harness absorbs it into the [`crate::telemetry::Tracer`] at end of
+    /// run.
+    pub fn set_trace(&mut self, enabled: bool) {
+        self.trace = enabled.then(|| TraceBuf::boxed(PID_REQUEST));
+    }
+
+    /// Detach the trace buffer (empty `None` when tracing was off).
+    pub fn take_trace(&mut self) -> Option<Box<TraceBuf>> {
+        self.trace.take()
     }
 
     /// Build the final report. `total_cycles` comes from the simulator.
@@ -431,6 +451,7 @@ impl ServeDriver {
             core_freq_ghz,
             total_cycles,
             tenants,
+            metrics: None,
         }
     }
 
@@ -457,6 +478,7 @@ impl ServeDriver {
 impl Driver for ServeDriver {
     fn on_tick(&mut self, now: Cycle, sched: &mut GlobalScheduler) {
         let inflight = &mut self.inflight;
+        let trace = &mut self.trace;
         for (ti, ts) in self.tenants.iter_mut().enumerate() {
             // 1. Inject arrivals due now (inside the open-loop window),
             //    stamping each with its sampled prompt/decode lengths.
@@ -468,7 +490,17 @@ impl Driver for ServeDriver {
                 ts.offered += 1;
                 let (prompt, decode) = ts.sample_work();
                 // Rejections are counted inside the batcher.
-                ts.batcher.offer(Pending { arrival: t, size, prompt, decode });
+                let admit = ts.batcher.offer(Pending { arrival: t, size, prompt, decode });
+                if let Some(tr) = trace.as_deref_mut() {
+                    // Stamped at the arrival's own cycle, not the window
+                    // boundary, so the trace is kernel-mode independent.
+                    tr.instant(
+                        "arrive",
+                        t,
+                        ti as u64,
+                        vec![("size", size as u64), ("admit", admit as u64)],
+                    );
+                }
             }
             if ts.decode.is_some() {
                 // 2a. Generative serving: merge + launch at the iteration
@@ -533,8 +565,17 @@ impl Driver for ServeDriver {
                         ts.within_slo += 1;
                     }
                 }
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.span(
+                        "batch",
+                        submitted,
+                        now - submitted,
+                        tenant as u64,
+                        vec![("members", members.len() as u64)],
+                    );
+                }
             }
-            Some(Inflight::DecodeStep { tenant }) => {
+            Some(Inflight::DecodeStep { tenant, submitted }) => {
                 let ts = &mut self.tenants[tenant];
                 let dec = ts.decode.as_mut().expect("decode step for non-generative tenant");
                 debug_assert_eq!(dec.step_inflight, Some(request_id));
@@ -548,9 +589,11 @@ impl Driver for ServeDriver {
                 // now. Prefilled streams stamped TTFT at their final
                 // prefill chunk and are not re-counted.
                 let out = dec.pool.step_done(now);
+                let pool_units = dec.pool.units() as u64;
                 for &arrival in &out.first_tokens {
                     ts.ttft.push(now - arrival);
                 }
+                let retired = out.retired.len() as u64;
                 for s in out.retired {
                     let e2e = now - s.arrival;
                     ts.completed += 1;
@@ -559,9 +602,18 @@ impl Driver for ServeDriver {
                         ts.within_slo += 1;
                     }
                 }
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.span(
+                        "decode_step",
+                        submitted,
+                        now - submitted,
+                        tenant as u64,
+                        vec![("pool_units", pool_units), ("retired", retired)],
+                    );
+                }
                 self.finish_iteration(tenant, now, sched);
             }
-            Some(Inflight::PrefillChunk { tenant }) => {
+            Some(Inflight::PrefillChunk { tenant, submitted }) => {
                 let ts = &mut self.tenants[tenant];
                 let dec = ts.decode.as_mut().expect("prefill chunk for non-generative tenant");
                 let (id, tokens) =
@@ -574,6 +626,15 @@ impl Driver for ServeDriver {
                     // TTFT is the simulated prompt-processing latency.
                     front.finished_at = Some(now);
                     ts.ttft.push(now - front.p.arrival);
+                }
+                if let Some(tr) = self.trace.as_deref_mut() {
+                    tr.span(
+                        "prefill_chunk",
+                        submitted,
+                        now - submitted,
+                        tenant as u64,
+                        vec![("tokens", tokens as u64)],
+                    );
                 }
                 self.finish_iteration(tenant, now, sched);
             }
@@ -619,6 +680,19 @@ impl Driver for ServeDriver {
     fn finished(&self) -> bool {
         self.injection_done && self.inflight.is_empty()
     }
+
+    fn sample_gauges(&self, _now: Cycle, out: &mut GaugeRow) {
+        // Everything read here is control-plane state that both kernel
+        // modes agree on at any visited cycle, so the timeline is
+        // deterministic across kernels and thread counts.
+        for (ti, ts) in self.tenants.iter().enumerate() {
+            out.set(&format!("t{ti}_queued"), ts.batcher.queued_requests() as f64);
+            if let Some(dec) = &ts.decode {
+                out.set(&format!("t{ti}_pool_units"), dec.pool.units() as f64);
+                out.set(&format!("t{ti}_prefill_waiting"), dec.prefill.len() as f64);
+            }
+        }
+    }
 }
 
 /// The serving driver is a first-class component of the event kernel:
@@ -662,6 +736,38 @@ pub fn run_serve_mode(
     let mut sim = Simulator::new(cfg, policy).with_kernel(mode);
     let rep = sim.try_run(&mut driver)?;
     Ok(driver.report(rep.total_cycles, &policy_name, scfg, freq))
+}
+
+/// [`run_serve_mode`] with telemetry attached: returns the SLO report
+/// (with the metrics timeline folded in, when enabled) plus the detached
+/// [`Telemetry`] carrying the tracer and profiler. The driver's
+/// request-lifecycle trace buffer is absorbed into the tracer after the
+/// simulator's own buffers, so the gather order — and therefore the
+/// exported byte stream — is fixed.
+pub fn run_serve_telemetry(
+    cfg: NpuConfig,
+    policy: Box<dyn Policy>,
+    scfg: &ServeConfig,
+    mode: KernelMode,
+    tel_cfg: TelemetryConfig,
+) -> Result<(SloReport, Option<Box<Telemetry>>)> {
+    let policy_name = policy.name().to_string();
+    let freq = cfg.core_freq_ghz;
+    let mut driver = ServeDriver::new(scfg, freq)?;
+    driver.set_trace(tel_cfg.trace);
+    let mut sim = Simulator::new(cfg, policy).with_kernel(mode).with_telemetry(tel_cfg);
+    let rep = sim.try_run(&mut driver)?;
+    let mut tel = sim.take_telemetry();
+    if let Some(t) = tel.as_deref_mut() {
+        if let (Some(tr), Some(buf)) = (t.tracer.as_mut(), driver.take_trace().as_deref_mut()) {
+            tr.absorb(buf);
+        }
+    }
+    let mut report = driver.report(rep.total_cycles, &policy_name, scfg, freq);
+    if let Some(t) = tel.as_deref_mut() {
+        report.metrics = t.metrics.take();
+    }
+    Ok((report, tel))
 }
 
 #[cfg(test)]

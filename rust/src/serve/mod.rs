@@ -28,6 +28,6 @@ pub mod slo;
 pub mod traffic;
 
 pub use batcher::{Batch, Batcher, InflightPool, Pending, StepOutcome, Stream};
-pub use driver::{run_serve, run_serve_mode, ServeDriver};
+pub use driver::{run_serve, run_serve_mode, run_serve_telemetry, ServeDriver};
 pub use slo::{SloReport, Summary, TenantReport};
 pub use traffic::{ArrivalProcess, BatchDist, DecodeLenDist, TrafficGen};

@@ -186,7 +186,7 @@ mod tests {
     fn idle_components_report_never() {
         let cfg = NpuConfig::mobile();
         assert_quiet(&Core::new(0, &cfg), "core");
-        assert_quiet(&build_noc(&cfg.noc, 4, 1), "noc");
+        assert_quiet(&build_noc(&cfg.noc, 4, 1, cfg.dram.access_granularity), "noc");
         assert_quiet(&DramSystem::new(&cfg.dram, 1.0), "dram");
         let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), Box::new(Fcfs::new()));
         assert_quiet(&sched, "scheduler");

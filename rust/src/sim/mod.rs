@@ -13,8 +13,8 @@
 //!   event-horizon skip applied *inside* the window.
 //!
 //! A window ends at the earliest control-plane event (driver trigger,
-//! request arrival, utilization-bucket edge) or the moment a tile
-//! completes — every cycle where the control plane could observe or
+//! request arrival, utilization- or metrics-bucket edge) or the moment a
+//! tile completes — every cycle where the control plane could observe or
 //! influence anything. Between those cycles the control plane is provably
 //! a no-op, so skipping it changes nothing except wall-clock time; the
 //! single-cycle-window [`KernelMode::Reference`] keeps the pre-refactor
@@ -39,8 +39,10 @@ use crate::dram::DramSystem;
 use crate::lowering::LoweringParams;
 use crate::noc::{build_noc, IngressLane, Noc, NocKind};
 use crate::scheduler::{GlobalScheduler, Policy};
+use crate::telemetry::{GaugeRow, Telemetry, TelemetryConfig};
 use crate::{Cycle, NEVER};
 use parallel::WorkerPool;
+use std::time::Instant;
 // NB: `kernel::Component` is deliberately NOT re-imported into this
 // module's scope — `NocKind` implements both `Noc` and `Component`, and
 // having both traits in scope would make every `noc.next_event(..)` call
@@ -84,6 +86,13 @@ pub trait Driver {
     fn finished(&self) -> bool {
         true
     }
+
+    /// Contribute driver-level gauges (queue depths, batch occupancy…) to
+    /// a metrics-timeline sample. Called only on bucket edges, and only
+    /// when a [`crate::telemetry::MetricsTimeline`] is attached; values
+    /// must be pure functions of driver state so the timeline stays
+    /// deterministic across kernel modes and thread counts.
+    fn sample_gauges(&self, _now: Cycle, _out: &mut GaugeRow) {}
 }
 
 /// A no-op driver for static workloads.
@@ -145,15 +154,23 @@ pub struct Simulator {
     /// mean window length; `total_cycles / dense_ticks` shows how well
     /// the event horizon skips idle cycles.
     pub dense_ticks: u64,
+    /// Optional telemetry bundle (tracing / metrics / profiling). `None`
+    /// by default: the hot path pays one predictable branch per pass.
+    telemetry: Option<Box<Telemetry>>,
+    /// Per-channel cumulative-bytes snapshot at the previous metrics
+    /// sample; turns DRAM byte totals into per-bucket bandwidth gauges.
+    last_chan_bytes: Vec<u64>,
 }
 
 impl Simulator {
     pub fn new(cfg: NpuConfig, policy: Box<dyn Policy>) -> Self {
         let cores = (0..cfg.num_cores).map(|i| Core::new(i, &cfg)).collect();
-        let noc = build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels);
+        let noc =
+            build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels, cfg.dram.access_granularity);
         let dram = DramSystem::new(&cfg.dram, cfg.core_freq_ghz);
         let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), policy);
         let n = cfg.num_cores;
+        let channels = cfg.dram.channels;
         let max_cycles = cfg.max_cycles;
         let sim_threads = cfg.sim_threads.max(1);
         let lanes = (0..n).map(|i| noc.lane(i)).collect();
@@ -174,6 +191,8 @@ impl Simulator {
             next_bucket_at: 0,
             iterations: 0,
             dense_ticks: 0,
+            telemetry: None,
+            last_chan_bytes: vec![0; channels],
         }
     }
 
@@ -204,6 +223,32 @@ impl Simulator {
         self
     }
 
+    /// Attach a telemetry bundle (sim-time tracing, timeline metrics,
+    /// kernel self-profiling — see [`crate::telemetry`]). An all-off
+    /// config attaches nothing, keeping the hot path telemetry-free.
+    /// Retrieve the recorded data with [`Simulator::take_telemetry`].
+    pub fn with_telemetry(mut self, cfg: TelemetryConfig) -> Self {
+        self.telemetry = Telemetry::from_config(cfg);
+        if let Some(tel) = self.telemetry.as_deref() {
+            if tel.tracer.is_some() && tel.cfg.trace_mem {
+                self.dram.set_trace(true);
+            }
+        }
+        self
+    }
+
+    /// Detach the telemetry bundle after a run, folding in
+    /// component-owned state (per-channel DRAM trace buffers, end-of-run
+    /// counters). `None` when no telemetry was attached.
+    pub fn take_telemetry(&mut self) -> Option<Box<Telemetry>> {
+        self.finalize_telemetry(None);
+        let mut tel = self.telemetry.take()?;
+        if let Some(tr) = tel.tracer.as_mut() {
+            self.dram.absorb_trace(tr);
+        }
+        Some(tel)
+    }
+
     /// Add a request (thin wrapper over the scheduler).
     pub fn add_request(&mut self, graph: crate::graph::Graph, arrival: Cycle, tenant: usize) -> usize {
         self.sched.add_request(graph, arrival, tenant)
@@ -224,6 +269,7 @@ impl Simulator {
     pub fn try_run(&mut self, driver: &mut dyn Driver) -> anyhow::Result<SimReport> {
         let mut finished_tiles = Vec::new();
         let mut completed_reqs = Vec::new();
+        let profiling = self.telemetry.as_deref().is_some_and(|t| t.prof.is_some());
         // The data-plane worker pool lives for the whole run (persistent
         // threads; per-phase broadcasts are two atomics, not spawns).
         let mut pool = (self.sim_threads > 1).then(|| WorkerPool::new(self.sim_threads - 1));
@@ -233,6 +279,7 @@ impl Simulator {
                 return Err(self.stuck_error(now, driver));
             }
             self.iterations += 1;
+            let pass_t0 = profiling.then(Instant::now);
 
             // Control plane at `now`:
             // 0. Time-triggered driver work (open-loop arrival injection,
@@ -245,10 +292,22 @@ impl Simulator {
             //    slack-rich requests so urgent work lands this cycle.
             self.sched.activate_arrivals(now);
             let revoked = self.sched.preempt(&mut self.cores, now);
+            if revoked > 0 {
+                if let Some(tr) = self.telemetry.as_deref_mut().and_then(|t| t.tracer.as_mut()) {
+                    tr.revoke(now, revoked as u64);
+                }
+            }
             for c in 0..self.cores.len() {
                 while self.cores[c].wants_tile() {
                     match self.sched.pick_tile(c, now) {
-                        Some(tile) => self.cores[c].start_tile(tile),
+                        Some(tile) => {
+                            if let Some(tr) =
+                                self.telemetry.as_deref_mut().and_then(|t| t.tracer.as_mut())
+                            {
+                                tr.dispatch(now, c, tile.job);
+                            }
+                            self.cores[c].start_tile(tile);
+                        }
                         None => break,
                     }
                 }
@@ -285,6 +344,14 @@ impl Simulator {
                             // sampling stays pinned to exact boundaries.
                             u = u.min(self.next_bucket_at);
                         }
+                        if let Some(m) =
+                            self.telemetry.as_deref().and_then(|t| t.metrics.as_ref())
+                        {
+                            // Same discipline for the metrics timeline, so
+                            // both kernel modes sample gauges at identical
+                            // cycles with identical component state.
+                            u = u.min(m.next_at());
+                        }
                         u.max(now + 1)
                     }
                 }
@@ -297,7 +364,9 @@ impl Simulator {
 
             // 3. Dense data-plane advance over [now, until); stops early
             //    the cycle a tile completes.
+            let dp_t0 = profiling.then(Instant::now);
             let stop = self.advance_dataplane(now, until, pool.as_mut());
+            let dp_t1 = profiling.then(Instant::now);
 
             // 4. Tile completions -> scheduler; request completions ->
             //    driver. Only completions *visible* at `stop` are drained:
@@ -310,6 +379,11 @@ impl Simulator {
                         core.take_finished(&mut finished_tiles);
                     }
                 }
+                if let Some(tr) = self.telemetry.as_deref_mut().and_then(|t| t.tracer.as_mut()) {
+                    for job in &finished_tiles {
+                        tr.tile_done(stop, *job);
+                    }
+                }
                 for job in &finished_tiles {
                     self.sched.on_tile_done(*job, stop);
                 }
@@ -317,12 +391,24 @@ impl Simulator {
             completed_reqs.clear();
             self.sched.take_completed(&mut completed_reqs);
             for &rid in &completed_reqs {
+                if let Some(tr) = self.telemetry.as_deref_mut().and_then(|t| t.tracer.as_mut()) {
+                    tr.request_done(rid, self.sched.requests[rid].arrival, stop);
+                }
                 driver.on_request_done(rid, stop, &mut self.sched);
             }
 
             // 5. Utilization timeline sampling (all buckets elapsed by
-            //    `stop`, interpolated across event-horizon jumps).
+            //    `stop`, interpolated across event-horizon jumps), then
+            //    the metrics timeline under the same edge discipline.
             self.sample_util(stop);
+            self.sample_metrics(stop, driver);
+            if let (Some(p0), Some(d0), Some(d1)) = (pass_t0, dp_t0, dp_t1) {
+                let tail = d1.elapsed();
+                if let Some(p) = self.telemetry.as_deref_mut().and_then(|t| t.prof.as_mut()) {
+                    p.dataplane_ns += (d1 - d0).as_nanos() as u64;
+                    p.control_ns += ((d0 - p0) + tail).as_nanos() as u64;
+                }
+            }
 
             // 6. Termination / clock advance.
             if self.sched.all_done() && driver.finished() && self.quiescent() {
@@ -331,7 +417,66 @@ impl Simulator {
             }
             self.clock = self.next_cycle(stop, driver.next_event(stop));
         }
+        self.finalize_telemetry(pool.as_ref());
         Ok(self.report())
+    }
+
+    /// Fold end-of-run kernel accounting into the telemetry bundle:
+    /// profiler totals (windows, dense ticks, pool occupancy) and the
+    /// metrics `counters` section. Counters are thread-deterministic but
+    /// legitimately differ across kernel modes (they describe the
+    /// kernel's own work, not the simulated machine), which is why they
+    /// live outside the cross-kernel-compared trace bytes.
+    fn finalize_telemetry(&mut self, pool: Option<&WorkerPool>) {
+        let Some(tel) = self.telemetry.as_deref_mut() else { return };
+        if let Some(p) = tel.prof.as_mut() {
+            p.windows = self.iterations;
+            p.dense_ticks = self.dense_ticks;
+            if let Some(pool) = pool {
+                let (spins, parks) = pool.occupancy();
+                p.pool_spins = spins;
+                p.pool_parks = parks;
+            }
+        }
+        if let Some(m) = tel.metrics.as_mut() {
+            m.set_counter("dram_next_event_recomputes", self.dram.next_event_recomputes());
+            m.set_counter(
+                "core_next_event_recomputes",
+                self.cores.iter().map(|c| c.next_event_recomputes()).sum::<u64>(),
+            );
+            m.set_counter("control_passes", self.iterations);
+            m.set_counter("dense_ticks", self.dense_ticks);
+        }
+    }
+
+    /// Sample the metrics gauges if `stop` reached a bucket edge. The
+    /// window clamp in `try_run` guarantees both kernel modes arrive
+    /// here at the same cycles with the same component state, so the
+    /// timeline is kernel- and thread-deterministic.
+    fn sample_metrics(&mut self, now: Cycle, driver: &mut dyn Driver) {
+        let due = self
+            .telemetry
+            .as_deref()
+            .and_then(|t| t.metrics.as_ref())
+            .is_some_and(|m| m.due(now));
+        if !due {
+            return;
+        }
+        let mut row = GaugeRow::default();
+        row.set("ready_tiles", self.sched.ready_tiles_total() as f64);
+        row.set("tiles_in_flight", self.sched.tiles_in_flight_total() as f64);
+        for (i, core) in self.cores.iter().enumerate() {
+            row.set(&format!("core{i}_dma_inflight"), core.dma_inflight() as f64);
+        }
+        for (ch, last) in self.last_chan_bytes.iter_mut().enumerate() {
+            let total = self.dram.channel_bytes(ch);
+            row.set(&format!("chan{ch}_bytes"), (total - *last) as f64);
+            *last = total;
+        }
+        driver.sample_gauges(now, &mut row);
+        if let Some(m) = self.telemetry.as_deref_mut().and_then(|t| t.metrics.as_mut()) {
+            m.sample(now, &row);
+        }
     }
 
     /// Minimum due cores / busy DRAM channel shards before a dense-cycle
@@ -374,13 +519,21 @@ impl Simulator {
         mut pool: Option<&mut WorkerPool>,
     ) -> Cycle {
         debug_assert!(until > start);
+        // Self-profiling accumulates into locals and flushes once at the
+        // window end; with profiling off the dense loop carries only
+        // always-false branches on a local bool.
+        let profiling = self.telemetry.as_deref().is_some_and(|tel| tel.prof.is_some());
+        let mut prof_core_ticks = 0u64;
+        let mut prof_noc_ticks = 0u64;
+        let mut prof_dram_ticks = 0u64;
+        let mut prof_merge_ns = 0u64;
         let mut t = start;
         // The control plane may have touched anything at the boundary:
         // the window's first cycle ticks every component.
         let mut all_due = true;
         let mut noc_next = 0;
         let mut dram_next = 0;
-        loop {
+        let stop = loop {
             self.dense_ticks += 1;
             let Simulator { cores, noc, dram, lanes, .. } = &mut *self;
             let mut core_ticked = false;
@@ -404,6 +557,7 @@ impl Simulator {
                     });
                     // Deterministic merge: replay accepted requests into
                     // the NoC in core order = the serial injection order.
+                    let merge_t0 = profiling.then(Instant::now);
                     for lane in lanes.iter_mut() {
                         if !lane.ticked {
                             continue;
@@ -418,6 +572,9 @@ impl Simulator {
                             // rather than silently dropping traffic.
                             assert!(ok, "ingress-lane admission diverged from the NoC");
                         }
+                    }
+                    if let Some(m0) = merge_t0 {
+                        prof_merge_ns += m0.elapsed().as_nanos() as u64;
                     }
                 }
                 _ => {
@@ -444,21 +601,32 @@ impl Simulator {
                 noc_ticked = true;
             }
             if all_due || noc_ticked || dram_next <= t {
+                if profiling {
+                    prof_dram_ticks += 1;
+                }
                 match pool.as_deref_mut() {
                     Some(pool) if dram.busy_channels() >= Self::MIN_PAR_CHANNELS => {
                         // Shards tick concurrently; completions merge into
                         // the response network in channel order.
                         dram.par_tick(t, pool);
+                        let merge_t0 = profiling.then(Instant::now);
                         dram.drain_stage(t, noc);
+                        if let Some(m0) = merge_t0 {
+                            prof_merge_ns += m0.elapsed().as_nanos() as u64;
+                        }
                     }
                     // DRAM completions enter the response network directly.
                     _ => dram.tick(t, noc),
                 }
             }
+            if profiling {
+                prof_core_ticks += due as u64;
+                prof_noc_ticks += noc_ticked as u64;
+            }
             // A visible tile completion ends the window: the scheduler
             // must see it this cycle.
             if self.cores.iter().any(|c| c.finished_ready(t)) {
-                return t;
+                break t;
             }
             // Event-horizon skip within the window.
             let mut next = NEVER;
@@ -469,11 +637,20 @@ impl Simulator {
             dram_next = self.dram.cached_next_event(t);
             next = next.min(noc_next).min(dram_next);
             if next >= until {
-                return t;
+                break t;
             }
             t = next;
             all_due = false;
+        };
+        if profiling {
+            if let Some(p) = self.telemetry.as_deref_mut().and_then(|tel| tel.prof.as_mut()) {
+                p.core_ticks += prof_core_ticks;
+                p.noc_ticks += prof_noc_ticks;
+                p.dram_ticks += prof_dram_ticks;
+                p.merge_ns += prof_merge_ns;
+            }
         }
+        stop
     }
 
     fn quiescent(&self) -> bool {
@@ -936,6 +1113,59 @@ mod tests {
             sim.add_request(matmul_graph("b", 256, 128, 64), 2_000, 1);
             sim
         });
+    }
+
+    #[test]
+    fn telemetry_absent_by_default() {
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()));
+        sim.add_request(matmul_graph("m", 64, 64, 64), 0, 0);
+        sim.run(&mut NoDriver);
+        assert!(sim.take_telemetry().is_none());
+    }
+
+    #[test]
+    fn telemetry_traces_tile_and_request_lifecycle() {
+        use crate::telemetry::TelemetryConfig;
+        let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new())).with_telemetry(
+            TelemetryConfig { trace: true, metrics_bucket: 1_000, profile: true, ..Default::default() },
+        );
+        sim.add_request(matmul_graph("m", 128, 128, 128), 0, 0);
+        sim.run(&mut NoDriver);
+        let mut tel = sim.take_telemetry().expect("telemetry attached");
+        let tr = tel.tracer.as_mut().unwrap();
+        assert!(tr.event_count() > 0, "no trace events recorded");
+        let j = tr.export();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let has = |n: &str| evs.iter().any(|e| e.get("name").unwrap().as_str().unwrap() == n);
+        assert!(has("dispatch") && has("tile") && has("request"));
+        let m = tel.metrics.as_ref().unwrap();
+        assert!(m.rows() > 0, "no metrics rows sampled");
+        assert!(m.counter("dense_ticks").unwrap() > 0);
+        let p = tel.prof.as_ref().unwrap();
+        assert!(p.windows > 0 && p.core_ticks > 0);
+    }
+
+    /// The metrics timeline (cycles + series; counters are exempt by
+    /// design) must be identical across kernel modes and thread counts —
+    /// the window clamp to bucket edges is what guarantees it.
+    #[test]
+    fn metrics_timeline_agrees_across_kernels_and_threads() {
+        use crate::telemetry::TelemetryConfig;
+        let run = |mode: KernelMode, threads: usize| {
+            let mut sim = Simulator::new(NpuConfig::mobile(), Box::new(Fcfs::new()))
+                .with_kernel(mode)
+                .with_sim_threads(threads)
+                .with_telemetry(TelemetryConfig { metrics_bucket: 500, ..Default::default() });
+            sim.add_request(matmul_graph("a", 128, 256, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 64, 64, 64), 20_000, 0);
+            sim.run(&mut NoDriver);
+            let tel = sim.take_telemetry().unwrap();
+            let j = tel.metrics.as_ref().unwrap().to_json();
+            format!("{}|{}", j.req("cycles").unwrap().pretty(), j.req("series").unwrap().pretty())
+        };
+        let golden = run(KernelMode::Windowed, 1);
+        assert_eq!(golden, run(KernelMode::Reference, 1), "kernel modes diverged");
+        assert_eq!(golden, run(KernelMode::Windowed, 4), "thread counts diverged");
     }
 
     #[test]

@@ -50,6 +50,12 @@ struct Shared {
     /// First worker panic of the current broadcast (re-raised by main).
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     stop: AtomicBool,
+    /// Cumulative wait-loop spin iterations across all workers (kernel
+    /// self-profiling; flushed once per observed broadcast, so the hot
+    /// spin loop itself stays free of shared-cache traffic).
+    spins: AtomicU64,
+    /// Cumulative park events across all workers (ditto).
+    parks: AtomicU64,
 }
 
 /// A persistent pool of `workers` OS threads plus the calling thread.
@@ -71,6 +77,8 @@ impl WorkerPool {
             task: Mutex::new(None),
             panic: Mutex::new(None),
             stop: AtomicBool::new(false),
+            spins: AtomicU64::new(0),
+            parks: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -87,6 +95,15 @@ impl WorkerPool {
     /// Total parts per broadcast (the caller plus every worker).
     pub fn parts(&self) -> usize {
         self.handles.len() + 1
+    }
+
+    /// Cumulative (wait-loop spins, park events) across all workers since
+    /// pool creation — the kernel profiler's occupancy signal: high spins
+    /// with few parks means broadcasts arrive back-to-back (workers busy
+    /// or hot-waiting); high parks means the pool mostly sits idle across
+    /// control-plane gaps.
+    pub fn occupancy(&self) -> (u64, u64) {
+        (self.shared.spins.load(Ordering::Relaxed), self.shared.parks.load(Ordering::Relaxed))
     }
 
     /// Run `f(part)` once for every part in `0..self.parts()`, caller
@@ -221,6 +238,7 @@ fn worker_loop(shared: &Shared, part: usize) {
     let mut seen = 0u64;
     loop {
         let mut spins = 0u32;
+        let mut parks = 0u64;
         loop {
             let e = shared.epoch.load(Ordering::Acquire);
             if e != seen {
@@ -233,8 +251,18 @@ fn worker_loop(shared: &Shared, part: usize) {
             } else {
                 // Parked workers are woken by the next publish (or stop);
                 // the timeout is a belt-and-braces fallback.
+                parks += 1;
                 std::thread::park_timeout(std::time::Duration::from_millis(1));
             }
+        }
+        // Flush wait accounting once per observed broadcast: the loop
+        // above touches only local state, the shared counters see two
+        // uncontended adds per publish per worker.
+        if spins > 0 {
+            shared.spins.fetch_add(spins as u64, Ordering::Relaxed);
+        }
+        if parks > 0 {
+            shared.parks.fetch_add(parks, Ordering::Relaxed);
         }
         if shared.stop.load(Ordering::Acquire) {
             return;

@@ -5,6 +5,7 @@
 use super::Simulator;
 use crate::core::CoreStats;
 use crate::dram::ChannelStats;
+use crate::telemetry::MetricsTimeline;
 
 /// Final report of one simulation.
 #[derive(Debug, Clone)]
@@ -21,6 +22,11 @@ pub struct SimReport {
     pub mean_core_util: f64,
     /// Mean DRAM bandwidth utilization over the run, in [0,1].
     pub mean_dram_util: f64,
+    /// Bucket-edge metrics timeline, when telemetry was attached with a
+    /// metrics bucket (`--metrics-bucket`). Populated by the run harness
+    /// via [`Simulator::take_telemetry`], not by `collect` — the
+    /// simulator keeps ownership of live telemetry until detached.
+    pub metrics: Option<MetricsTimeline>,
 }
 
 impl SimReport {
@@ -51,6 +57,7 @@ impl SimReport {
             dram_bytes,
             mean_core_util,
             mean_dram_util,
+            metrics: None,
         }
     }
 

@@ -1,0 +1,562 @@
+//! Deterministic telemetry: sim-time tracing, timeline metrics, and
+//! kernel self-profiling.
+//!
+//! Three independent layers, all `None`-by-default so the hot path pays
+//! only a branch on a niche-optimized `Option<Box<Telemetry>>`:
+//!
+//! - [`Tracer`] — spans and instants stamped in *simulated cycles*
+//!   (request lifecycle, tile lifecycle, scheduler events, DRAM service).
+//!   Events are buffered per component ([`TraceBuf`]) so parallel data-plane
+//!   phases stay race-free, then gathered and canonically sorted by
+//!   `(ts, pid, tid, seq)` at export. Because every per-component event
+//!   sequence is identical across kernel modes and `--sim-threads` (the
+//!   repo's determinism invariant), the exported Chrome trace-event JSON is
+//!   byte-identical too.
+//! - [`MetricsTimeline`] — counters and gauges sampled on bucket edges
+//!   that the event kernel never straddles (windows are clamped to the
+//!   next edge), appended to `SimReport`/`SloReport` JSON. The end-of-run
+//!   `counters` section is thread-deterministic but *not* kernel-mode
+//!   deterministic (e.g. `next_event` recompute counts differ by design
+//!   between the windowed and reference kernels).
+//! - [`Profiler`] — wall-clock phase timers and tick totals for the kernel
+//!   itself (`--profile`). Wall-clock never feeds back into simulated
+//!   results; it only appears in `PROFILE_kernel.json`.
+//!
+//! Trace timestamps are raw cycles interpreted as microseconds by trace
+//! viewers: at the default 1 GHz core clock, 1 cycle renders as 1 µs in
+//! Perfetto, so displayed times are nanoseconds-as-microseconds.
+
+use crate::lowering::JobRef;
+use crate::util::json::Json;
+use crate::Cycle;
+use std::collections::HashMap;
+
+/// Process id for request-lifecycle events (tid = request or tenant).
+pub const PID_REQUEST: u32 = 1;
+/// Process id for per-core tile execution spans (tid = core).
+pub const PID_CORE: u32 = 2;
+/// Process id for DRAM service spans (tid = channel).
+pub const PID_DRAM: u32 = 3;
+/// Process id for kernel/scheduler events (tid = core).
+pub const PID_KERNEL: u32 = 4;
+
+/// What to record. All-off means [`Telemetry::from_config`] returns `None`
+/// and the simulator carries no telemetry state at all.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    /// Record sim-time trace events (request/tile/scheduler lifecycle).
+    pub trace: bool,
+    /// Also record one span per serviced DRAM request (large!).
+    pub trace_mem: bool,
+    /// Sample gauges every N cycles into a [`MetricsTimeline`] (0 = off).
+    pub metrics_bucket: u64,
+    /// Collect wall-clock kernel phase timings into a [`Profiler`].
+    pub profile: bool,
+}
+
+impl TelemetryConfig {
+    pub fn enabled(&self) -> bool {
+        self.trace || self.metrics_bucket > 0 || self.profile
+    }
+}
+
+/// One trace event: an instant (`span == false`) or a complete span.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub span: bool,
+    /// Start (spans) or occurrence (instants) time in simulated cycles.
+    pub ts: Cycle,
+    /// Span duration in cycles; 0 for instants.
+    pub dur: Cycle,
+    pub pid: u32,
+    pub tid: u64,
+    /// Record order within the owning [`TraceBuf`]; tie-breaks the sort.
+    pub seq: u64,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+/// A per-component event buffer. Each component writes only its own buffer,
+/// so recording needs no synchronization even inside parallel phases.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuf {
+    pid: u32,
+    seq: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    pub fn new(pid: u32) -> TraceBuf {
+        TraceBuf { pid, seq: 0, events: Vec::new() }
+    }
+
+    /// Boxed constructor for the `Option<Box<TraceBuf>>` component fields.
+    pub fn boxed(pid: u32) -> Box<TraceBuf> {
+        Box::new(TraceBuf::new(pid))
+    }
+
+    pub fn instant(&mut self, name: &'static str, ts: Cycle, tid: u64, args: Vec<(&'static str, u64)>) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(TraceEvent { name, span: false, ts, dur: 0, pid: self.pid, tid, seq, args });
+    }
+
+    pub fn span(&mut self, name: &'static str, ts: Cycle, dur: Cycle, tid: u64, args: Vec<(&'static str, u64)>) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(TraceEvent { name, span: true, ts, dur, pid: self.pid, tid, seq, args });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<TraceEvent>) {
+        out.append(&mut self.events);
+    }
+}
+
+/// The sim-time tracer: central buffers for kernel-recorded events plus a
+/// gather point for component-owned [`TraceBuf`]s.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    /// Propagated to components so they can decide to record DRAM spans.
+    pub trace_mem: bool,
+    kernel: TraceBuf,
+    cores: TraceBuf,
+    requests: TraceBuf,
+    /// Dispatch stamp per in-flight tile: job -> (dispatch cycle, core).
+    pending_tiles: HashMap<JobRef, (Cycle, u64)>,
+    gathered: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    pub fn new(trace_mem: bool) -> Tracer {
+        Tracer {
+            trace_mem,
+            kernel: TraceBuf::new(PID_KERNEL),
+            cores: TraceBuf::new(PID_CORE),
+            requests: TraceBuf::new(PID_REQUEST),
+            pending_tiles: HashMap::new(),
+            gathered: Vec::new(),
+        }
+    }
+
+    /// A tile was dispatched to `core`. Re-dispatch after a preemption
+    /// revocation overwrites the stamp, so the eventual span covers the
+    /// run that actually completed.
+    pub fn dispatch(&mut self, now: Cycle, core: usize, job: JobRef) {
+        self.kernel.instant(
+            "dispatch",
+            now,
+            core as u64,
+            vec![
+                ("req", job.request_id as u64),
+                ("node", job.node_id as u64),
+                ("tile", job.tile_idx as u64),
+            ],
+        );
+        self.pending_tiles.insert(job, (now, core as u64));
+    }
+
+    /// A preemption pass revoked `count` in-flight tiles.
+    pub fn revoke(&mut self, now: Cycle, count: u64) {
+        self.kernel.instant("revoke", now, 0, vec![("tiles", count)]);
+    }
+
+    /// A tile completed; closes the span opened by [`Self::dispatch`].
+    pub fn tile_done(&mut self, stop: Cycle, job: JobRef) {
+        if let Some((ts, core)) = self.pending_tiles.remove(&job) {
+            self.cores.span(
+                "tile",
+                ts,
+                stop - ts,
+                core,
+                vec![
+                    ("req", job.request_id as u64),
+                    ("node", job.node_id as u64),
+                    ("tile", job.tile_idx as u64),
+                ],
+            );
+        }
+    }
+
+    /// A request retired; records its whole-lifetime span (arrival →
+    /// completion). Covers driverless sims too.
+    pub fn request_done(&mut self, rid: usize, arrival: Cycle, done: Cycle) {
+        self.requests.span("request", arrival, done - arrival, rid as u64, vec![("req", rid as u64)]);
+    }
+
+    /// Fold a component-owned buffer into the gather pool. Call once per
+    /// buffer at end of run, in a fixed order — the order is part of the
+    /// deterministic tie-break for identically-keyed events.
+    pub fn absorb(&mut self, buf: &mut TraceBuf) {
+        buf.drain_into(&mut self.gathered);
+    }
+
+    fn sorted_events(&mut self) -> Vec<TraceEvent> {
+        let mut evs = Vec::new();
+        self.kernel.drain_into(&mut evs);
+        self.cores.drain_into(&mut evs);
+        self.requests.drain_into(&mut evs);
+        evs.append(&mut self.gathered);
+        // Stable sort on the canonical key: per-buffer sequences are
+        // deterministic, and so is the gather order above, so the total
+        // order is reproducible across kernels and thread counts.
+        evs.sort_by_key(|e| (e.ts, e.pid, e.tid, e.seq));
+        evs
+    }
+
+    /// Export everything recorded so far as Chrome trace-event JSON
+    /// (`chrome://tracing` / Perfetto loadable). Drains the buffers.
+    pub fn export(&mut self) -> Json {
+        let mut items: Vec<Json> = Vec::new();
+        for (pid, name) in [
+            (PID_REQUEST, "requests"),
+            (PID_CORE, "cores"),
+            (PID_DRAM, "dram"),
+            (PID_KERNEL, "kernel"),
+        ] {
+            items.push(Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        for e in self.sorted_events() {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("name", Json::str(e.name)),
+                ("ph", Json::str(if e.span { "X" } else { "i" })),
+                ("ts", Json::Num(e.ts as f64)),
+            ];
+            if e.span {
+                pairs.push(("dur", Json::Num(e.dur as f64)));
+            } else {
+                pairs.push(("s", Json::str("t")));
+            }
+            pairs.push(("pid", Json::Num(e.pid as f64)));
+            pairs.push(("tid", Json::Num(e.tid as f64)));
+            if !e.args.is_empty() {
+                pairs.push((
+                    "args",
+                    Json::obj(e.args.iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect()),
+                ));
+            }
+            items.push(Json::obj(pairs));
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(items)), ("displayTimeUnit", Json::str("ms"))])
+    }
+
+    /// Total events currently buffered (central + gathered).
+    pub fn event_count(&self) -> usize {
+        self.kernel.len() + self.cores.len() + self.requests.len() + self.gathered.len()
+    }
+}
+
+/// One sample row of named gauge values, rebuilt at every bucket edge.
+#[derive(Debug, Clone, Default)]
+pub struct GaugeRow {
+    vals: Vec<(String, f64)>,
+}
+
+impl GaugeRow {
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.vals.push((name.to_string(), v));
+    }
+}
+
+/// Gauges sampled on fixed bucket edges plus end-of-run counters.
+///
+/// The sampling discipline mirrors the utilization timeline: the kernel
+/// clamps window ends to the next bucket edge, so both kernel modes sample
+/// at exactly the same cycles with exactly the same component state. When
+/// a run ends short of the next edge no partial row is emitted.
+#[derive(Debug, Clone)]
+pub struct MetricsTimeline {
+    bucket: u64,
+    next_at: Cycle,
+    cycles: Vec<Cycle>,
+    series: Vec<(String, Vec<f64>)>,
+    counters: Vec<(String, u64)>,
+}
+
+impl MetricsTimeline {
+    pub fn new(bucket: u64) -> MetricsTimeline {
+        assert!(bucket > 0, "metrics bucket must be positive");
+        MetricsTimeline { bucket, next_at: bucket, cycles: Vec::new(), series: Vec::new(), counters: Vec::new() }
+    }
+
+    pub fn bucket(&self) -> u64 {
+        self.bucket
+    }
+
+    /// The next bucket edge; the kernel clamps window ends to this.
+    pub fn next_at(&self) -> Cycle {
+        self.next_at
+    }
+
+    /// True when `now` has reached the next bucket edge. Guards row
+    /// construction so gauges are only gathered when a sample will land.
+    pub fn due(&self, now: Cycle) -> bool {
+        now >= self.next_at
+    }
+
+    /// Record `row` for every bucket edge in `(last, now]`. Multi-edge
+    /// jumps (possible only across idle stretches, where gauges are
+    /// frozen) replicate the row, matching the utilization timeline's
+    /// interpolation.
+    pub fn sample(&mut self, now: Cycle, row: &GaugeRow) {
+        if now < self.next_at {
+            return;
+        }
+        let k = (now - self.next_at) / self.bucket + 1;
+        for i in 0..k {
+            self.cycles.push(self.next_at + i * self.bucket);
+            self.push_row(row);
+        }
+        self.next_at += k * self.bucket;
+    }
+
+    fn push_row(&mut self, row: &GaugeRow) {
+        let target = self.cycles.len();
+        for (name, v) in &row.vals {
+            let idx = match self.series.iter().position(|(k, _)| k == name) {
+                Some(i) => i,
+                None => {
+                    self.series.push((name.clone(), Vec::new()));
+                    self.series.len() - 1
+                }
+            };
+            let series = &mut self.series[idx].1;
+            // Backfill a series that first appears mid-run.
+            while series.len() + 1 < target {
+                series.push(0.0);
+            }
+            series.push(*v);
+        }
+    }
+
+    /// Set (or overwrite) an end-of-run counter. Counters are
+    /// thread-deterministic but may legitimately differ across kernel
+    /// modes (they describe the kernel's own work, not the simulation).
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        match self.counters.iter().position(|(k, _)| k == name) {
+            Some(i) => self.counters[i].1 = v,
+            None => self.counters.push((name.to_string(), v)),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cycles.len()
+    }
+
+    pub fn series_names(&self) -> Vec<&str> {
+        self.series.iter().map(|(k, _)| k.as_str()).collect()
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bucket", Json::Num(self.bucket as f64)),
+            ("cycles", Json::Arr(self.cycles.iter().map(|&c| Json::Num(c as f64)).collect())),
+            (
+                "series",
+                Json::Obj(
+                    self.series
+                        .iter()
+                        .map(|(k, s)| {
+                            (k.clone(), Json::Arr(s.iter().map(|&x| Json::Num(x)).collect()))
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "counters",
+                Json::Obj(self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect()),
+            ),
+        ])
+    }
+}
+
+/// Wall-clock self-profile of one kernel run (`--profile`). Nanosecond
+/// totals come from `std::time::Instant` stopwatches around the kernel's
+/// phases; they never influence simulated time.
+#[derive(Debug, Clone, Default)]
+pub struct Profiler {
+    /// Control plane: dispatch, scheduling, drains, window accounting.
+    pub control_ns: u64,
+    /// Dense data plane: `advance_dataplane` in total.
+    pub dataplane_ns: u64,
+    /// Deterministic merge work inside the parallel data plane
+    /// (ingress-lane replay + DRAM stage drain).
+    pub merge_ns: u64,
+    /// Kernel iterations (windows executed).
+    pub windows: u64,
+    /// Cycles on which at least one component ticked.
+    pub dense_ticks: u64,
+    pub core_ticks: u64,
+    pub noc_ticks: u64,
+    pub dram_ticks: u64,
+    /// `WorkerPool` wait-loop occupancy: spin iterations and park events.
+    pub pool_spins: u64,
+    pub pool_parks: u64,
+}
+
+impl Profiler {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("onnxim-profile-v1")),
+            ("control_ns", Json::Num(self.control_ns as f64)),
+            ("dataplane_ns", Json::Num(self.dataplane_ns as f64)),
+            ("merge_ns", Json::Num(self.merge_ns as f64)),
+            ("windows", Json::Num(self.windows as f64)),
+            ("dense_ticks", Json::Num(self.dense_ticks as f64)),
+            ("core_ticks", Json::Num(self.core_ticks as f64)),
+            ("noc_ticks", Json::Num(self.noc_ticks as f64)),
+            ("dram_ticks", Json::Num(self.dram_ticks as f64)),
+            ("pool_spins", Json::Num(self.pool_spins as f64)),
+            ("pool_parks", Json::Num(self.pool_parks as f64)),
+        ])
+    }
+}
+
+/// The telemetry bundle a simulator optionally carries. Boxed so the
+/// simulator field is a niche-optimized nullable pointer: disabled
+/// telemetry costs the hot path one predictable branch.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub cfg: TelemetryConfig,
+    pub tracer: Option<Tracer>,
+    pub metrics: Option<MetricsTimeline>,
+    pub prof: Option<Profiler>,
+}
+
+impl Telemetry {
+    /// Build the bundle, or `None` when every layer is off.
+    pub fn from_config(cfg: TelemetryConfig) -> Option<Box<Telemetry>> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(Box::new(Telemetry {
+            tracer: cfg.trace.then(|| Tracer::new(cfg.trace_mem)),
+            metrics: (cfg.metrics_bucket > 0).then(|| MetricsTimeline::new(cfg.metrics_bucket)),
+            prof: cfg.profile.then(Profiler::default),
+            cfg,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(r: usize, n: usize, t: usize) -> JobRef {
+        JobRef { request_id: r, node_id: n, tile_idx: t }
+    }
+
+    #[test]
+    fn disabled_config_builds_no_telemetry() {
+        assert!(Telemetry::from_config(TelemetryConfig::default()).is_none());
+        let t = Telemetry::from_config(TelemetryConfig { trace: true, ..Default::default() }).unwrap();
+        assert!(t.tracer.is_some());
+        assert!(t.metrics.is_none());
+        assert!(t.prof.is_none());
+    }
+
+    #[test]
+    fn tracer_spans_pair_dispatch_with_completion() {
+        let mut tr = Tracer::new(false);
+        tr.dispatch(10, 1, job(0, 2, 3));
+        tr.tile_done(25, job(0, 2, 3));
+        // Unknown jobs are ignored (e.g. revoked without re-dispatch).
+        tr.tile_done(30, job(9, 9, 9));
+        let evs = tr.sorted_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "dispatch");
+        let tile = &evs[1];
+        assert_eq!((tile.name, tile.ts, tile.dur, tile.pid, tile.tid), ("tile", 10, 15, PID_CORE, 1));
+    }
+
+    #[test]
+    fn export_sorts_canonically_regardless_of_record_order() {
+        let mut tr = Tracer::new(false);
+        let mut late = TraceBuf::new(PID_DRAM);
+        late.span("mem", 5, 3, 0, vec![]);
+        tr.dispatch(5, 0, job(0, 0, 0));
+        tr.revoke(2, 1);
+        tr.absorb(&mut late);
+        let evs = tr.sorted_events();
+        let keys: Vec<(Cycle, u32)> = evs.iter().map(|e| (e.ts, e.pid)).collect();
+        // ts=2 first, then at ts=5 dram(3) before kernel(4).
+        assert_eq!(keys, vec![(2, PID_KERNEL), (5, PID_DRAM), (5, PID_KERNEL)]);
+    }
+
+    #[test]
+    fn export_emits_chrome_trace_shape() {
+        let mut tr = Tracer::new(false);
+        tr.dispatch(1, 0, job(0, 0, 0));
+        tr.tile_done(4, job(0, 0, 0));
+        let j = tr.export();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 process_name metadata records + 2 events.
+        assert_eq!(evs.len(), 6);
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "M");
+        let tile = evs.iter().find(|e| e.get("name").unwrap().as_str().unwrap() == "tile").unwrap();
+        assert_eq!(tile.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(tile.get("dur").unwrap().as_u64().unwrap(), 3);
+        // Export drains: a second export carries only metadata.
+        assert_eq!(tr.export().get("traceEvents").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn metrics_sample_on_edges_with_interpolated_jumps() {
+        let mut m = MetricsTimeline::new(100);
+        let mut row = GaugeRow::default();
+        row.set("q", 2.0);
+        m.sample(50, &row); // before the first edge: no row
+        assert_eq!(m.rows(), 0);
+        m.sample(100, &row);
+        assert_eq!(m.rows(), 1);
+        // Jump across three edges at once: rows for 200, 300, 400.
+        let mut row2 = GaugeRow::default();
+        row2.set("q", 7.0);
+        m.sample(410, &row2);
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.next_at(), 500);
+        let j = m.to_json();
+        let cycles = j.get("cycles").unwrap().as_arr().unwrap();
+        let got: Vec<u64> = cycles.iter().map(|c| c.as_u64().unwrap()).collect();
+        assert_eq!(got, vec![100, 200, 300, 400]);
+        let q = j.get("series").unwrap().get("q").unwrap().as_arr().unwrap();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q[3].as_f64().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn metrics_counters_overwrite_and_export() {
+        let mut m = MetricsTimeline::new(10);
+        m.set_counter("recomputes", 5);
+        m.set_counter("recomputes", 9);
+        assert_eq!(m.counter("recomputes"), Some(9));
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("recomputes").unwrap().as_u64().unwrap(), 9);
+    }
+
+    #[test]
+    fn profiler_json_has_schema_and_fields() {
+        let p = Profiler { windows: 3, pool_spins: 17, ..Default::default() };
+        let j = p.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "onnxim-profile-v1");
+        assert_eq!(j.get("windows").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("pool_spins").unwrap().as_u64().unwrap(), 17);
+    }
+}

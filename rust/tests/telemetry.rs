@@ -1,0 +1,140 @@
+//! Telemetry determinism goldens.
+//!
+//! The telemetry subsystem rides on the repo's determinism invariant:
+//! every trace event is stamped in simulated cycles from state both
+//! kernel modes agree on, buffered per component, and canonically sorted
+//! at export. These tests pin that down where it is hardest — a
+//! preemptive SLO-slack serving scenario with chunked prefill, a second
+//! tenant, and per-DRAM-request spans — by asserting the exported Chrome
+//! trace JSON is **byte-identical** across `--kernel windowed|reference`
+//! and `--sim-threads {1, 4}`, and that the metrics timeline samples the
+//! same gauge values at the same cycles. A disabled-telemetry run must
+//! return no telemetry at all and a byte-identical report (observability
+//! may not perturb results).
+
+use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
+use onnxim::config::NpuConfig;
+use onnxim::scheduler::{Policy, SloSlack};
+use onnxim::serve::{run_serve_mode, run_serve_telemetry};
+use onnxim::sim::KernelMode;
+use onnxim::telemetry::TelemetryConfig;
+use onnxim::util::json::Json;
+
+/// Chunked-prefill decode tenant plus a latency-sensitive static tenant:
+/// drives arrivals mid-window, completion-driven iterations, and (under
+/// the preemptive policy) the revoke path.
+fn scenario() -> ServeConfig {
+    let mut a =
+        TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 4).with_prefill(256, 64);
+    a.process = "constant".into();
+    a.max_batch = 4;
+    a.kv_block = 64;
+    a.max_queue = 64;
+    let mut b = TenantLoadConfig::poisson("mlp", 30_000.0);
+    b.max_batch = 4;
+    b.batch_timeout_us = 20.0;
+    ServeConfig { seed: 5, duration_ms: 0.05, slo_ms: 5.0, tenants: vec![a, b] }
+}
+
+/// Tight SLO on the static tenant so deadline pressure (and preemption)
+/// actually materializes.
+fn policy() -> Box<dyn Policy> {
+    Box::new(SloSlack::preemptive(vec![500_000, 2_000]))
+}
+
+/// Run the scenario with full tracing (including per-DRAM-request spans)
+/// and a metrics timeline; return the exported trace JSON and the SLO
+/// report JSON.
+fn traced_run(mode: KernelMode, threads: usize) -> (String, String) {
+    let mut cfg = NpuConfig::server();
+    cfg.sim_threads = threads;
+    let tel_cfg = TelemetryConfig {
+        trace: true,
+        trace_mem: true,
+        metrics_bucket: 2_000,
+        profile: false,
+    };
+    let (rep, tel) =
+        run_serve_telemetry(cfg, policy(), &scenario(), mode, tel_cfg).expect("traced serve");
+    let mut tel = tel.expect("telemetry requested but not returned");
+    let trace = tel.tracer.as_mut().expect("tracer enabled").export().pretty();
+    (trace, rep.to_json())
+}
+
+/// The timeline's `cycles` and `series` sections must agree everywhere;
+/// the end-of-run `counters` are deliberately excluded — recompute counts
+/// differ between kernel modes by design.
+fn metrics_fingerprint(report_json: &str) -> String {
+    let j = Json::parse(report_json).expect("report JSON parses");
+    let m = j.req("metrics").expect("metrics timeline present");
+    format!(
+        "{}|{}",
+        m.req("cycles").unwrap().pretty(),
+        m.req("series").unwrap().pretty()
+    )
+}
+
+#[test]
+fn trace_bytes_identical_across_kernels_and_threads() {
+    let (trace_w1, rep_w1) = traced_run(KernelMode::Windowed, 1);
+    let (trace_r1, rep_r1) = traced_run(KernelMode::Reference, 1);
+    let (trace_w4, rep_w4) = traced_run(KernelMode::Windowed, 4);
+    // The scenario actually exercised every recording site.
+    for name in ["\"arrive\"", "\"dispatch\"", "\"tile\"", "\"request\"", "\"mem\""] {
+        assert!(trace_w1.contains(name), "trace is missing {name} events");
+    }
+    assert_eq!(trace_w1, trace_r1, "trace bytes diverged across kernel modes");
+    assert_eq!(trace_w1, trace_w4, "trace bytes diverged across sim-threads");
+    let fp = metrics_fingerprint(&rep_w1);
+    assert_eq!(fp, metrics_fingerprint(&rep_r1), "metrics series diverged across kernels");
+    assert_eq!(fp, metrics_fingerprint(&rep_w4), "metrics series diverged across threads");
+}
+
+#[test]
+fn disabled_telemetry_returns_none_and_identical_report() {
+    let base = run_serve_mode(NpuConfig::server(), policy(), &scenario(), KernelMode::Windowed)
+        .expect("baseline serve")
+        .to_json();
+    let (rep, tel) = run_serve_telemetry(
+        NpuConfig::server(),
+        policy(),
+        &scenario(),
+        KernelMode::Windowed,
+        TelemetryConfig::default(),
+    )
+    .expect("telemetry-off serve");
+    assert!(tel.is_none(), "all-off telemetry config must attach nothing");
+    assert_eq!(rep.to_json(), base, "telemetry plumbing perturbed the report");
+}
+
+#[test]
+fn exported_trace_is_chrome_schema() {
+    let (trace, _) = traced_run(KernelMode::Windowed, 1);
+    let j = Json::parse(&trace).expect("trace JSON parses");
+    let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+    // 4 process-name metadata records plus real events.
+    assert!(events.len() > 4, "trace holds no events");
+    let mut last_ts = 0.0f64;
+    for e in events {
+        let ph = e.req("ph").unwrap().as_str().unwrap();
+        e.req("name").unwrap().as_str().unwrap();
+        e.req("pid").unwrap().as_u64().unwrap();
+        e.req("tid").unwrap().as_u64().unwrap();
+        match ph {
+            "M" => {} // metadata carries no timestamp
+            "X" => {
+                let ts = e.req("ts").unwrap().as_f64().unwrap();
+                e.req("dur").unwrap().as_u64().unwrap();
+                assert!(ts >= last_ts, "complete events out of order");
+                last_ts = ts;
+            }
+            "i" => {
+                let ts = e.req("ts").unwrap().as_f64().unwrap();
+                assert_eq!(e.req("s").unwrap().as_str().unwrap(), "t");
+                assert!(ts >= last_ts, "instant events out of order");
+                last_ts = ts;
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+}
