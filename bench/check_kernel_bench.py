@@ -2,6 +2,7 @@
 """CI gate for `onnxim bench kernel` output.
 
 Usage: check_kernel_bench.py BENCH_kernel.json bench/baseline_kernel.json
+           [--emit-baseline PATH]
 
 Two kinds of gates:
 
@@ -14,28 +15,34 @@ Two kinds of gates:
 - Absolute (armed once the committed baseline carries a measured
   windowed_cycles_per_sec): fail when throughput regresses more than
   `max_regression_frac` (default 30%) below the baseline.
+
+`--emit-baseline PATH` additionally writes a paste-ready
+baseline_kernel.json with the absolute gate armed from this run's
+measured dense throughput (CI uploads it as an artifact, so arming the
+gate is a copy-paste from a healthy main-branch run).
+
+The gate logic lives in `check(cur, base)` — a pure function from the two
+parsed JSON documents to (log lines, failure messages) — so
+test_check_kernel_bench.py can exercise armed/unarmed and
+advisory/required behavior without subprocesses or temp files.
 """
 
 import json
 import sys
 
 
-def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    with open(sys.argv[1]) as f:
-        cur = json.load(f)
-    with open(sys.argv[2]) as f:
-        base = json.load(f)
-
+def check(cur, base):
+    """Evaluate every gate. Returns (lines, failures): human-readable log
+    lines (including advisory WARNs, which never fail the job) and the
+    list of hard failures (empty = gate passes)."""
+    lines = []
     failures = []
 
     dense = cur["dense"]
     min_dense = base.get("dense", {}).get("min_speedup", 1.05)
-    print(f"dense: {dense['windowed_cycles_per_sec']:.0f} sim-cycles/s windowed, "
-          f"{dense['reference_cycles_per_sec']:.0f} reference, "
-          f"speedup {dense['speedup']:.2f}x (gate >= {min_dense}x)")
+    lines.append(f"dense: {dense['windowed_cycles_per_sec']:.0f} sim-cycles/s windowed, "
+                 f"{dense['reference_cycles_per_sec']:.0f} reference, "
+                 f"speedup {dense['speedup']:.2f}x (gate >= {min_dense}x)")
     if dense["speedup"] < min_dense:
         failures.append(
             f"windowed kernel only {dense['speedup']:.2f}x over reference "
@@ -43,9 +50,9 @@ def main() -> int:
 
     sweep = cur["sweep"]
     min_sweep = base.get("sweep", {}).get("min_speedup", 1.1)
-    print(f"sweep: serial {sweep['serial_sec']:.2f}s, parallel {sweep['parallel_sec']:.2f}s "
-          f"on {sweep['threads']:.0f} threads, speedup {sweep['speedup']:.2f}x "
-          f"(gate >= {min_sweep}x when threads > 1)")
+    lines.append(f"sweep: serial {sweep['serial_sec']:.2f}s, parallel {sweep['parallel_sec']:.2f}s "
+                 f"on {sweep['threads']:.0f} threads, speedup {sweep['speedup']:.2f}x "
+                 f"(gate >= {min_sweep}x when threads > 1)")
     if sweep["threads"] > 1 and sweep["speedup"] < min_sweep:
         failures.append(
             f"parallel sweep only {sweep['speedup']:.2f}x over serial on "
@@ -61,13 +68,13 @@ def main() -> int:
     if par is not None:
         min_par = base.get("parallel_dataplane", {}).get("min_speedup", 1.0)
         s = par["parallel_dataplane_speedup"]
-        print(f"parallel dataplane ({par['channels']:.0f} channels): "
-              f"serial {par['serial_sec']:.2f}s, 2t {par['threads2_sec']:.2f}s, "
-              f"4t {par['threads4_sec']:.2f}s, speedup {s:.2f}x "
-              f"(advisory target >= {min_par}x)")
+        lines.append(f"parallel dataplane ({par['channels']:.0f} channels): "
+                     f"serial {par['serial_sec']:.2f}s, 2t {par['threads2_sec']:.2f}s, "
+                     f"4t {par['threads4_sec']:.2f}s, speedup {s:.2f}x "
+                     f"(advisory target >= {min_par}x)")
         if s < min_par:
-            print(f"WARN (advisory): parallel data plane speedup {s:.2f}x is below the "
-                  f"{min_par}x target on this runner; not failing the job")
+            lines.append(f"WARN (advisory): parallel data plane speedup {s:.2f}x is below the "
+                         f"{min_par}x target on this runner; not failing the job")
 
     # Tracing overhead: ADVISORY, same noisy-runner policy as above. The
     # hard guarantee (telemetry off => no telemetry state at all) is
@@ -77,29 +84,66 @@ def main() -> int:
     if tracing is not None:
         max_overhead = base.get("tracing", {}).get("max_overhead_pct", 25.0)
         pct = tracing["trace_overhead_pct"]
-        print(f"tracing: untraced {tracing['untraced_sec']:.2f}s, traced "
-              f"{tracing['traced_sec']:.2f}s ({tracing['trace_events']:.0f} events), "
-              f"overhead {pct:+.1f}% (advisory target <= {max_overhead}%)")
+        lines.append(f"tracing: untraced {tracing['untraced_sec']:.2f}s, traced "
+                     f"{tracing['traced_sec']:.2f}s ({tracing['trace_events']:.0f} events), "
+                     f"overhead {pct:+.1f}% (advisory target <= {max_overhead}%)")
         if pct > max_overhead:
-            print(f"WARN (advisory): tracing overhead {pct:+.1f}% exceeds the "
-                  f"{max_overhead}% target on this runner; not failing the job")
+            lines.append(f"WARN (advisory): tracing overhead {pct:+.1f}% exceeds the "
+                         f"{max_overhead}% target on this runner; not failing the job")
 
     base_tput = base.get("dense", {}).get("windowed_cycles_per_sec", 0)
     frac = base.get("max_regression_frac", 0.3)
     if base_tput > 0:
         floor = (1.0 - frac) * base_tput
-        print(f"absolute: {dense['windowed_cycles_per_sec']:.0f} vs baseline "
-              f"{base_tput:.0f} sim-cycles/s (floor {floor:.0f})")
+        lines.append(f"absolute: {dense['windowed_cycles_per_sec']:.0f} vs baseline "
+                     f"{base_tput:.0f} sim-cycles/s (floor {floor:.0f})")
         if dense["windowed_cycles_per_sec"] < floor:
             failures.append(
                 f"dense throughput {dense['windowed_cycles_per_sec']:.0f} sim-cycles/s "
                 f"regressed >{frac:.0%} below baseline {base_tput:.0f}")
     else:
-        print("absolute: baseline not yet recorded (windowed_cycles_per_sec=0) — "
-              "relative gates only")
-        print("to arm the absolute gate, set dense.windowed_cycles_per_sec in "
-              "bench/baseline_kernel.json to this run's measured value: "
-              f"{dense['windowed_cycles_per_sec']:.0f}")
+        lines.append("absolute: baseline not yet recorded (windowed_cycles_per_sec=0) — "
+                     "relative gates only")
+        lines.append("to arm the absolute gate, set dense.windowed_cycles_per_sec in "
+                     "bench/baseline_kernel.json to this run's measured value: "
+                     f"{dense['windowed_cycles_per_sec']:.0f}")
+
+    return lines, failures
+
+
+def baseline_snippet(cur, base):
+    """A paste-ready baseline_kernel.json: the committed baseline with the
+    absolute gate armed from this run's measured dense throughput."""
+    out = json.loads(json.dumps(base))  # deep copy, drop nothing
+    out.setdefault("dense", {})["windowed_cycles_per_sec"] = round(
+        cur["dense"]["windowed_cycles_per_sec"])
+    return json.dumps(out, indent=2) + "\n"
+
+
+def main(argv) -> int:
+    emit = None
+    if "--emit-baseline" in argv:
+        i = argv.index("--emit-baseline")
+        if i + 1 >= len(argv):
+            print("--emit-baseline needs a PATH", file=sys.stderr)
+            return 2
+        emit = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        cur = json.load(f)
+    with open(argv[1]) as f:
+        base = json.load(f)
+
+    lines, failures = check(cur, base)
+    for line in lines:
+        print(line)
+    if emit is not None:
+        with open(emit, "w") as f:
+            f.write(baseline_snippet(cur, base))
+        print(f"wrote armed-baseline snippet to {emit}")
 
     if failures:
         for msg in failures:
@@ -110,4 +154,4 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(sys.argv[1:]))

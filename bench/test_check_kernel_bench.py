@@ -1,0 +1,153 @@
+"""Unit tests for the `bench kernel` CI gate logic.
+
+Run with: python3 -m unittest discover -s bench -p 'test_*.py'
+
+Everything goes through check_kernel_bench.check(cur, base) — a pure
+function — so no subprocesses, temp files, or bench runs are needed.
+"""
+
+import json
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from check_kernel_bench import baseline_snippet, check  # noqa: E402
+
+
+def bench_result(dense_speedup=1.5, windowed_cps=2_000_000.0, sweep_speedup=2.0,
+                 sweep_threads=4, par_speedup=1.8, trace_overhead=5.0):
+    """A healthy BENCH_kernel.json document, fields overridable per test."""
+    return {
+        "schema": 1,
+        "dense": {
+            "sim_cycles": 1_000_000,
+            "reference_sec": 1.0,
+            "windowed_sec": 1.0 / dense_speedup,
+            "reference_cycles_per_sec": windowed_cps / dense_speedup,
+            "windowed_cycles_per_sec": windowed_cps,
+            "speedup": dense_speedup,
+            "control_passes": 1000,
+            "dense_steps": 5000,
+        },
+        "parallel_dataplane": {
+            "channels": 16,
+            "serial_sec": 1.0,
+            "threads2_sec": 0.7,
+            "threads4_sec": 1.0 / par_speedup,
+            "parallel_dataplane_speedup": par_speedup,
+        },
+        "sweep": {
+            "points": 8,
+            "threads": sweep_threads,
+            "serial_sec": 1.0,
+            "parallel_sec": 1.0 / sweep_speedup,
+            "speedup": sweep_speedup,
+        },
+        "tracing": {
+            "untraced_sec": 1.0,
+            "traced_sec": 1.0 + trace_overhead / 100.0,
+            "trace_events": 1234,
+            "trace_overhead_pct": trace_overhead,
+        },
+    }
+
+
+def baseline(windowed_cps=0):
+    """The committed baseline shape (absolute gate unarmed by default)."""
+    return {
+        "dense": {"windowed_cycles_per_sec": windowed_cps, "min_speedup": 1.05},
+        "sweep": {"min_speedup": 1.1},
+        "max_regression_frac": 0.3,
+        "parallel_dataplane": {"min_speedup": 1.0},
+    }
+
+
+class CheckTests(unittest.TestCase):
+    def test_healthy_run_passes(self):
+        lines, failures = check(bench_result(), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("OK" not in ln and "dense:" in ln for ln in lines))
+
+    def test_unarmed_baseline_skips_absolute_gate(self):
+        # windowed_cycles_per_sec=0 in the baseline: even a very slow run
+        # passes the absolute gate, and the log says how to arm it.
+        lines, failures = check(bench_result(windowed_cps=1.0), baseline(0))
+        self.assertEqual(failures, [])
+        self.assertTrue(any("baseline not yet recorded" in ln for ln in lines))
+        self.assertTrue(any("to arm the absolute gate" in ln for ln in lines))
+
+    def test_armed_baseline_passes_within_band(self):
+        # 30% regression band: 75% of baseline throughput still passes.
+        lines, failures = check(
+            bench_result(windowed_cps=750_000.0), baseline(1_000_000))
+        self.assertEqual(failures, [])
+        self.assertTrue(any(ln.startswith("absolute:") for ln in lines))
+
+    def test_armed_baseline_fails_below_floor(self):
+        # 50% of baseline is below the 70% floor: hard failure.
+        _, failures = check(
+            bench_result(windowed_cps=500_000.0), baseline(1_000_000))
+        self.assertEqual(len(failures), 1)
+        self.assertIn("regressed", failures[0])
+
+    def test_dense_relative_gate_is_required(self):
+        _, failures = check(bench_result(dense_speedup=1.0), baseline())
+        self.assertEqual(len(failures), 1)
+        self.assertIn("windowed kernel only", failures[0])
+
+    def test_sweep_relative_gate_is_required_with_threads(self):
+        _, failures = check(bench_result(sweep_speedup=1.0), baseline())
+        self.assertEqual(len(failures), 1)
+        self.assertIn("parallel sweep only", failures[0])
+
+    def test_sweep_gate_skipped_on_one_thread(self):
+        # A single-thread runner can't speed up: the gate must not fire.
+        _, failures = check(
+            bench_result(sweep_speedup=1.0, sweep_threads=1), baseline())
+        self.assertEqual(failures, [])
+
+    def test_parallel_dataplane_is_advisory(self):
+        # Below-target dataplane speedup warns but never fails.
+        lines, failures = check(bench_result(par_speedup=0.5), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("WARN (advisory)" in ln and "data plane" in ln
+                            for ln in lines))
+
+    def test_tracing_overhead_is_advisory(self):
+        lines, failures = check(bench_result(trace_overhead=60.0), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("WARN (advisory)" in ln and "tracing overhead" in ln
+                            for ln in lines))
+
+    def test_missing_optional_sections_tolerated(self):
+        # Old bench artifacts without the dataplane/tracing sections still
+        # gate on the required comparisons.
+        cur = bench_result()
+        del cur["parallel_dataplane"]
+        del cur["tracing"]
+        _, failures = check(cur, baseline())
+        self.assertEqual(failures, [])
+
+
+class BaselineSnippetTests(unittest.TestCase):
+    def test_snippet_arms_absolute_gate(self):
+        snippet = json.loads(baseline_snippet(
+            bench_result(windowed_cps=1_234_567.8), baseline(0)))
+        self.assertEqual(snippet["dense"]["windowed_cycles_per_sec"], 1234568)
+        # The rest of the committed baseline rides along unchanged.
+        self.assertEqual(snippet["dense"]["min_speedup"], 1.05)
+        self.assertEqual(snippet["max_regression_frac"], 0.3)
+
+    def test_snippet_round_trips_through_check(self):
+        # A snippet emitted from a run must pass the gate against that
+        # same run (it IS the measured value, well above the floor).
+        cur = bench_result(windowed_cps=2_000_000.0)
+        armed = json.loads(baseline_snippet(cur, baseline(0)))
+        _, failures = check(cur, armed)
+        self.assertEqual(failures, [])
+
+
+if __name__ == "__main__":
+    unittest.main()

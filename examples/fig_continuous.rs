@@ -17,9 +17,15 @@
 //! and compares FCFS against the SLO-slack (earliest-deadline) policy:
 //! slack-ordered tile dispatch lets the tight tenant's tiny requests
 //! overtake the hog's backlog, converting missed deadlines into goodput.
+//!
+//! Part 1 also runs with energy accounting on (the `typical` coefficient
+//! set), so each point carries an energy-per-token column: continuous
+//! batching's higher pool occupancy amortizes the static power floor over
+//! more tokens.
 
 use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
+use onnxim::energy::EnergyConfig;
 use onnxim::scheduler::{Fcfs, SloSlack};
 use onnxim::serve::run_serve;
 use onnxim::sim::sweep;
@@ -68,7 +74,7 @@ fn main() {
     println!("(gpt-tiny decode, 16 tokens/request, Server NPU, {duration_ms} ms window)\n");
     let mut table = Table::new(&[
         "batching", "rate r/s", "completed", "p50 ms", "p99 ms", "TTFT p99", "queue p99",
-        "pool occ",
+        "pool occ", "uJ/tok",
     ]);
     // Independent points, each with its own seeded RNG: run the sweep
     // across threads (byte-identical to a serial run), render in order.
@@ -79,8 +85,9 @@ fn main() {
         .map(|&(rate, continuous)| {
             move || {
                 let scfg = decode_scenario(rate, duration_ms, continuous);
-                run_serve(NpuConfig::server(), Box::new(Fcfs::new()), &scfg)
-                    .expect("decode scenario")
+                let mut cfg = NpuConfig::server();
+                cfg.energy = EnergyConfig::typical();
+                run_serve(cfg, Box::new(Fcfs::new()), &scfg).expect("decode scenario")
             }
         })
         .collect();
@@ -88,6 +95,12 @@ fn main() {
         points.iter().zip(&sweep::run_jobs(jobs, sweep::available_threads()))
     {
         let t = &rep.tenants[0];
+        // 16 decode tokens per completed request; pJ -> uJ is 1e6.
+        let tokens = (t.completed * 16) as f64;
+        let uj_per_tok = match t.energy_pj {
+            Some(pj) if tokens > 0.0 => format!("{:.2}", pj / tokens / 1e6),
+            _ => "-".to_string(),
+        };
         table.row(&[
             t.mode.clone(),
             format!("{rate:.0}"),
@@ -97,6 +110,7 @@ fn main() {
             format!("{:.4}", t.ttft.p99_ms),
             format!("{:.4}", t.queue_delay.p99_ms),
             format!("{:.2}", t.mean_batch_units),
+            uj_per_tok,
         ]);
     }
     table.print();

@@ -1,0 +1,108 @@
+//! Energy-vs-latency Pareto sweep under a power cap.
+//!
+//! ```sh
+//! cargo run --release --offline --example fig_energy [-- --full]
+//! ```
+//!
+//! One decode-heavy GPT tenant runs at fixed offered load while the board
+//! TDP sweeps downward from "uncapped". The `power-cap` policy gates tile
+//! dispatch whenever the rolling-window power estimate exceeds the TDP,
+//! so tightening the cap trades tail latency (queueing while throttled)
+//! for peak power. Energy per token moves much less than latency: the cap
+//! reshapes *when* work runs, not *how much* work there is — only the
+//! static-power share of a longer run adds real energy.
+//!
+//! The sweep is self-scaling: the uncapped run's peak window power sets
+//! the cap points (90/75/60% of the dynamic swing above the static
+//! floor), so the caps always bind regardless of coefficient choices.
+
+use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
+use onnxim::config::NpuConfig;
+use onnxim::energy::EnergyConfig;
+use onnxim::scheduler::{Fcfs, PowerCap};
+use onnxim::serve::{run_serve, SloReport};
+use onnxim::sim::sweep;
+use onnxim::util::stats::Table;
+
+const TOKENS_PER_REQUEST: usize = 16;
+
+/// One decode-heavy GPT tenant under constant load, continuous batching.
+fn scenario(duration_ms: f64) -> ServeConfig {
+    let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, TOKENS_PER_REQUEST);
+    t.process = "constant".into();
+    t.max_batch = 8;
+    t.max_queue = 128;
+    t.kv_init = 64;
+    t.kv_block = 64;
+    ServeConfig { seed: 42, duration_ms, slo_ms: 2.0, tenants: vec![t] }
+}
+
+/// Server NPU with the typical energy coefficient set and a short power
+/// window, so even the quick run closes many windows.
+fn energy_cfg(tdp_mw: f64) -> NpuConfig {
+    let mut cfg = NpuConfig::server();
+    cfg.energy = EnergyConfig::typical();
+    cfg.energy.power_window = 2_000;
+    cfg.energy.tdp_mw = tdp_mw;
+    cfg
+}
+
+fn row(table: &mut Table, label: &str, rep: &SloReport) {
+    let t = &rep.tenants[0];
+    let e = rep.energy.as_ref().expect("energy accounting enabled");
+    let tokens = (t.completed as usize * TOKENS_PER_REQUEST) as f64;
+    let uj_per_tok = if tokens > 0.0 { e.total_pj / tokens / 1e6 } else { 0.0 };
+    table.row(&[
+        label.to_string(),
+        format!("{}", t.completed),
+        format!("{:.4}", t.e2e.p50_ms),
+        format!("{:.4}", t.e2e.p99_ms),
+        format!("{:.0}", e.avg_power_mw),
+        format!("{:.0}", e.peak_power_mw),
+        format!("{}/{}", e.throttled_windows, e.power_windows),
+        format!("{:.2}", uj_per_tok),
+    ]);
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let duration_ms = if full { 0.4 } else { 0.2 };
+    let scfg = scenario(duration_ms);
+
+    println!("Energy/latency Pareto under a board power cap");
+    println!("(gpt-tiny decode, 100k r/s constant, Server NPU, {duration_ms} ms window)\n");
+
+    // Uncapped baseline: FCFS with accounting on but no TDP. Its peak
+    // window power anchors the cap sweep.
+    let uncapped =
+        run_serve(energy_cfg(0.0), Box::new(Fcfs::new()), &scfg).expect("uncapped baseline");
+    let base = uncapped.energy.as_ref().expect("energy accounting enabled");
+    let static_mw = EnergyConfig::typical().static_mw;
+    let swing = (base.peak_power_mw - static_mw).max(1.0);
+    let caps: Vec<f64> = [0.9, 0.75, 0.6].iter().map(|f| static_mw + swing * f).collect();
+
+    let jobs: Vec<_> = caps
+        .iter()
+        .map(|&tdp| {
+            let scfg = scfg.clone();
+            move || {
+                run_serve(energy_cfg(tdp), Box::new(PowerCap::new(Box::new(Fcfs::new()))), &scfg)
+                    .expect("capped point")
+            }
+        })
+        .collect();
+    let capped = sweep::run_jobs(jobs, sweep::available_threads());
+
+    let mut table = Table::new(&[
+        "TDP mW", "completed", "p50 ms", "p99 ms", "avg mW", "peak mW", "throttled", "uJ/tok",
+    ]);
+    row(&mut table, "uncapped", &uncapped);
+    for (tdp, rep) in caps.iter().zip(&capped) {
+        row(&mut table, &format!("{tdp:.0}"), rep);
+    }
+    table.print();
+
+    println!("\n(tighter caps throttle more windows: tail latency stretches while");
+    println!(" energy per token stays nearly flat — the cap defers work instead");
+    println!(" of removing it, so only the longer run's static share is extra)");
+}

@@ -9,6 +9,7 @@ pub mod serve;
 
 pub use serve::{ServeConfig, TenantLoadConfig};
 
+use crate::energy::EnergyConfig;
 use crate::util::json::Json;
 
 /// DRAM device family. Timing defaults follow Table II.
@@ -194,6 +195,17 @@ pub struct NpuConfig {
     /// should prefer parallelizing across points instead. Also settable
     /// per-run via `--sim-threads`.
     pub sim_threads: usize,
+    /// Worker-pool spin budget: how many spin iterations a data-plane
+    /// worker burns waiting for the next dense phase before parking (and
+    /// paying ~1 ms wake latency). 0 (the default) uses the
+    /// `ONNXIM_POOL_SPIN` environment variable, falling back to the
+    /// built-in default. Purely a wall-clock/CPU trade-off — simulated
+    /// results are byte-identical at every setting.
+    pub pool_spin: u32,
+    /// Energy/power accounting coefficients. All-zero (the default)
+    /// disables accounting entirely: no meter is attached and reports
+    /// are byte-identical to an energy-unaware run.
+    pub energy: EnergyConfig,
 }
 
 impl NpuConfig {
@@ -218,6 +230,8 @@ impl NpuConfig {
             noc: NocConfig::simple(),
             max_cycles: 0,
             sim_threads: 1,
+            pool_spin: 0,
+            energy: EnergyConfig::default(),
         }
     }
 
@@ -259,6 +273,8 @@ impl NpuConfig {
             },
             max_cycles: 0,
             sim_threads: 1,
+            pool_spin: 0,
+            energy: EnergyConfig::default(),
         }
     }
 
@@ -312,7 +328,7 @@ impl NpuConfig {
         let d = &self.dram;
         let n = &self.noc;
         let v = &self.vector_latency;
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("core_freq_ghz", Json::num(self.core_freq_ghz)),
             ("num_cores", Json::num(self.num_cores as f64)),
@@ -327,6 +343,16 @@ impl NpuConfig {
             ("dma_max_inflight", Json::num(self.dma_max_inflight as f64)),
             ("max_cycles", Json::num(self.max_cycles as f64)),
             ("sim_threads", Json::num(self.sim_threads as f64)),
+        ];
+        // Newer optional sections are emitted only when set, so configs
+        // that never touch them serialize exactly as they always have.
+        if self.pool_spin > 0 {
+            fields.push(("pool_spin", Json::num(self.pool_spin as f64)));
+        }
+        if self.energy.enabled() {
+            fields.push(("energy", self.energy.as_json()));
+        }
+        fields.extend(vec![
             (
                 "vector_latency",
                 Json::obj(vec![
@@ -378,7 +404,8 @@ impl NpuConfig {
                     ("input_queue_flits", Json::num(n.input_queue_flits as f64)),
                 ]),
             ),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> anyhow::Result<Self> {
@@ -407,6 +434,16 @@ impl NpuConfig {
             sim_threads: match j.get("sim_threads") {
                 Some(v) => v.as_usize()?.max(1),
                 None => 1,
+            },
+            // Optional: 0 = use ONNXIM_POOL_SPIN / the built-in default.
+            pool_spin: match j.get("pool_spin") {
+                Some(v) => v.as_u64()? as u32,
+                None => 0,
+            },
+            // Optional (absent in pre-energy config files): accounting off.
+            energy: match j.get("energy") {
+                Some(v) => EnergyConfig::from_json(v)?,
+                None => EnergyConfig::default(),
             },
             vector_latency: VectorLatency {
                 add: vj.req("add")?.as_u64()?,
@@ -498,6 +535,31 @@ mod tests {
         let legacy = NpuConfig::mobile().to_json().replace("\"sim_threads\"", "\"_legacy\"");
         let c3 = NpuConfig::from_json(&Json::parse(&legacy).unwrap()).unwrap();
         assert_eq!(c3.sim_threads, 1);
+    }
+
+    #[test]
+    fn energy_and_pool_spin_roundtrip_and_default_off() {
+        // Defaults: no "energy"/"pool_spin" keys at all, so files written
+        // by older builds and new energy-off files are byte-identical.
+        let c = NpuConfig::server();
+        assert!(!c.energy.enabled());
+        let j = c.to_json();
+        assert!(!j.contains("energy"), "energy-off config must not emit the key");
+        assert!(!j.contains("pool_spin"));
+        let c2 = NpuConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(!c2.energy.enabled());
+        assert_eq!(c2.pool_spin, 0);
+
+        // Set: both sections round-trip.
+        let mut c = NpuConfig::mobile();
+        c.energy = EnergyConfig::typical();
+        c.energy.tdp_mw = 9000.0;
+        c.pool_spin = 500;
+        let c2 = NpuConfig::from_json(&Json::parse(&c.to_json()).unwrap()).unwrap();
+        assert_eq!(c2.energy, c.energy);
+        assert_eq!(c2.pool_spin, 500);
+        assert!(c2.energy.enabled());
+        assert!((c2.energy.tdp_mw - 9000.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,533 @@
+//! Energy and power accounting as a first-class output layer.
+//!
+//! The simulator's core bet (deterministic compute latency + cycle-level
+//! DRAM/NoC) means every energy-relevant event is already counted
+//! exactly: MACs and DMA bytes per core ([`crate::core::CoreStats`]),
+//! column accesses and bytes per DRAM channel
+//! ([`crate::dram::ChannelStats`]), and NoC packets derived from those
+//! accesses (every NoC packet is a memory request or response — see
+//! [`crate::noc::request_bytes`]). This module hangs configurable
+//! coefficients on those counters:
+//!
+//! - **[`EnergyConfig`]**: pJ per MAC, per scratchpad read/write byte,
+//!   per DRAM access, per NoC flit-hop, plus static mW — loadable from
+//!   the NPU config JSON (`"energy": {...}`) or CLI flags. An all-zero
+//!   config (the default) means *off*: no meter is attached, reports are
+//!   byte-identical to an energy-unaware build (same nullable-pointer
+//!   discipline as telemetry).
+//! - **[`EnergyMeter`]**: rolling-window power sampling inside the
+//!   kernel. Window edges clamp the event kernel's windows exactly like
+//!   utilization/metrics bucket edges, so the power series — and the
+//!   power-cap throttle decisions derived from it — are byte-identical
+//!   across kernel modes and data-plane thread counts.
+//! - **[`EnergyReport`]**: end-of-run totals per category, average power
+//!   over the run, and the peak rolling-window power; attached to
+//!   `SimReport`/`SloReport` (JSON key emitted only when energy is on).
+//!
+//! Accounting model (pure arithmetic over existing event counts):
+//!
+//! - MAC energy: `macs * pj_per_mac`.
+//! - Scratchpad energy is charged on DMA traffic: an MVIN writes
+//!   `dram_read_bytes` into the scratchpad, an MVOUT reads
+//!   `dram_write_bytes` out of it. Compute-side operand reuse stays on
+//!   the systolic array and is folded into `pj_per_mac`.
+//! - DRAM energy: `(reads + writes) * pj_per_dram_access` (one access
+//!   moves `access_granularity` bytes).
+//! - NoC energy: per access, a request packet plus a response packet
+//!   cross the crossbar once each; flits per access =
+//!   `ceil(8/flit) + ceil((8+granularity)/flit)` (8 B header packets,
+//!   payload-carrying packets add the access granularity — the same
+//!   sizing both NoC models use).
+//! - Static energy: `static_mw * cycles / freq_ghz` picojoules (1 mW at
+//!   1 GHz is exactly 1 pJ per cycle).
+
+use crate::core::CoreStats;
+use crate::dram::ChannelStats;
+use crate::util::json::Json;
+use crate::{Cycle, NEVER};
+
+/// Energy coefficients and power-management knobs. All-zero (the
+/// [`Default`]) means energy accounting is off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyConfig {
+    /// Energy per multiply-accumulate, in picojoules.
+    pub pj_per_mac: f64,
+    /// Energy per byte read from a core scratchpad (MVOUT traffic).
+    pub pj_per_spad_read_byte: f64,
+    /// Energy per byte written into a core scratchpad (MVIN traffic).
+    pub pj_per_spad_write_byte: f64,
+    /// Energy per DRAM column access (one `access_granularity` transfer).
+    pub pj_per_dram_access: f64,
+    /// Energy per NoC flit-hop (both NoC models are single-hop crossbars).
+    pub pj_per_noc_flit_hop: f64,
+    /// Static (leakage + always-on) board power in milliwatts.
+    pub static_mw: f64,
+    /// Rolling power window in cycles: the granularity of the power
+    /// timeline and of power-cap control decisions. 0 disables window
+    /// sampling (totals and average power still reported).
+    pub power_window: u64,
+    /// Board TDP in milliwatts for the `power-cap` policy (0 = no cap;
+    /// the cap only acts when that policy is selected).
+    pub tdp_mw: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            pj_per_mac: 0.0,
+            pj_per_spad_read_byte: 0.0,
+            pj_per_spad_write_byte: 0.0,
+            pj_per_dram_access: 0.0,
+            pj_per_noc_flit_hop: 0.0,
+            static_mw: 0.0,
+            power_window: 0,
+            tdp_mw: 0.0,
+        }
+    }
+}
+
+impl EnergyConfig {
+    /// True when any coefficient is set: the simulator attaches an
+    /// [`EnergyMeter`] and reports carry an energy section. The
+    /// management knobs (`power_window`, `tdp_mw`) alone do not enable
+    /// accounting — with no coefficients there is nothing to meter.
+    pub fn enabled(&self) -> bool {
+        self.pj_per_mac > 0.0
+            || self.pj_per_spad_read_byte > 0.0
+            || self.pj_per_spad_write_byte > 0.0
+            || self.pj_per_dram_access > 0.0
+            || self.pj_per_noc_flit_hop > 0.0
+            || self.static_mw > 0.0
+    }
+
+    /// Plausible coefficients for a ~16 nm-class NPU: sub-pJ INT8 MACs,
+    /// SRAM at ~0.1 pJ/byte·direction, HBM-class DRAM at ~4 pJ/bit
+    /// (2048 pJ per 64 B access), cheap on-die crossbar flits, 2 W
+    /// static. Intended for examples and sweeps, not as ground truth —
+    /// real studies should calibrate against their silicon.
+    pub fn typical() -> Self {
+        EnergyConfig {
+            pj_per_mac: 0.8,
+            pj_per_spad_read_byte: 0.6,
+            pj_per_spad_write_byte: 0.9,
+            pj_per_dram_access: 2048.0,
+            pj_per_noc_flit_hop: 4.0,
+            static_mw: 2000.0,
+            power_window: 10_000,
+            tdp_mw: 0.0,
+        }
+    }
+
+    /// Dynamic energy accounted at one core, in pJ.
+    pub fn core_pj(&self, s: &CoreStats) -> f64 {
+        s.macs as f64 * self.pj_per_mac
+            + s.dram_read_bytes as f64 * self.pj_per_spad_write_byte
+            + s.dram_write_bytes as f64 * self.pj_per_spad_read_byte
+    }
+
+    /// Dynamic energy accounted at one DRAM channel (the column accesses
+    /// plus the NoC packets that carried them), in pJ.
+    pub fn channel_pj(&self, s: &ChannelStats, access_granularity: u64, flit_bytes: u64) -> f64 {
+        let accesses = s.reads + s.writes;
+        accesses as f64 * self.pj_per_dram_access
+            + (accesses * flits_per_access(access_granularity, flit_bytes)) as f64
+                * self.pj_per_noc_flit_hop
+    }
+
+    /// Static energy over `cycles` at `freq_ghz`, in pJ.
+    pub fn static_pj(&self, cycles: u64, freq_ghz: f64) -> f64 {
+        self.static_mw * cycles as f64 / freq_ghz
+    }
+
+    pub fn as_json(&self) -> Json {
+        Json::obj(vec![
+            ("pj_per_mac", Json::num(self.pj_per_mac)),
+            ("pj_per_spad_read_byte", Json::num(self.pj_per_spad_read_byte)),
+            ("pj_per_spad_write_byte", Json::num(self.pj_per_spad_write_byte)),
+            ("pj_per_dram_access", Json::num(self.pj_per_dram_access)),
+            ("pj_per_noc_flit_hop", Json::num(self.pj_per_noc_flit_hop)),
+            ("static_mw", Json::num(self.static_mw)),
+            ("power_window", Json::num(self.power_window as f64)),
+            ("tdp_mw", Json::num(self.tdp_mw)),
+        ])
+    }
+
+    /// Parse from a config JSON object. Every field is optional (absent
+    /// = 0, except `power_window` which defaults to 10 000 cycles so a
+    /// coefficients-only config still gets a power timeline).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let f = |key: &str| -> anyhow::Result<f64> {
+            match j.get(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(0.0),
+            }
+        };
+        Ok(EnergyConfig {
+            pj_per_mac: f("pj_per_mac")?,
+            pj_per_spad_read_byte: f("pj_per_spad_read_byte")?,
+            pj_per_spad_write_byte: f("pj_per_spad_write_byte")?,
+            pj_per_dram_access: f("pj_per_dram_access")?,
+            pj_per_noc_flit_hop: f("pj_per_noc_flit_hop")?,
+            static_mw: f("static_mw")?,
+            power_window: match j.get("power_window") {
+                Some(v) => v.as_u64()?,
+                None => 10_000,
+            },
+            tdp_mw: f("tdp_mw")?,
+        })
+    }
+}
+
+/// NoC flit-hops consumed by one DRAM access: the request packet plus
+/// the response packet, each `ceil(bytes/flit)` flits over one crossbar
+/// hop. Reads (8 B request, 8+g response) and writes (8+g request, 8 B
+/// ack) move the same flit count, so the split is not needed.
+pub fn flits_per_access(access_granularity: u64, flit_bytes: u64) -> u64 {
+    let f = flit_bytes.max(1);
+    8u64.div_ceil(f) + (8 + access_granularity).div_ceil(f)
+}
+
+/// End-of-run energy totals. Attached to `SimReport.energy` /
+/// `SloReport.energy` when an [`EnergyConfig`] is enabled; `None`
+/// otherwise, so energy-off reports stay byte-identical to pre-energy
+/// builds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyReport {
+    pub mac_pj: f64,
+    pub spad_pj: f64,
+    pub dram_pj: f64,
+    pub noc_pj: f64,
+    pub static_pj: f64,
+    pub total_pj: f64,
+    /// Mean power over the whole run (total energy / simulated time).
+    pub avg_power_mw: f64,
+    /// Peak rolling-window power (equals `avg_power_mw` when window
+    /// sampling is off).
+    pub peak_power_mw: f64,
+    /// Completed power windows (0 when `power_window == 0`).
+    pub power_windows: u64,
+    /// Windows whose power exceeded `tdp_mw` (0 without a cap).
+    pub throttled_windows: u64,
+}
+
+impl EnergyReport {
+    /// Aggregate the per-category totals from the final component stats.
+    /// Iteration order is fixed (core index, then channel index), so the
+    /// f64 sums are byte-identical across kernel modes and thread counts
+    /// whenever the underlying counters are.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_stats(
+        cfg: &EnergyConfig,
+        core: &[CoreStats],
+        dram: &[ChannelStats],
+        access_granularity: u64,
+        flit_bytes: u64,
+        total_cycles: u64,
+        freq_ghz: f64,
+        meter: Option<&EnergyMeter>,
+    ) -> Self {
+        let mut mac_pj = 0.0;
+        let mut spad_pj = 0.0;
+        for s in core {
+            mac_pj += s.macs as f64 * cfg.pj_per_mac;
+            spad_pj += s.dram_read_bytes as f64 * cfg.pj_per_spad_write_byte
+                + s.dram_write_bytes as f64 * cfg.pj_per_spad_read_byte;
+        }
+        let mut dram_pj = 0.0;
+        let mut noc_pj = 0.0;
+        let flits = flits_per_access(access_granularity, flit_bytes);
+        for s in dram {
+            let accesses = s.reads + s.writes;
+            dram_pj += accesses as f64 * cfg.pj_per_dram_access;
+            noc_pj += (accesses * flits) as f64 * cfg.pj_per_noc_flit_hop;
+        }
+        let static_pj = cfg.static_pj(total_cycles, freq_ghz);
+        let total_pj = mac_pj + spad_pj + dram_pj + noc_pj + static_pj;
+        let avg_power_mw = total_pj * freq_ghz / total_cycles.max(1) as f64;
+        let (peak_power_mw, power_windows, throttled_windows) = match meter {
+            Some(m) if m.windows > 0 => (m.peak_mw, m.windows, m.throttled_windows),
+            _ => (avg_power_mw, 0, 0),
+        };
+        EnergyReport {
+            mac_pj,
+            spad_pj,
+            dram_pj,
+            noc_pj,
+            static_pj,
+            total_pj,
+            avg_power_mw,
+            peak_power_mw,
+            power_windows,
+            throttled_windows,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mac_pj", Json::num(self.mac_pj)),
+            ("spad_pj", Json::num(self.spad_pj)),
+            ("dram_pj", Json::num(self.dram_pj)),
+            ("noc_pj", Json::num(self.noc_pj)),
+            ("static_pj", Json::num(self.static_pj)),
+            ("total_pj", Json::num(self.total_pj)),
+            ("avg_power_mw", Json::num(self.avg_power_mw)),
+            ("peak_power_mw", Json::num(self.peak_power_mw)),
+            ("power_windows", Json::num(self.power_windows as f64)),
+            ("throttled_windows", Json::num(self.throttled_windows as f64)),
+        ])
+    }
+}
+
+/// Attribute a run's total energy across tenants from the per-tenant
+/// dispatched-work counters `(macs, dram_bytes)` kept by the scheduler:
+/// MAC energy splits by MAC share, the memory path (scratchpad + DRAM +
+/// NoC) by DMA-byte share, and static energy by MAC share (a proxy for
+/// occupancy). Returns one pJ figure per tenant; tenants beyond the
+/// counter vector (never dispatched) get 0.
+pub fn attribute_tenants(e: &EnergyReport, work: &[(u64, u64)], tenants: usize) -> Vec<f64> {
+    let total_macs: u64 = work.iter().map(|w| w.0).sum();
+    let total_bytes: u64 = work.iter().map(|w| w.1).sum();
+    let mem_pj = e.spad_pj + e.dram_pj + e.noc_pj;
+    (0..tenants)
+        .map(|t| {
+            let (macs, bytes) = work.get(t).copied().unwrap_or((0, 0));
+            let mac_share = if total_macs > 0 { macs as f64 / total_macs as f64 } else { 0.0 };
+            let byte_share =
+                if total_bytes > 0 { bytes as f64 / total_bytes as f64 } else { 0.0 };
+            (e.mac_pj + e.static_pj) * mac_share + mem_pj * byte_share
+        })
+        .collect()
+}
+
+/// Rolling-window power meter, owned by the simulator when an
+/// [`EnergyConfig`] is enabled. Window edges participate in the event
+/// kernel's window clamp (like utilization and metrics bucket edges), so
+/// both kernel modes close every window with identical counter state;
+/// event-horizon jumps over idle regions are interpolated exactly like
+/// `Simulator::sample_util` interpolates utilization buckets.
+#[derive(Debug, Clone)]
+pub struct EnergyMeter {
+    pub cfg: EnergyConfig,
+    freq_ghz: f64,
+    /// Next window edge (NEVER when window sampling is off).
+    next_at: Cycle,
+    /// Cumulative dynamic pJ at the last closed edge.
+    last_pj: f64,
+    /// Power of the most recently closed window, mW (incl. static).
+    pub last_window_mw: f64,
+    pub peak_mw: f64,
+    pub windows: u64,
+    pub throttled_windows: u64,
+    /// True while the last closed window exceeded `tdp_mw`; consumed by
+    /// the `power-cap` policy through the scheduler each control pass.
+    pub over_cap: bool,
+}
+
+impl EnergyMeter {
+    pub fn new(cfg: EnergyConfig, freq_ghz: f64) -> Self {
+        let next_at = if cfg.power_window > 0 { cfg.power_window } else { NEVER };
+        EnergyMeter {
+            cfg,
+            freq_ghz,
+            next_at,
+            last_pj: 0.0,
+            last_window_mw: 0.0,
+            peak_mw: 0.0,
+            windows: 0,
+            throttled_windows: 0,
+            over_cap: false,
+        }
+    }
+
+    /// Next window edge for the kernel's window clamp.
+    pub fn next_at(&self) -> Cycle {
+        self.next_at
+    }
+
+    /// True when `now` has reached (or passed) a window edge.
+    pub fn due(&self, now: Cycle) -> bool {
+        now >= self.next_at
+    }
+
+    /// Close every window elapsed by `now` given the cumulative dynamic
+    /// energy accounted so far. A multi-window jump spreads the observed
+    /// delta evenly across the elapsed windows (the kernel's window
+    /// clamp keeps dense activity from straddling an edge unobserved, so
+    /// jumps carry at most one lump of fast-forwarded work — the same
+    /// discipline `sample_util` relies on).
+    pub fn sample(&mut self, now: Cycle, cum_dynamic_pj: f64) {
+        if now < self.next_at {
+            return;
+        }
+        let w = self.cfg.power_window;
+        let k = (now - self.next_at) / w + 1;
+        let delta = cum_dynamic_pj - self.last_pj;
+        let window_mw = delta * self.freq_ghz / (k * w) as f64 + self.cfg.static_mw;
+        self.windows += k;
+        self.last_window_mw = window_mw;
+        if window_mw > self.peak_mw {
+            self.peak_mw = window_mw;
+        }
+        self.over_cap = self.cfg.tdp_mw > 0.0 && window_mw > self.cfg.tdp_mw;
+        if self.over_cap {
+            self.throttled_windows += k;
+        }
+        self.last_pj = cum_dynamic_pj;
+        self.next_at += k * w;
+    }
+
+    /// Cumulative energy (dynamic + static accrued linearly) at `now`,
+    /// for metrics-timeline gauges.
+    pub fn cumulative_pj(&self, now: Cycle, cum_dynamic_pj: f64) -> f64 {
+        cum_dynamic_pj + self.cfg.static_pj(now, self.freq_ghz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cores(macs: u64, rd: u64, wr: u64) -> Vec<CoreStats> {
+        vec![CoreStats { macs, dram_read_bytes: rd, dram_write_bytes: wr, ..Default::default() }]
+    }
+
+    fn chans(reads: u64, writes: u64) -> Vec<ChannelStats> {
+        vec![ChannelStats { reads, writes, ..Default::default() }]
+    }
+
+    #[test]
+    fn default_is_off_and_typical_is_on() {
+        assert!(!EnergyConfig::default().enabled());
+        assert!(EnergyConfig::typical().enabled());
+        // Management knobs alone must not enable accounting.
+        let c = EnergyConfig { power_window: 1000, tdp_mw: 5000.0, ..Default::default() };
+        assert!(!c.enabled());
+    }
+
+    #[test]
+    fn json_roundtrip_and_optional_fields() {
+        let mut c = EnergyConfig::typical();
+        c.tdp_mw = 12_000.0;
+        let j = c.as_json().pretty();
+        let c2 = EnergyConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+        // Sparse config: unset coefficients are 0, power_window defaults.
+        let sparse = EnergyConfig::from_json(&Json::parse("{\"pj_per_mac\": 0.5}").unwrap()).unwrap();
+        assert_eq!(sparse.pj_per_mac, 0.5);
+        assert_eq!(sparse.pj_per_dram_access, 0.0);
+        assert_eq!(sparse.power_window, 10_000);
+        assert!(sparse.enabled());
+    }
+
+    #[test]
+    fn flit_accounting_matches_packet_sizes() {
+        // 8 B flits, 64 B granularity: 1 header flit + 9 payload flits.
+        assert_eq!(flits_per_access(64, 8), 1 + 9);
+        // 64 B flits (server NoC): one flit each way.
+        assert_eq!(flits_per_access(64, 64), 1 + 2);
+    }
+
+    #[test]
+    fn report_totals_add_up() {
+        let cfg = EnergyConfig {
+            pj_per_mac: 1.0,
+            pj_per_spad_read_byte: 0.5,
+            pj_per_spad_write_byte: 0.25,
+            pj_per_dram_access: 100.0,
+            pj_per_noc_flit_hop: 2.0,
+            static_mw: 1000.0,
+            power_window: 0,
+            tdp_mw: 0.0,
+        };
+        let r = EnergyReport::from_stats(
+            &cfg,
+            &cores(1000, 64, 128),
+            &chans(2, 1),
+            64,
+            8,
+            2000,
+            1.0,
+            None,
+        );
+        assert_eq!(r.mac_pj, 1000.0);
+        // MVIN 64 B written to spad at 0.25, MVOUT 128 B read at 0.5.
+        assert_eq!(r.spad_pj, 64.0 * 0.25 + 128.0 * 0.5);
+        assert_eq!(r.dram_pj, 300.0);
+        assert_eq!(r.noc_pj, (3 * 10) as f64 * 2.0);
+        // 1 mW at 1 GHz = 1 pJ/cycle.
+        assert_eq!(r.static_pj, 1000.0 * 2000.0);
+        assert_eq!(r.total_pj, r.mac_pj + r.spad_pj + r.dram_pj + r.noc_pj + r.static_pj);
+        assert!((r.avg_power_mw - r.total_pj / 2000.0).abs() < 1e-9);
+        // No meter: peak falls back to the average.
+        assert_eq!(r.peak_power_mw, r.avg_power_mw);
+        assert_eq!(r.power_windows, 0);
+    }
+
+    #[test]
+    fn meter_windows_and_peak() {
+        let mut cfg = EnergyConfig::typical();
+        cfg.power_window = 1000;
+        cfg.static_mw = 100.0;
+        cfg.tdp_mw = 0.0;
+        let mut m = EnergyMeter::new(cfg, 1.0);
+        assert_eq!(m.next_at(), 1000);
+        assert!(!m.due(999));
+        assert!(m.due(1000));
+        // First window: 5000 pJ over 1000 cycles at 1 GHz = 5000 mW dyn.
+        m.sample(1000, 5000.0);
+        assert_eq!(m.windows, 1);
+        assert!((m.last_window_mw - 5100.0).abs() < 1e-9);
+        assert_eq!(m.next_at(), 2000);
+        // Jump over 3 windows with 3000 more pJ: 1000 mW dyn per window.
+        m.sample(4999, 8000.0);
+        assert_eq!(m.windows, 4);
+        assert!((m.last_window_mw - 1100.0).abs() < 1e-9);
+        assert_eq!(m.next_at(), 5000);
+        assert!((m.peak_mw - 5100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn meter_tracks_cap_violations() {
+        let mut cfg = EnergyConfig::typical();
+        cfg.power_window = 100;
+        cfg.static_mw = 0.0;
+        cfg.tdp_mw = 50.0;
+        let mut m = EnergyMeter::new(cfg, 1.0);
+        m.sample(100, 10_000.0); // 100_000 mW >> cap
+        assert!(m.over_cap);
+        assert_eq!(m.throttled_windows, 1);
+        m.sample(200, 10_000.0); // idle window, back under
+        assert!(!m.over_cap);
+        assert_eq!(m.throttled_windows, 1);
+        assert_eq!(m.windows, 2);
+    }
+
+    #[test]
+    fn tenant_attribution_conserves_energy() {
+        let cfg = EnergyConfig::typical();
+        let r = EnergyReport::from_stats(
+            &cfg,
+            &cores(10_000, 4096, 2048),
+            &chans(64, 32),
+            64,
+            8,
+            50_000,
+            1.0,
+            None,
+        );
+        let work = vec![(7_500u64, 1_000u64), (2_500, 3_000)];
+        let per = attribute_tenants(&r, &work, 2);
+        assert_eq!(per.len(), 2);
+        let sum: f64 = per.iter().sum();
+        assert!(
+            (sum - r.total_pj).abs() < 1e-6 * r.total_pj,
+            "attribution must conserve total energy: {sum} vs {}",
+            r.total_pj
+        );
+        // Tenant 0 has 3x the MACs: it must carry more MAC+static energy.
+        assert!(per[0] > per[1] * 0.5);
+        // A tenant with no recorded work gets zero.
+        let per3 = attribute_tenants(&r, &work, 3);
+        assert_eq!(per3[2], 0.0);
+    }
+}

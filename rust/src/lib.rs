@@ -33,6 +33,9 @@
 //! - [`telemetry`] — deterministic observability: sim-time tracing
 //!   (Chrome trace-event export), bucket-edge timeline metrics, and
 //!   wall-clock kernel self-profiling; zero-cost when disabled.
+//! - [`energy`] — energy/power accounting over the simulator's exact
+//!   event counters (pJ-per-event coefficients, rolling-window power,
+//!   TDP-based dispatch throttling); zero-cost when unconfigured.
 //! - [`baseline`] — an Accel-sim-like fine-grained comparator and a
 //!   Gemmini-RTL-like cycle-exact reference core for validation.
 //! - [`runtime`] — PJRT-based functional execution of AOT-compiled XLA
@@ -42,6 +45,7 @@ pub mod baseline;
 pub mod config;
 pub mod core;
 pub mod dram;
+pub mod energy;
 pub mod graph;
 pub mod isa;
 pub mod lowering;

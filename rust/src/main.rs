@@ -22,7 +22,10 @@
 //!             --policy slo-slack enables SLO-slack (earliest-deadline)
 //!             tile scheduling; --policy slo-slack-preempt additionally
 //!             revokes dispatched-but-uncommitted tiles of slack-rich
-//!             requests when a deadline-critical one starves. --mode
+//!             requests when a deadline-critical one starves. --policy
+//!             power-cap gates tile dispatch while the rolling-window
+//!             power estimate exceeds the board TDP (needs --energy or an
+//!             energy-enabled config, plus --tdp-mw). --mode
 //!             continuous turns generative tenants (--decode-tokens > 0)
 //!             into an in-flight decode pool with iteration-level
 //!             batching; --prompt-max > 0 models prefill as real
@@ -56,7 +59,18 @@
 //! pre-refactor per-cycle loop kept as the equivalence baseline) and
 //! `--sim-threads N` (parallel single-simulation data plane: per-channel
 //! DRAM shards + per-core lanes on N threads, byte-identical to serial;
-//! default 1).
+//! default 1) and `--pool-spin N` (worker-pool spin budget before
+//! parking; wall-clock tuning only, results are byte-identical at any
+//! setting).
+//!
+//! Energy flags (`sim` and `serve`; all off by default — energy-off runs
+//! emit byte-identical reports to a pre-energy build):
+//!   --energy typical|off  enable energy accounting with the built-in
+//!                         per-event coefficients (or force it off over a
+//!                         config file's [energy] section)
+//!   --tdp-mw X            board TDP for the power-cap policy, in mW
+//!   --power-window N      rolling power window, in cycles (default 10000)
+//!   --static-mw X         static (leakage) power floor, in mW
 //!
 //! Telemetry flags (`sim` and `serve`; all off by default — the hot path
 //! then carries no telemetry state at all):
@@ -72,9 +86,10 @@
 
 use onnxim::baseline::rtl_ref;
 use onnxim::config::{NocModel, NpuConfig, ServeConfig, TenantLoadConfig};
+use onnxim::energy::EnergyConfig;
 use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
-use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
+use onnxim::scheduler::{Fcfs, Policy, PowerCap, SloSlack, Spatial, TimeShared};
 use onnxim::Cycle;
 use onnxim::serve::{run_serve_mode, run_serve_telemetry, TrafficGen};
 use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
@@ -128,6 +143,24 @@ fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
     if let Some(threads) = opts.get("sim-threads") {
         cfg.sim_threads = threads.parse::<usize>()?.max(1);
     }
+    if let Some(spin) = opts.get("pool-spin") {
+        cfg.pool_spin = spin.parse()?;
+    }
+    match opts.get("energy").map(String::as_str) {
+        None => {}
+        Some("typical") => cfg.energy = EnergyConfig::typical(),
+        Some("off") => cfg.energy = EnergyConfig::default(),
+        Some(other) => anyhow::bail!("unknown energy preset '{other}' (typical|off)"),
+    }
+    if let Some(tdp) = opts.get("tdp-mw") {
+        cfg.energy.tdp_mw = tdp.parse()?;
+    }
+    if let Some(w) = opts.get("power-window") {
+        cfg.energy.power_window = w.parse()?;
+    }
+    if let Some(s) = opts.get("static-mw") {
+        cfg.energy.static_mw = s.parse()?;
+    }
     Ok(cfg)
 }
 
@@ -171,21 +204,24 @@ fn write_telemetry_artifacts(
     Ok(())
 }
 
-/// Build a scheduling policy. `serve` carries the scenario + core clock
-/// so `slo-slack` can derive per-tenant SLO budgets in cycles; the other
+/// Build a scheduling policy. `serve` carries the scenario so
+/// `slo-slack` can derive per-tenant SLO budgets in cycles; the other
 /// subcommands have no deadline source, so `slo-slack` is rejected there
-/// rather than silently degenerating to FCFS.
+/// rather than silently degenerating to FCFS. `power-cap` is validated
+/// against the energy config: without an enabled meter and a reachable
+/// TDP the policy could never unthrottle (or never throttle), so a
+/// misconfiguration fails loudly here instead.
 fn make_policy(
     opts: &HashMap<String, String>,
-    num_cores: usize,
-    serve: Option<(&ServeConfig, f64)>,
+    cfg: &NpuConfig,
+    serve: Option<&ServeConfig>,
 ) -> anyhow::Result<Box<dyn Policy>> {
     Ok(match opts.get("policy").map(String::as_str) {
         None | Some("fcfs") => Box::new(Fcfs::new()),
         Some("time-shared") => Box::new(TimeShared::new()),
         Some(name @ ("slo-slack" | "slo-slack-preempt")) => {
             let slo_cycles: Vec<Cycle> = match serve {
-                Some((scfg, freq)) => scfg.slo_cycles(freq),
+                Some(scfg) => scfg.slo_cycles(cfg.core_freq_ghz),
                 None => anyhow::bail!(
                     "--policy {name} needs per-tenant SLOs and is only available on \
                      the `serve` subcommand (sim/trace requests carry no deadlines)"
@@ -197,6 +233,24 @@ fn make_policy(
                 Box::new(SloSlack::new(slo_cycles))
             }
         }
+        Some("power-cap") => {
+            let e = &cfg.energy;
+            if !e.enabled() || e.tdp_mw <= 0.0 {
+                anyhow::bail!(
+                    "--policy power-cap needs energy accounting and a board TDP \
+                     (--energy typical --tdp-mw <mw>, or an [energy] config section)"
+                );
+            }
+            if e.tdp_mw <= e.static_mw {
+                anyhow::bail!(
+                    "--tdp-mw {} is not above static power {} mW: the cap could never \
+                     unthrottle (static power alone exceeds it)",
+                    e.tdp_mw,
+                    e.static_mw
+                );
+            }
+            Box::new(PowerCap::new(Box::new(Fcfs::new())))
+        }
         Some("spatial") => {
             // --partition "0,1,1,1": tenant per core.
             let map: Vec<usize> = match opts.get("partition") {
@@ -204,7 +258,7 @@ fn make_policy(
                     .split(',')
                     .map(|x| x.trim().parse())
                     .collect::<Result<_, _>>()?,
-                None => (0..num_cores).map(|c| usize::from(c > 0)).collect(),
+                None => (0..cfg.num_cores).map(|c| usize::from(c > 0)).collect(),
             };
             Box::new(Spatial::new(map))
         }
@@ -220,7 +274,7 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
     let report_opt = optimize(&mut graph, OptLevel::Extended);
     println!("model: {}", summarize(&graph));
     println!("optimizer: {} rewrites", report_opt.total());
-    let policy = make_policy(&opts, cfg.num_cores, None)?;
+    let policy = make_policy(&opts, &cfg, None)?;
     println!(
         "config: {} ({} cores, {} NoC)",
         cfg.name,
@@ -239,6 +293,16 @@ fn cmd_sim(opts: HashMap<String, String>) -> anyhow::Result<()> {
     let report = sim.try_run(&mut NoDriver)?;
     let wall = t0.elapsed();
     println!("{}", report.summary());
+    if let Some(e) = &report.energy {
+        println!(
+            "energy: {:.3} mJ  avg {:.1} mW  peak {:.1} mW ({} windows, {} throttled)",
+            e.total_pj / 1e9,
+            e.avg_power_mw,
+            e.peak_power_mw,
+            e.power_windows,
+            e.throttled_windows
+        );
+    }
     println!(
         "simulation wall-clock: {:.2}s ({:.2}M cycles/s, {} control passes / {} dense steps)",
         wall.as_secs_f64(),
@@ -260,7 +324,7 @@ fn cmd_trace(opts: HashMap<String, String>) -> anyhow::Result<()> {
         .get("trace")
         .ok_or_else(|| anyhow::anyhow!("--trace <file.json> required"))?;
     let trace = Trace::load(path)?;
-    let policy = make_policy(&opts, cfg.num_cores, None)?;
+    let policy = make_policy(&opts, &cfg, None)?;
     let mut sim = Simulator::new(cfg, policy).with_kernel(kernel_mode(&opts)?);
     for e in &trace.entries {
         for _ in 0..e.count {
@@ -372,7 +436,7 @@ fn serve_scenario(opts: &HashMap<String, String>) -> anyhow::Result<ServeConfig>
 fn cmd_serve(opts: HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = load_config(&opts)?;
     let scfg = serve_scenario(&opts)?;
-    let policy = make_policy(&opts, cfg.num_cores, Some((&scfg, cfg.core_freq_ghz)))?;
+    let policy = make_policy(&opts, &cfg, Some(&scfg))?;
     eprintln!(
         "serving {} tenant(s) on '{}' for {} ms (seed {})",
         scfg.tenants.len(),

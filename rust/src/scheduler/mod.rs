@@ -15,7 +15,7 @@
 
 pub mod policy;
 
-pub use policy::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
+pub use policy::{Fcfs, Policy, PowerCap, SloSlack, Spatial, TimeShared};
 
 use crate::graph::Graph;
 use crate::lowering::{lower_node, AddressMap, JobRef, LoweringParams, Tile};
@@ -82,6 +82,13 @@ pub struct GlobalScheduler {
     /// requests ever submitted).
     started_below: usize,
     done_below: usize,
+    /// Per-tenant dispatched work — `(MACs, DMA bytes)` by tenant index —
+    /// for energy attribution. Maintained only when
+    /// [`set_track_tenant_work`](Self::set_track_tenant_work) enabled it
+    /// (the simulator does so together with the energy meter), so the
+    /// dispatch path pays nothing when energy accounting is off.
+    pub tenant_work: Vec<(u64, u64)>,
+    track_tenant_work: bool,
 }
 
 impl GlobalScheduler {
@@ -94,7 +101,22 @@ impl GlobalScheduler {
             next_base: 0,
             started_below: 0,
             done_below: 0,
+            tenant_work: Vec::new(),
+            track_tenant_work: false,
         }
+    }
+
+    /// Enable per-tenant `(MACs, DMA bytes)` dispatch accounting for
+    /// energy attribution. Off by default — dispatch stays free of the
+    /// per-tile instruction walk when nothing consumes the counters.
+    pub fn set_track_tenant_work(&mut self, on: bool) {
+        self.track_tenant_work = on;
+    }
+
+    /// Forward the power-cap throttle flag to the active policy (a no-op
+    /// for every policy except [`PowerCap`]).
+    pub fn set_throttled(&mut self, on: bool) {
+        self.policy.set_throttled(on);
     }
 
     /// Register a request arriving at `arrival`. Returns its id.
@@ -209,6 +231,15 @@ impl GlobalScheduler {
         let t = self.policy.pick(core_id, &mut self.requests, now);
         if let Some(ref tile) = t {
             self.requests[tile.job.request_id].tiles_in_flight += 1;
+            if self.track_tenant_work {
+                let tenant = self.requests[tile.job.request_id].tenant;
+                if self.tenant_work.len() <= tenant {
+                    self.tenant_work.resize(tenant + 1, (0, 0));
+                }
+                let w = &mut self.tenant_work[tenant];
+                w.0 += tile.macs();
+                w.1 += tile.dram_bytes();
+            }
         }
         t
     }
@@ -265,6 +296,14 @@ impl GlobalScheduler {
                     continue; // as urgent or more: keep it
                 }
                 if let Some(tile) = core.revoke_slot(slot) {
+                    if self.track_tenant_work {
+                        // Undo the dispatch-time accounting: the revoked
+                        // tile will be re-counted when re-dispatched.
+                        let tenant = self.requests[tile.job.request_id].tenant;
+                        let w = &mut self.tenant_work[tenant];
+                        w.0 -= tile.macs();
+                        w.1 -= tile.dram_bytes();
+                    }
                     let r = &mut self.requests[tile.job.request_id];
                     r.tiles_in_flight -= 1;
                     r.ready.push_front(tile);
@@ -477,6 +516,34 @@ mod tests {
             }
         }
         assert_eq!(s2.preempt(std::slice::from_mut(&mut core2), 0), 0);
+    }
+
+    #[test]
+    fn tenant_work_tracks_dispatch_and_undoes_revokes() {
+        // Off by default: dispatch leaves the counters untouched.
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.activate_arrivals(0);
+        let _ = s.pick_tile(0, 0).unwrap();
+        assert!(s.tenant_work.is_empty());
+
+        // On: every dispatched tile adds its (MACs, DMA bytes) to its
+        // tenant's bucket.
+        let mut s = sched();
+        s.set_track_tenant_work(true);
+        s.add_request(two_layer_graph(), 0, 0);
+        s.add_request(two_layer_graph(), 0, 2);
+        s.activate_arrivals(0);
+        let mut expect = vec![(0u64, 0u64); 3];
+        while let Some(t) = s.pick_tile(0, 0) {
+            let w = &mut expect[s.requests[t.job.request_id].tenant];
+            w.0 += t.macs();
+            w.1 += t.dram_bytes();
+            s.on_tile_done(t.job, 1);
+        }
+        assert_eq!(s.tenant_work, expect);
+        assert!(expect[0].0 > 0 && expect[2].0 > 0, "both tenants did MACs");
+        assert_eq!(expect[1], (0, 0), "tenant 1 never dispatched");
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub trait Policy {
     fn urgency(&self, _r: &Request) -> Option<Cycle> {
         None
     }
+
+    /// Power-cap hook: the simulator flips this each control pass from
+    /// the energy meter's rolling-window state (true while the last
+    /// closed window exceeded the board TDP). Only [`PowerCap`] reacts;
+    /// every other policy ignores it.
+    fn set_throttled(&mut self, _on: bool) {}
 }
 
 /// First-come-first-served across all active requests.
@@ -268,6 +274,49 @@ impl Policy for SloSlack {
     }
 }
 
+/// TDP enforcement wrapper: delegates every scheduling decision to an
+/// inner policy, but dispatches nothing while the simulator's rolling
+/// power window is over the configured board TDP (the throttle flag fed
+/// through [`Policy::set_throttled`] each control pass). Tiles already
+/// on cores keep executing — the cap gates *new* work, modeling a
+/// dispatch-level DVFS-ish governor rather than a hard clock gate, so
+/// power overshoot decays within a window or two of the cap trip.
+pub struct PowerCap {
+    inner: Box<dyn Policy>,
+    throttled: bool,
+}
+
+impl PowerCap {
+    pub fn new(inner: Box<dyn Policy>) -> Self {
+        PowerCap { inner, throttled: false }
+    }
+}
+
+impl Policy for PowerCap {
+    fn pick(&mut self, core_id: usize, requests: &mut [Request], now: Cycle) -> Option<Tile> {
+        if self.throttled {
+            return None;
+        }
+        self.inner.pick(core_id, requests, now)
+    }
+
+    fn name(&self) -> &'static str {
+        "power-cap"
+    }
+
+    fn preemptive(&self) -> bool {
+        self.inner.preemptive()
+    }
+
+    fn urgency(&self, r: &Request) -> Option<Cycle> {
+        self.inner.urgency(r)
+    }
+
+    fn set_throttled(&mut self, on: bool) {
+        self.throttled = on;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,6 +432,23 @@ mod tests {
         s.add_request(one_layer_graph("b"), 0, 0);
         s.activate_arrivals(0);
         assert_eq!(s.pick_tile(0, 0).unwrap().job.request_id, 0);
+    }
+
+    #[test]
+    fn power_cap_gates_dispatch_only_while_throttled() {
+        let mut s = sched_with(Box::new(PowerCap::new(Box::new(Fcfs::new()))));
+        s.add_request(one_layer_graph("a"), 0, 0);
+        s.activate_arrivals(0);
+        // Unthrottled: behaves exactly like the inner policy.
+        let t = s.pick_tile(0, 0).expect("dispatch passes through");
+        assert_eq!(t.job.request_id, 0);
+        // Over the cap: nothing dispatches even with ready tiles.
+        s.set_throttled(true);
+        assert!(s.has_ready_tiles());
+        assert!(s.pick_tile(0, 10).is_none());
+        // Back under: dispatch resumes.
+        s.set_throttled(false);
+        assert!(s.pick_tile(0, 20).is_some());
     }
 
     #[test]

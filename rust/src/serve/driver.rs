@@ -54,7 +54,7 @@ use crate::config::NpuConfig;
 use crate::graph::optimizer::{optimize, OptLevel};
 use crate::models::{self, DecodeGraphCache, PrefillGraphCache};
 use crate::scheduler::{GlobalScheduler, Policy};
-use crate::sim::{Driver, KernelMode, Simulator};
+use crate::sim::{Driver, KernelMode, SimReport, Simulator};
 use crate::telemetry::{GaugeRow, Telemetry, TelemetryConfig, TraceBuf, PID_REQUEST};
 use crate::util::rng::Rng;
 use crate::{Cycle, NEVER};
@@ -442,6 +442,7 @@ impl ServeDriver {
                 },
                 achieved_rps: ts.completed as f64 / duration_s,
                 goodput_rps: ts.within_slo as f64 / duration_s,
+                energy_pj: None,
             })
             .collect();
         SloReport {
@@ -452,6 +453,7 @@ impl ServeDriver {
             total_cycles,
             tenants,
             metrics: None,
+            energy: None,
         }
     }
 
@@ -715,6 +717,20 @@ impl crate::sim::kernel::Component for ServeDriver {
     }
 }
 
+/// Fold the simulator's energy accounting into the serving report:
+/// whole-board totals plus per-tenant shares attributed from the
+/// scheduler's dispatch-time work counters (MACs and DMA bytes per
+/// tenant). No-op for energy-off runs, leaving the report — and its JSON
+/// — byte-identical to a pre-energy build.
+fn fill_energy(report: &mut SloReport, rep: &SimReport, sim: &Simulator) {
+    let Some(e) = &rep.energy else { return };
+    let shares = crate::energy::attribute_tenants(e, &sim.sched.tenant_work, report.tenants.len());
+    for (t, pj) in report.tenants.iter_mut().zip(shares) {
+        t.energy_pj = Some(pj);
+    }
+    report.energy = Some(e.clone());
+}
+
 /// Run a full serving scenario: build the driver, simulate until the load
 /// drains, and return the SLO report.
 pub fn run_serve(cfg: NpuConfig, policy: Box<dyn Policy>, scfg: &ServeConfig) -> Result<SloReport> {
@@ -735,7 +751,9 @@ pub fn run_serve_mode(
     let mut driver = ServeDriver::new(scfg, freq)?;
     let mut sim = Simulator::new(cfg, policy).with_kernel(mode);
     let rep = sim.try_run(&mut driver)?;
-    Ok(driver.report(rep.total_cycles, &policy_name, scfg, freq))
+    let mut report = driver.report(rep.total_cycles, &policy_name, scfg, freq);
+    fill_energy(&mut report, &rep, &sim);
+    Ok(report)
 }
 
 /// [`run_serve_mode`] with telemetry attached: returns the SLO report
@@ -767,6 +785,7 @@ pub fn run_serve_telemetry(
     if let Some(t) = tel.as_deref_mut() {
         report.metrics = t.metrics.take();
     }
+    fill_energy(&mut report, &rep, &sim);
     Ok((report, tel))
 }
 

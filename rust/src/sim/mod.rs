@@ -36,6 +36,7 @@ pub mod sweep;
 use crate::config::NpuConfig;
 use crate::core::Core;
 use crate::dram::DramSystem;
+use crate::energy::EnergyMeter;
 use crate::lowering::LoweringParams;
 use crate::noc::{build_noc, IngressLane, Noc, NocKind};
 use crate::scheduler::{GlobalScheduler, Policy};
@@ -157,6 +158,11 @@ pub struct Simulator {
     /// Optional telemetry bundle (tracing / metrics / profiling). `None`
     /// by default: the hot path pays one predictable branch per pass.
     telemetry: Option<Box<Telemetry>>,
+    /// Optional energy meter, attached when `cfg.energy` has any
+    /// coefficient set (same nullable-pointer discipline as telemetry:
+    /// `None` keeps the hot path energy-free and reports byte-identical
+    /// to an energy-unaware run).
+    energy: Option<Box<EnergyMeter>>,
     /// Per-channel cumulative-bytes snapshot at the previous metrics
     /// sample; turns DRAM byte totals into per-bucket bandwidth gauges.
     last_chan_bytes: Vec<u64>,
@@ -168,7 +174,16 @@ impl Simulator {
         let noc =
             build_noc(&cfg.noc, cfg.num_cores, cfg.dram.channels, cfg.dram.access_granularity);
         let dram = DramSystem::new(&cfg.dram, cfg.core_freq_ghz);
-        let sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), policy);
+        let mut sched = GlobalScheduler::new(LoweringParams::from_config(&cfg), policy);
+        let energy = cfg
+            .energy
+            .enabled()
+            .then(|| Box::new(EnergyMeter::new(cfg.energy.clone(), cfg.core_freq_ghz)));
+        if energy.is_some() {
+            // Per-tenant (MACs, DMA bytes) attribution rides along with
+            // the meter; the dispatch path stays untouched otherwise.
+            sched.set_track_tenant_work(true);
+        }
         let n = cfg.num_cores;
         let channels = cfg.dram.channels;
         let max_cycles = cfg.max_cycles;
@@ -192,6 +207,7 @@ impl Simulator {
             iterations: 0,
             dense_ticks: 0,
             telemetry: None,
+            energy,
             last_chan_bytes: vec![0; channels],
         }
     }
@@ -272,7 +288,11 @@ impl Simulator {
         let profiling = self.telemetry.as_deref().is_some_and(|t| t.prof.is_some());
         // The data-plane worker pool lives for the whole run (persistent
         // threads; per-phase broadcasts are two atomics, not spawns).
-        let mut pool = (self.sim_threads > 1).then(|| WorkerPool::new(self.sim_threads - 1));
+        // The spin budget is wall-clock tuning only (config knob, then
+        // ONNXIM_POOL_SPIN, then default) — results are byte-identical
+        // at any setting.
+        let mut pool = (self.sim_threads > 1)
+            .then(|| WorkerPool::with_spin(self.sim_threads - 1, self.cfg.pool_spin));
         loop {
             let now = self.clock;
             if self.max_cycles > 0 && now > self.max_cycles {
@@ -290,6 +310,18 @@ impl Simulator {
             // 1. Activate arrivals and dispatch tiles to free cores. A
             //    preemptive policy may first revoke uncommitted tiles of
             //    slack-rich requests so urgent work lands this cycle.
+            // Power-cap control: feed the meter's rolling-window verdict
+            // to the policy before dispatch. The flag only changes at
+            // power-window edges (sample_energy below), and while it
+            // blocks dispatch with ready tiles waiting, next_cycle's
+            // ready-and-wanting forcing steps both kernel modes
+            // cycle-by-cycle — so throttle decisions land at identical
+            // cycles in windowed and reference mode.
+            if let Some(m) = self.energy.as_deref() {
+                if m.cfg.tdp_mw > 0.0 {
+                    self.sched.set_throttled(m.over_cap);
+                }
+            }
             self.sched.activate_arrivals(now);
             let revoked = self.sched.preempt(&mut self.cores, now);
             if revoked > 0 {
@@ -352,6 +384,13 @@ impl Simulator {
                             // cycles with identical component state.
                             u = u.min(m.next_at());
                         }
+                        if let Some(m) = self.energy.as_deref() {
+                            // Power windows close on exact edges too:
+                            // rolling-window power — and the cap throttle
+                            // derived from it — is identical across
+                            // kernel modes and thread counts.
+                            u = u.min(m.next_at());
+                        }
                         u.max(now + 1)
                     }
                 }
@@ -401,6 +440,7 @@ impl Simulator {
             //    `stop`, interpolated across event-horizon jumps), then
             //    the metrics timeline under the same edge discipline.
             self.sample_util(stop);
+            self.sample_energy(stop);
             self.sample_metrics(stop, driver);
             if let (Some(p0), Some(d0), Some(d1)) = (pass_t0, dp_t0, dp_t1) {
                 let tail = d1.elapsed();
@@ -449,6 +489,39 @@ impl Simulator {
         }
     }
 
+    /// Cumulative dynamic energy in pJ over all cores and channels, from
+    /// the exact event counters in fixed index order — a pure f64 fold,
+    /// byte-deterministic whenever the counters are. 0.0 with no meter.
+    fn dynamic_pj(&self) -> f64 {
+        let Some(m) = self.energy.as_deref() else { return 0.0 };
+        let gran = self.cfg.dram.access_granularity;
+        let flit = self.cfg.noc.flit_bytes;
+        let mut pj = 0.0;
+        for c in &self.cores {
+            pj += m.cfg.core_pj(&c.stats);
+        }
+        for ch in 0..self.dram.num_channels() {
+            pj += m.cfg.channel_pj(&self.dram.channel_stats(ch), gran, flit);
+        }
+        pj
+    }
+
+    /// Close every power window elapsed by `stop`. The counters are read
+    /// only at window edges (the `until` clamp pins control passes to
+    /// them), so the dense plane pays nothing per cycle for energy
+    /// accounting; event-horizon jumps over several windows interpolate
+    /// like [`Simulator::sample_util`].
+    fn sample_energy(&mut self, now: Cycle) {
+        let due = self.energy.as_deref().is_some_and(|m| m.due(now));
+        if !due {
+            return;
+        }
+        let pj = self.dynamic_pj();
+        if let Some(m) = self.energy.as_deref_mut() {
+            m.sample(now, pj);
+        }
+    }
+
     /// Sample the metrics gauges if `stop` reached a bucket edge. The
     /// window clamp in `try_run` guarantees both kernel modes arrive
     /// here at the same cycles with the same component state, so the
@@ -472,6 +545,13 @@ impl Simulator {
             let total = self.dram.channel_bytes(ch);
             row.set(&format!("chan{ch}_bytes"), (total - *last) as f64);
             *last = total;
+        }
+        if let Some(m) = self.energy.as_deref() {
+            // Most recently closed rolling-window power, and cumulative
+            // energy at this edge (sample_energy ran just before, so a
+            // shared edge reads the window closed at this very cycle).
+            row.set("power_mw", m.last_window_mw);
+            row.set("energy_pj", m.cumulative_pj(now, self.dynamic_pj()));
         }
         driver.sample_gauges(now, &mut row);
         if let Some(m) = self.telemetry.as_deref_mut().and_then(|t| t.metrics.as_mut()) {
@@ -1019,6 +1099,7 @@ mod tests {
         assert_eq!(rw.total_macs, rr.total_macs);
         assert_eq!(rw.dram_bytes, rr.dram_bytes);
         assert_eq!(rw.request_latency, rr.request_latency);
+        assert_eq!(rw.energy, rr.energy, "energy reports diverged");
         assert_eq!(w.util_timeline(), r.util_timeline(), "util timelines diverged");
         // The windowed kernel must actually be doing less per simulated
         // cycle: fewer control-plane passes than dense steps.
@@ -1166,6 +1247,55 @@ mod tests {
         let golden = run(KernelMode::Windowed, 1);
         assert_eq!(golden, run(KernelMode::Reference, 1), "kernel modes diverged");
         assert_eq!(golden, run(KernelMode::Windowed, 4), "thread counts diverged");
+    }
+
+    #[test]
+    fn energy_report_agrees_across_kernels_and_threads() {
+        let mk = || {
+            let mut cfg = NpuConfig::mobile();
+            cfg.energy = crate::energy::EnergyConfig::typical();
+            cfg.energy.power_window = 2_000;
+            let mut sim = Simulator::new(cfg, Box::new(Fcfs::new()));
+            // Staggered arrivals force event-horizon jumps across power
+            // windows — the interpolation path must stay deterministic.
+            sim.add_request(matmul_graph("a", 128, 256, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 64, 64, 64), 30_000, 1);
+            sim
+        };
+        assert_modes_agree(&mk);
+        assert_threads_agree(&mk);
+        let mut s = mk();
+        let rep = s.run(&mut NoDriver);
+        let e = rep.energy.expect("energy enabled -> report present");
+        // MAC energy is exact: every MAC is counted.
+        assert!((e.mac_pj - rep.total_macs as f64 * 0.8).abs() < 1e-6 * e.mac_pj);
+        assert!(e.dram_pj > 0.0 && e.noc_pj > 0.0 && e.spad_pj > 0.0);
+        assert!(e.power_windows > 0, "rolling windows must have closed");
+        assert!(e.total_pj > 0.0 && e.peak_power_mw > 0.0);
+        // Per-tenant work was tracked alongside the meter: dispatched
+        // MACs match the simulated MACs exactly, and dispatched DMA
+        // bytes bound the DRAM traffic from below (the DMA engine rounds
+        // each transfer up to whole access-granularity requests).
+        let macs: u64 = s.sched.tenant_work.iter().map(|w| w.0).sum();
+        assert_eq!(macs, rep.total_macs);
+        let bytes: u64 = s.sched.tenant_work.iter().map(|w| w.1).sum();
+        assert!(bytes > 0 && bytes <= rep.dram_bytes, "bytes {bytes} vs {}", rep.dram_bytes);
+    }
+
+    #[test]
+    fn pool_spin_setting_does_not_change_results() {
+        // The spin budget trades wake latency for idle CPU; simulated
+        // results must be byte-identical at any setting (here: the
+        // pathological 1-spin budget vs the default, both at 4 threads).
+        let run = |spin: u32| {
+            let mut cfg = NpuConfig::mobile();
+            cfg.pool_spin = spin;
+            let mut sim = Simulator::new(cfg, Box::new(Fcfs::new())).with_sim_threads(4);
+            sim.add_request(matmul_graph("a", 128, 256, 128), 0, 0);
+            sim.add_request(matmul_graph("b", 64, 128, 64), 5_000, 1);
+            format!("{:?}", sim.run(&mut NoDriver))
+        };
+        assert_eq!(run(0), run(1), "spin budget leaked into simulated results");
     }
 
     #[test]

@@ -24,11 +24,29 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// Spins before a worker parks while waiting for the next broadcast.
-/// Dense-plane phases arrive back-to-back, so the common case is a hit
-/// within a few hundred spins; parking only happens across control-plane
-/// gaps and run boundaries.
+/// Default spins before a worker parks while waiting for the next
+/// broadcast. Dense-plane phases arrive back-to-back, so the common case
+/// is a hit within a few hundred spins; parking only happens across
+/// control-plane gaps and run boundaries. Control-plane-heavy serving
+/// workloads can shrink the budget (cheaper idle CPU, ~1 ms wake
+/// latency on each dense-phase restart) or grow it via
+/// `ONNXIM_POOL_SPIN` / `NpuConfig::pool_spin`; the `pool_spins` /
+/// `pool_parks` profile counters show which regime a run is in. The
+/// setting is pure wall-clock tuning — simulated results are
+/// byte-identical at every value.
 const SPIN_LIMIT: u32 = 20_000;
+
+/// Resolve the spin budget: an explicit nonzero `cfg` value wins,
+/// otherwise `ONNXIM_POOL_SPIN` (parsed as u32), otherwise the default.
+pub fn spin_budget(cfg: u32) -> u32 {
+    if cfg > 0 {
+        return cfg;
+    }
+    std::env::var("ONNXIM_POOL_SPIN")
+        .ok()
+        .and_then(|v| v.trim().parse::<u32>().ok())
+        .unwrap_or(SPIN_LIMIT)
+}
 
 /// Type-erased pointer to the broadcast task. The pointee is only
 /// dereferenced between the epoch observation and the done-counter
@@ -50,6 +68,9 @@ struct Shared {
     /// First worker panic of the current broadcast (re-raised by main).
     panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     stop: AtomicBool,
+    /// Spin budget for the worker wait loop (immutable after pool
+    /// construction; see [`spin_budget`]).
+    spin_limit: u32,
     /// Cumulative wait-loop spin iterations across all workers (kernel
     /// self-profiling; flushed once per observed broadcast, so the hot
     /// spin loop itself stays free of shared-cache traffic).
@@ -70,13 +91,23 @@ impl WorkerPool {
     /// Spawn `workers` background threads. The caller participates in
     /// every broadcast as part 0, so total parallelism is `workers + 1`;
     /// `WorkerPool::new(0)` degenerates to serial execution on the caller.
+    /// The spin budget comes from `ONNXIM_POOL_SPIN` or the default; use
+    /// [`WorkerPool::with_spin`] to set it explicitly.
     pub fn new(workers: usize) -> Self {
+        Self::with_spin(workers, spin_budget(0))
+    }
+
+    /// Spawn `workers` background threads with an explicit wait-loop spin
+    /// budget (0 falls back to env/default resolution — see
+    /// [`spin_budget`]).
+    pub fn with_spin(workers: usize, spin: u32) -> Self {
         let shared = Arc::new(Shared {
             epoch: AtomicU64::new(0),
             done: AtomicU64::new(0),
             task: Mutex::new(None),
             panic: Mutex::new(None),
             stop: AtomicBool::new(false),
+            spin_limit: spin_budget(spin),
             spins: AtomicU64::new(0),
             parks: AtomicU64::new(0),
         });
@@ -246,7 +277,7 @@ fn worker_loop(shared: &Shared, part: usize) {
                 break;
             }
             spins = spins.wrapping_add(1);
-            if spins < SPIN_LIMIT {
+            if spins < shared.spin_limit {
                 std::hint::spin_loop();
             } else {
                 // Parked workers are woken by the next publish (or stop);
@@ -350,6 +381,31 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), pool.parts());
+    }
+
+    #[test]
+    fn tiny_spin_budget_parks_but_stays_correct() {
+        // A 1-spin budget forces the park path on essentially every wait;
+        // results must be unchanged (the budget is wall-clock-only).
+        let mut pool = WorkerPool::with_spin(2, 1);
+        let mut items = vec![0u64; 100];
+        for _ in 0..20 {
+            pool.for_each_mut(&mut items, |_, x| *x += 1);
+        }
+        assert!(items.iter().all(|&x| x == 20));
+        let (_, parks) = pool.occupancy();
+        assert!(parks > 0, "1-spin budget should park while idle");
+    }
+
+    #[test]
+    fn spin_budget_resolution_order() {
+        // Explicit config value wins outright (no env read needed).
+        assert_eq!(spin_budget(123), 123);
+        // 0 falls back to env/default; with the env var unset in the
+        // test environment this is the built-in default.
+        if std::env::var("ONNXIM_POOL_SPIN").is_err() {
+            assert_eq!(spin_budget(0), SPIN_LIMIT);
+        }
     }
 
     #[test]

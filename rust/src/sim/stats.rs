@@ -5,6 +5,7 @@
 use super::Simulator;
 use crate::core::CoreStats;
 use crate::dram::ChannelStats;
+use crate::energy::EnergyReport;
 use crate::telemetry::MetricsTimeline;
 
 /// Final report of one simulation.
@@ -27,6 +28,10 @@ pub struct SimReport {
     /// via [`Simulator::take_telemetry`], not by `collect` — the
     /// simulator keeps ownership of live telemetry until detached.
     pub metrics: Option<MetricsTimeline>,
+    /// Energy totals and power summary, when `cfg.energy` was enabled.
+    /// `None` (and absent from every serialization) otherwise — an
+    /// energy-off run's report is byte-identical to a pre-energy build.
+    pub energy: Option<EnergyReport>,
 }
 
 impl SimReport {
@@ -40,6 +45,22 @@ impl SimReport {
         let mean_core_util = busy as f64 / (total_cycles as f64 * core.len() as f64);
         let peak_bytes = sim.cfg.dram.bandwidth_gbps / sim.cfg.core_freq_ghz * total_cycles as f64;
         let mean_dram_util = dram_bytes as f64 / peak_bytes;
+        // Energy from the final counters; window/peak figures from the
+        // meter. A trailing partial window is not closed — its energy is
+        // in the totals but not in the windowed peak (documented on
+        // `EnergyReport::peak_power_mw`).
+        let energy = sim.energy.as_deref().map(|m| {
+            EnergyReport::from_stats(
+                &m.cfg,
+                &core,
+                &dram,
+                sim.cfg.dram.access_granularity,
+                sim.cfg.noc.flit_bytes,
+                total_cycles,
+                sim.cfg.core_freq_ghz,
+                Some(m),
+            )
+        });
         SimReport {
             total_cycles,
             requests_completed: sim
@@ -58,6 +79,7 @@ impl SimReport {
             mean_core_util,
             mean_dram_util,
             metrics: None,
+            energy,
         }
     }
 
@@ -128,6 +150,8 @@ mod tests {
         // Traffic accounted by DRAM must match (reads+writes) * 64B.
         let rw: u64 = r.dram.iter().map(|d| d.reads + d.writes).sum();
         assert_eq!(r.dram_bytes, rw * 64);
+        // Energy accounting never configured: no energy section at all.
+        assert!(r.energy.is_none());
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Statistics helpers: percentiles, mean absolute error, correlation,
 //! and a fixed-width table printer for the benchmark harness output.
 
-/// Percentile (nearest-rank, p in [0,100]) of an unsorted slice.
+/// Percentile (nearest-rank, p in [0,100]) of an unsorted slice: the
+/// smallest value such that at least `ceil(p/100 * N)` of the samples are
+/// less than or equal to it. `p = 0` returns the minimum, `p = 100` the
+/// maximum, and a single-element slice returns that element for every `p`.
 pub fn percentile(values: &[f64], p: f64) -> f64 {
     assert!(!values.is_empty(), "percentile of empty slice");
     let mut v = values.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
 }
 
 pub fn mean(values: &[f64]) -> f64 {
@@ -17,22 +20,31 @@ pub fn mean(values: &[f64]) -> f64 {
     values.iter().sum::<f64>() / values.len() as f64
 }
 
-/// Mean absolute percentage error of `model` against `reference`.
+/// Mean absolute percentage error of `model` against `reference`, over
+/// the samples whose reference is nonzero. A zero reference has no
+/// defined percentage error, so such samples are skipped rather than
+/// poisoning the whole mean with inf/NaN; if *every* reference sample is
+/// zero the result is NaN (no defined MAPE at all).
 pub fn mape(model: &[f64], reference: &[f64]) -> f64 {
     assert_eq!(model.len(), reference.len());
     assert!(!model.is_empty());
-    let s: f64 = model
-        .iter()
-        .zip(reference)
-        .map(|(m, r)| ((m - r) / r).abs())
-        .sum();
-    100.0 * s / model.len() as f64
+    let mut s = 0.0;
+    let mut n = 0usize;
+    for (m, r) in model.iter().zip(reference) {
+        if *r != 0.0 {
+            s += ((m - r) / r).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return f64::NAN;
+    }
+    100.0 * s / n as f64
 }
 
 /// Pearson correlation coefficient.
 pub fn correlation(x: &[f64], y: &[f64]) -> f64 {
     assert_eq!(x.len(), y.len());
-    let n = x.len() as f64;
     let (mx, my) = (mean(x), mean(y));
     let mut cov = 0.0;
     let mut vx = 0.0;
@@ -45,7 +57,7 @@ pub fn correlation(x: &[f64], y: &[f64]) -> f64 {
     if vx == 0.0 || vy == 0.0 {
         return 0.0;
     }
-    cov / (vx * vy).sqrt() * (n / n) // n cancels in the ratio
+    cov / (vx * vy).sqrt()
 }
 
 /// Fixed-width table printer for benchmark output: prints a header row and
@@ -111,6 +123,27 @@ mod tests {
     }
 
     #[test]
+    fn percentile_boundaries() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // Nearest-rank: rank = ceil(p/100 * N), clamped to [1, N].
+        assert_eq!(percentile(&v, 0.0), 1.0, "p=0 is the minimum");
+        assert_eq!(percentile(&v, 100.0), 100.0, "p=100 is the maximum");
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        // ceil rounds partial ranks UP: p=0.5 over 100 samples -> rank 1.
+        assert_eq!(percentile(&v, 0.5), 1.0);
+        assert_eq!(percentile(&v, 1.0), 1.0);
+        assert_eq!(percentile(&v, 1.1), 2.0);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0, "p={p}");
+        }
+    }
+
+    #[test]
     fn mape_zero_for_identical() {
         let v = vec![1.0, 2.0, 3.0];
         assert_eq!(mape(&v, &v), 0.0);
@@ -119,6 +152,16 @@ mod tests {
     #[test]
     fn mape_computes_percent() {
         assert!((mape(&[110.0], &[100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mape_skips_zero_reference_samples() {
+        // The zero-reference sample contributes nothing; the mean runs
+        // over the one valid sample only (pre-fix this returned inf).
+        let m = mape(&[5.0, 110.0], &[0.0, 100.0]);
+        assert!((m - 10.0).abs() < 1e-9, "got {m}");
+        // All references zero: no defined MAPE at all.
+        assert!(mape(&[1.0, 2.0], &[0.0, 0.0]).is_nan());
     }
 
     #[test]
