@@ -76,6 +76,20 @@ def check(cur, base):
             lines.append(f"WARN (advisory): parallel data plane speedup {s:.2f}x is below the "
                          f"{min_par}x target on this runner; not failing the job")
 
+    # Sharded NoC tick: same ADVISORY policy — byte-identity across
+    # thread counts is the hard bail inside the bench binary; the speedup
+    # is wall-clock and runner-dependent.
+    noc = cur.get("noc_parallel")
+    if noc is not None:
+        min_noc = base.get("noc_parallel", {}).get("min_speedup", 1.0)
+        s = noc["noc_parallel_speedup"]
+        lines.append(f"noc parallel ({noc['config']}): serial {noc['serial_sec']:.2f}s, "
+                     f"4t {noc['threads4_sec']:.2f}s, speedup {s:.2f}x "
+                     f"(advisory target >= {min_noc}x)")
+        if s < min_noc:
+            lines.append(f"WARN (advisory): sharded-NoC speedup {s:.2f}x is below the "
+                         f"{min_noc}x target on this runner; not failing the job")
+
     # Tracing overhead: ADVISORY, same noisy-runner policy as above. The
     # hard guarantee (telemetry off => no telemetry state at all) is
     # enforced by the relative gates running untraced; this just surfaces

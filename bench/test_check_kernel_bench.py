@@ -17,7 +17,8 @@ from check_kernel_bench import baseline_snippet, check  # noqa: E402
 
 
 def bench_result(dense_speedup=1.5, windowed_cps=2_000_000.0, sweep_speedup=2.0,
-                 sweep_threads=4, par_speedup=1.8, trace_overhead=5.0):
+                 sweep_threads=4, par_speedup=1.8, noc_par_speedup=1.5,
+                 trace_overhead=5.0):
     """A healthy BENCH_kernel.json document, fields overridable per test."""
     return {
         "schema": 1,
@@ -37,6 +38,12 @@ def bench_result(dense_speedup=1.5, windowed_cps=2_000_000.0, sweep_speedup=2.0,
             "threads2_sec": 0.7,
             "threads4_sec": 1.0 / par_speedup,
             "parallel_dataplane_speedup": par_speedup,
+        },
+        "noc_parallel": {
+            "config": "server-crossbar",
+            "serial_sec": 1.0,
+            "threads4_sec": 1.0 / noc_par_speedup,
+            "noc_parallel_speedup": noc_par_speedup,
         },
         "sweep": {
             "points": 8,
@@ -61,6 +68,7 @@ def baseline(windowed_cps=0):
         "sweep": {"min_speedup": 1.1},
         "max_regression_frac": 0.3,
         "parallel_dataplane": {"min_speedup": 1.0},
+        "noc_parallel": {"min_speedup": 1.0},
     }
 
 
@@ -115,6 +123,14 @@ class CheckTests(unittest.TestCase):
         self.assertTrue(any("WARN (advisory)" in ln and "data plane" in ln
                             for ln in lines))
 
+    def test_noc_parallel_is_advisory(self):
+        # Below-target sharded-NoC speedup warns but never fails (same
+        # noisy-runner policy as the dataplane gate).
+        lines, failures = check(bench_result(noc_par_speedup=0.4), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("WARN (advisory)" in ln and "NoC" in ln
+                            for ln in lines))
+
     def test_tracing_overhead_is_advisory(self):
         lines, failures = check(bench_result(trace_overhead=60.0), baseline())
         self.assertEqual(failures, [])
@@ -126,6 +142,7 @@ class CheckTests(unittest.TestCase):
         # gate on the required comparisons.
         cur = bench_result()
         del cur["parallel_dataplane"]
+        del cur["noc_parallel"]
         del cur["tracing"]
         _, failures = check(cur, baseline())
         self.assertEqual(failures, [])

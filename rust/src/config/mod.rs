@@ -460,7 +460,16 @@ impl NpuConfig {
                     "hbm2" => DramDevice::Hbm2,
                     other => anyhow::bail!("unknown dram device '{other}'"),
                 },
-                channels: dj.req("channels")?.as_usize()?,
+                channels: {
+                    let ch = dj.req("channels")?.as_usize()?;
+                    if !ch.is_power_of_two() {
+                        anyhow::bail!(
+                            "dram.channels must be a power of two, got {ch}: the IPOLY \
+                             channel hash and the crossbar NoC route by channel bits"
+                        );
+                    }
+                    ch
+                },
                 banks_per_channel: dj.req("banks_per_channel")?.as_usize()?,
                 row_bytes: dj.req("row_bytes")?.as_u64()?,
                 bandwidth_gbps: dj.req("bandwidth_gbps")?.as_f64()?,
@@ -522,6 +531,26 @@ mod tests {
         assert_eq!(c2.systolic_width, c.systolic_width);
         assert_eq!(c2.dram.channels, c.dram.channels);
         assert_eq!(c2.sim_threads, 1, "default must stay serial");
+    }
+
+    /// The headline PR-8 bugfix's guard: before `channel_of_addr`, a
+    /// 3-channel config sailed through load and the crossbar's
+    /// `trailing_zeros`-based hash silently misrouted packets in release
+    /// builds. Now the loader refuses with an actionable message.
+    #[test]
+    fn non_power_of_two_dram_channels_rejected_at_load() {
+        for bad in [3usize, 6, 12] {
+            let mut c = NpuConfig::server();
+            c.dram.channels = bad;
+            let err = NpuConfig::from_json(&Json::parse(&c.to_json()).unwrap())
+                .expect_err("non-power-of-two channel count must fail to load")
+                .to_string();
+            assert!(
+                err.contains("dram.channels must be a power of two"),
+                "unhelpful error: {err}"
+            );
+            assert!(err.contains(&format!("got {bad}")), "error should name the value: {err}");
+        }
     }
 
     #[test]

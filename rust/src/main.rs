@@ -46,9 +46,11 @@
 //!   bench kernel  Event-kernel micro-benchmark: windowed vs reference
 //!             kernel on a dense-contention workload, the parallel
 //!             single-sim data plane (--sim-threads 1/2/4 on a
-//!             16-channel config), and a parallel vs serial 8-point
-//!             serve sweep. Asserts byte-identical results on all three
-//!             comparisons and writes a JSON summary:
+//!             16-channel config), the sharded crossbar-NoC tick
+//!             (--sim-threads 1 vs 4 on the server crossbar config),
+//!             and a parallel vs serial 8-point serve sweep. Asserts
+//!             byte-identical results on all four comparisons and
+//!             writes a JSON summary:
 //!             onnxim bench kernel [--out BENCH_kernel.json] [--threads N]
 //!   validate  Core-model validation vs the RTL reference (Fig. 3b).
 //!   verify    Load artifacts/ and check functional numerics (L1/L2/L3).
@@ -58,8 +60,9 @@
 //! `--kernel windowed|reference` (main-loop strategy; `reference` is the
 //! pre-refactor per-cycle loop kept as the equivalence baseline) and
 //! `--sim-threads N` (parallel single-simulation data plane: per-channel
-//! DRAM shards + per-core lanes on N threads, byte-identical to serial;
-//! default 1) and `--pool-spin N` (worker-pool spin budget before
+//! DRAM shards + per-core lanes + crossbar output-port arbitration on N
+//! threads, byte-identical to serial; default 1) and `--pool-spin N`
+//! (worker-pool spin budget before
 //! parking; wall-clock tuning only, results are byte-identical at any
 //! setting).
 //!
@@ -560,7 +563,7 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench kernel` — four fixed workloads with built-in equivalence
+/// `bench kernel` — five fixed workloads with built-in equivalence
 /// checks:
 ///
 /// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
@@ -572,14 +575,20 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
 ///    memory pressure): one simulation at `--sim-threads` 1, 2 and 4.
 ///    Reports must be byte-identical; the speedup is the per-channel
 ///    shard / per-core lane payoff (`parallel_dataplane_speedup`).
-/// 3. **Serve sweep** (8 offered-rate points): the parallel sweep runner
+/// 3. **Sharded NoC** (the server config again, with the flit-level
+///    crossbar NoC): `--sim-threads` 1 vs 4, reports byte-identical; the
+///    speedup (`noc_parallel_speedup`) isolates the parallel output-port
+///    arbitration on the one config whose switches clear the sharding
+///    threshold.
+/// 4. **Serve sweep** (8 offered-rate points): the parallel sweep runner
 ///    vs serial execution of the same points. JSON reports must be
 ///    byte-identical; the speedup is bounded by available cores.
-/// 4. **Tracing overhead**: workload 1 again with the sim-time tracer
+/// 5. **Tracing overhead**: workload 1 again with the sim-time tracer
 ///    recording; reports `trace_overhead_pct` against the untraced
 ///    windowed baseline (`bench/check_kernel_bench.py` warns when it
-///    regresses). With `--profile`, a further profiled run writes
-///    `PROFILE_kernel.json`.
+///    regresses). With `--profile`, a further profiled run (metrics
+///    bucket enabled, so the allocation-arena counters see live gauge
+///    sampling) writes `PROFILE_kernel.json`.
 fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
     use onnxim::graph::{Activation, Graph, OpKind};
 
@@ -653,7 +662,34 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
          -> {par_speedup:.2}x, reports byte-identical"
     );
 
-    // --- Workload 3: serial vs parallel 8-point serve sweep. ---
+    // --- Workload 3: sharded crossbar NoC — the server config with the
+    //     flit-level crossbar, --sim-threads 1 vs 4. The 4×16 / 16×4
+    //     switches clear the crossbar's sharding threshold, so this
+    //     isolates the parallel output-port arbitration payoff on top of
+    //     the lane/channel shards. Reports must be byte-identical. ---
+    let noc_run = |threads: usize| -> anyhow::Result<(f64, String)> {
+        let mut cfg = NpuConfig::server().with_crossbar_noc();
+        cfg.sim_threads = threads;
+        let mut sim = Simulator::new(cfg, Box::new(Spatial::new(vec![0, 1, 1, 1])));
+        sim.add_request(matmul("gemv", 1, 4096, 4096), 0, 0);
+        sim.add_request(matmul("hog", 1536, 1536, 1536), 0, 1);
+        let t0 = Instant::now();
+        let report = sim.try_run(&mut NoDriver)?;
+        Ok((t0.elapsed().as_secs_f64(), format!("{report:?}")))
+    };
+    eprintln!("bench kernel: sharded crossbar NoC (server), --sim-threads 1 vs 4...");
+    let (noc1_s, noc1_fp) = noc_run(1)?;
+    let (noc4_s, noc4_fp) = noc_run(4)?;
+    if noc4_fp != noc1_fp {
+        anyhow::bail!("sharded NoC tick diverged from serial (fingerprint mismatch)");
+    }
+    let noc_speedup = noc1_s / noc4_s.max(1e-9);
+    eprintln!(
+        "  serial {noc1_s:.3}s, 4 threads {noc4_s:.3}s \
+         -> {noc_speedup:.2}x, reports byte-identical"
+    );
+
+    // --- Workload 4: serial vs parallel 8-point serve sweep. ---
     let rates =
         [5_000.0, 10_000.0, 20_000.0, 30_000.0, 40_000.0, 60_000.0, 80_000.0, 100_000.0];
     let scenario = |rate: f64| -> ServeConfig {
@@ -690,7 +726,7 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
          -> {sweep_speedup:.2}x, results byte-identical"
     );
 
-    // --- Workload 4: tracing overhead — the dense-contention run again,
+    // --- Workload 5: tracing overhead — the dense-contention run again,
     //     with the sim-time tracer recording. The untraced baseline is
     //     workload 1's windowed time; telemetry-off runs carry no
     //     telemetry state at all, so that baseline is the true zero. ---
@@ -701,7 +737,10 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 .with_telemetry(TelemetryConfig {
                     trace: true,
                     trace_mem: false,
-                    metrics_bucket: 0,
+                    // The profiled run samples the metrics timeline too,
+                    // so PROFILE_kernel.json's arena counters reflect
+                    // live gauge-row recycling, not an idle metrics path.
+                    metrics_bucket: if profile { 2_000 } else { 0 },
                     profile,
                 });
         sim.add_request(matmul("gemv", 1, 2048, 2048), 0, 0);
@@ -756,6 +795,15 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 ("threads2_sec", Json::num(par2_s)),
                 ("threads4_sec", Json::num(par4_s)),
                 ("parallel_dataplane_speedup", Json::num(par_speedup)),
+            ]),
+        ),
+        (
+            "noc_parallel",
+            Json::obj(vec![
+                ("config", Json::str("server-crossbar")),
+                ("serial_sec", Json::num(noc1_s)),
+                ("threads4_sec", Json::num(noc4_s)),
+                ("noc_parallel_speedup", Json::num(noc_speedup)),
             ]),
         ),
         (

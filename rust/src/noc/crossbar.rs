@@ -10,13 +10,48 @@
 //! This model exposes the contention the simple model hides: two cores
 //! bursting to the same memory channel serialize at the output port, and
 //! head-of-line blocking delays victims sharing an input queue.
+//!
+//! # Sharded switch tick
+//!
+//! With a worker pool available ([`Switch::par_tick`]), a switch cycle
+//! splits in two:
+//!
+//! 1. **Arbitration scan (parallel):** each free output scans a frozen
+//!    pre-tick snapshot of the input heads for its round-robin winner.
+//!    The scans are read-only over shared state and write only the
+//!    per-output candidate slot, so the pool shards them across
+//!    contiguous output-port ranges.
+//! 2. **Commit (serial, output index order):** locks, flit moves, pops
+//!    and sequence numbers happen exactly as in the serial tick.
+//!
+//! Outputs are *not* fully independent — when an earlier-indexed output
+//! pops a packet, the exposed next head can be locked by a later output
+//! in the same cycle. The commit pass recovers exactly that coupling: it
+//! re-checks inputs popped so far this cycle against each output's frozen
+//! candidate and takes the round-robin minimum, which is provably the
+//! same choice the interleaved serial scan makes (a frozen candidate can
+//! never be stolen mid-cycle: a locked input's head always targets its
+//! locker, so an input whose frozen head targets `out` cannot be drained
+//! by any other output first). Delivered packets land in per-output-shard
+//! pipeline heaps and drain through a deterministic `(cycle, seq)` merge;
+//! `seq` is assigned in the serial commit, so delivery order is
+//! byte-identical to the serial tick at every thread count.
 
 use super::{request_bytes, response_bytes, Noc};
 use crate::config::NocConfig;
 use crate::dram::{DramSystem, MemRequest, MemResponse, RespSink};
+use crate::sim::parallel::WorkerPool;
 use crate::{Cycle, NEVER};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+
+/// Minimum arbitration-scan work (`inputs × outputs`) before a switch
+/// tick is worth a pool broadcast; below it the serial tick wins on wall
+/// clock. Both paths are byte-identical by construction, so this is pure
+/// tuning, not semantics (the NoC-level analogue of the kernel's
+/// `MIN_PAR_CORES` / `MIN_PAR_CHANNELS` gates). 64 covers the server
+/// NPU's 4-core × 16-channel crossbar in both directions.
+const MIN_PAR_SCAN: usize = 64;
 
 #[derive(Debug, Clone, Copy)]
 struct Packet<T> {
@@ -35,8 +70,18 @@ struct Switch<T> {
     out_lock: Vec<Option<usize>>,
     /// Round-robin arbitration pointer per output.
     rr: Vec<usize>,
-    /// Packets in the output pipeline: (delivery cycle, seq, payload).
-    pipeline: BinaryHeap<Reverse<(Cycle, u64, PacketOut<T>)>>,
+    /// Per-output-shard pipelines of delivered packets:
+    /// (delivery cycle, seq, payload). Sharding keeps the parallel
+    /// arbitration scan free of shared sinks; [`Switch::drain`] merges
+    /// shards back into the global serial order by `(cycle, seq)`.
+    pipelines: Vec<Pipeline<T>>,
+    /// Per-output arbitration candidate `(rr_distance, input)` from the
+    /// scan phase; rebuilt every tick, `None` for locked outputs and
+    /// outputs with no takers.
+    cand: Vec<Option<(usize, usize)>>,
+    /// Inputs popped so far in the current commit pass (the one
+    /// intra-cycle coupling the frozen scan cannot see).
+    popped: Vec<usize>,
     latency: u64,
     seq: u64,
     delivered: u64,
@@ -48,8 +93,12 @@ struct PacketOut<T> {
     dest: usize,
 }
 
-// Heap ordering only uses (cycle, seq); payload comparison never runs but
-// Ord requires it — order by seq which is unique.
+/// One output shard's delivery pipeline, a min-heap on (cycle, seq).
+type Pipeline<T> = BinaryHeap<Reverse<(Cycle, u64, PacketOut<T>)>>;
+
+// Heap ordering is decided by (cycle, seq) — seq is globally unique, so
+// the PacketOut comparison never actually runs; Ord still requires an
+// implementation, which compares `dest` and ignores the payload.
 impl<T: Copy> PartialEq for PacketOut<T> {
     fn eq(&self, other: &Self) -> bool {
         self.dest == other.dest
@@ -75,7 +124,9 @@ impl<T: Copy> Switch<T> {
             max_queue_flits,
             out_lock: vec![None; num_out],
             rr: vec![0; num_out],
-            pipeline: BinaryHeap::new(),
+            pipelines: (0..num_out).map(|_| BinaryHeap::new()).collect(),
+            cand: vec![None; num_out],
+            popped: Vec::new(),
             latency,
             seq: 0,
             delivered: 0,
@@ -97,22 +148,98 @@ impl<T: Copy> Switch<T> {
         self.inputs[input].push_back(Packet { payload, dest, flits_left: flits });
     }
 
-    /// One switch cycle: every output moves at most one flit.
+    /// Arbitration scan for one free output over the *current* input
+    /// heads: the first input in round-robin order whose head targets
+    /// `out`, as `(rr_distance, input)`.
+    fn scan(
+        inputs: &[VecDeque<Packet<T>>],
+        rr: &[usize],
+        out: usize,
+    ) -> Option<(usize, usize)> {
+        let num_in = inputs.len();
+        for k in 0..num_in {
+            let i = (rr[out] + k) % num_in;
+            if let Some(head) = inputs[i].front() {
+                if head.dest == out {
+                    return Some((k, i));
+                }
+            }
+        }
+        None
+    }
+
+    /// One switch cycle, serial path: every output moves at most one
+    /// flit. Equivalent to scan-then-commit with the scans run inline.
     fn tick(&mut self, now: Cycle) {
-        let num_in = self.inputs.len();
         for out in 0..self.out_lock.len() {
-            // Allocate the output if free: round-robin over inputs whose
-            // head packet targets it.
+            self.cand[out] = if self.out_lock[out].is_none() {
+                Self::scan(&self.inputs, &self.rr, out)
+            } else {
+                None
+            };
+        }
+        self.commit(now);
+    }
+
+    /// One switch cycle, sharded path: the per-output arbitration scans
+    /// run across the pool's parts over a frozen snapshot of the input
+    /// heads; the commit below replays the serial semantics.
+    fn par_tick(&mut self, now: Cycle, pool: &mut WorkerPool)
+    where
+        T: Send + Sync,
+    {
+        let Switch { inputs, out_lock, rr, cand, .. } = &mut *self;
+        let (inputs, out_lock, rr) = (&*inputs, &*out_lock, &*rr);
+        pool.for_each_mut(cand, |out, slot| {
+            *slot =
+                if out_lock[out].is_none() { Self::scan(inputs, rr, out) } else { None };
+        });
+        self.commit(now);
+    }
+
+    /// Dispatch between [`Switch::tick`] and [`Switch::par_tick`] on the
+    /// scan-work gate: tiny or idle switches keep the serial path (a pool
+    /// broadcast costs more than their whole scan).
+    fn tick_sharded(&mut self, now: Cycle, pool: &mut WorkerPool)
+    where
+        T: Send + Sync,
+    {
+        if self.inputs.len() * self.out_lock.len() >= MIN_PAR_SCAN
+            && self.inputs.iter().any(|q| !q.is_empty())
+        {
+            self.par_tick(now, pool);
+        } else {
+            self.tick(now);
+        }
+    }
+
+    /// Commit pass (always serial, output index order): lock the
+    /// round-robin winner per free output, then move one flit on every
+    /// locked connection — byte-identical to the historical interleaved
+    /// loop. For each free output the winner is the round-robin minimum
+    /// of its frozen scan candidate and the current heads of inputs
+    /// already popped this cycle: exactly the set of heads the
+    /// interleaved serial scan would have seen at this output's turn
+    /// (frozen candidates cannot be stolen mid-cycle — see module docs).
+    fn commit(&mut self, now: Cycle) {
+        let num_in = self.inputs.len();
+        self.popped.clear();
+        for out in 0..self.out_lock.len() {
             if self.out_lock[out].is_none() {
-                for k in 0..num_in {
-                    let i = (self.rr[out] + k) % num_in;
-                    if let Some(head) = self.inputs[i].front() {
+                let mut best = self.cand[out];
+                for &j in &self.popped {
+                    if let Some(head) = self.inputs[j].front() {
                         if head.dest == out {
-                            self.out_lock[out] = Some(i);
-                            self.rr[out] = (i + 1) % num_in;
-                            break;
+                            let dist = (j + num_in - self.rr[out]) % num_in;
+                            if best.map_or(true, |(bd, _)| dist < bd) {
+                                best = Some((dist, j));
+                            }
                         }
                     }
+                }
+                if let Some((_, i)) = best {
+                    self.out_lock[out] = Some(i);
+                    self.rr[out] = (i + 1) % num_in;
                 }
             }
             // Move one flit on the locked connection.
@@ -124,38 +251,70 @@ impl<T: Copy> Switch<T> {
                 if head.flits_left == 0 {
                     let pkt = self.inputs[i].pop_front().unwrap();
                     self.seq += 1;
-                    self.pipeline.push(Reverse((
+                    self.pipelines[out].push(Reverse((
                         now + self.latency,
                         self.seq,
                         PacketOut { payload: pkt.payload, dest: pkt.dest },
                     )));
                     self.out_lock[out] = None;
+                    self.popped.push(i);
                 }
             }
         }
     }
 
-    /// Pop packets whose pipeline delay has elapsed.
+    /// Pop packets whose pipeline delay has elapsed: a `(cycle, seq)`
+    /// merge across the output shards. `seq` is globally unique and
+    /// assigned in the serial commit, so the merged order is the exact
+    /// order the historical single heap produced.
     fn drain(&mut self, now: Cycle, out: &mut Vec<(usize, T)>) {
-        while let Some(Reverse((t, _, _))) = self.pipeline.peek() {
-            if *t > now {
-                break;
+        loop {
+            let mut best: Option<(Cycle, u64, usize)> = None;
+            for (shard, heap) in self.pipelines.iter().enumerate() {
+                if let Some(Reverse((t, seq, _))) = heap.peek() {
+                    if *t <= now && best.map_or(true, |(bt, bs, _)| (*t, *seq) < (bt, bs)) {
+                        best = Some((*t, *seq, shard));
+                    }
+                }
             }
-            let Reverse((_, _, pkt)) = self.pipeline.pop().unwrap();
+            let Some((_, _, shard)) = best else { break };
+            let Reverse((_, _, pkt)) = self.pipelines[shard].pop().unwrap();
             self.delivered += 1;
             out.push((pkt.dest, pkt.payload));
         }
     }
 
     fn busy(&self) -> bool {
-        !self.pipeline.is_empty() || self.inputs.iter().any(|q| !q.is_empty())
+        self.pipelines.iter().any(|p| !p.is_empty())
+            || self.inputs.iter().any(|q| !q.is_empty())
     }
 
+    /// Earliest cycle this switch needs a tick: `now + 1` whenever any
+    /// input queue is non-empty — and that bound is *tight*, not
+    /// conservative. The switch proper never stalls: pick any non-empty
+    /// input. If some output holds a wormhole lock, that output moves a
+    /// flit next cycle (its locked input's head targets it by invariant,
+    /// and the output pipelines are elastic, so there is no downstream
+    /// backpressure *inside* the switch). If no output holds a lock, the
+    /// non-empty input's head targets some free output, which locks a
+    /// contender in the arbitration scan and moves a flit the same
+    /// cycle. Either way at least one flit moves per cycle while any
+    /// input is non-empty (`switch_moves_flits_every_cycle_*` pins
+    /// this). DRAM backpressure cannot reach into the switch — it stalls
+    /// packets *after* delivery, in [`CrossbarNoc`]'s `req_staged`
+    /// buffers, which carry their own wake-up rule (see
+    /// [`CrossbarNoc`]'s `next_event`).
     fn next_event(&self, now: Cycle) -> Cycle {
         if self.inputs.iter().any(|q| !q.is_empty()) {
             return now + 1;
         }
-        self.pipeline.peek().map_or(NEVER, |Reverse((t, _, _))| *t)
+        let mut next = NEVER;
+        for heap in &self.pipelines {
+            if let Some(Reverse((t, _, _))) = heap.peek() {
+                next = next.min(*t);
+            }
+        }
+        next
     }
 }
 
@@ -221,37 +380,12 @@ impl CrossbarNoc {
     pub(crate) fn access_granularity(&self) -> u64 {
         self.access_granularity
     }
-}
 
-impl Noc for CrossbarNoc {
-    fn try_inject_request(&mut self, _now: Cycle, req: MemRequest) -> bool {
-        // Destination channel is computed from the address the same way
-        // the DRAM system does; the switch needs it for arbitration.
-        let flits = self.flits(request_bytes(&req, self.access_granularity));
-        // channel_of requires the DramSystem; to keep the switch
-        // self-contained we recompute the IPOLY hash directly.
-        let nch = self.req_staged.len();
-        let dest = if nch == 1 {
-            0
-        } else {
-            crate::dram::ipoly::ipoly_hash(
-                req.addr / self.access_granularity,
-                nch.trailing_zeros(),
-            ) as usize
-        };
-        self.req_net.try_inject(req.core, req, dest, flits)
-    }
-
-    fn inject_response(&mut self, _now: Cycle, resp: MemResponse, from_channel: usize) {
-        let flits = self.flits(response_bytes(&resp, self.access_granularity));
-        let dest = resp.core;
-        self.resp_net.inject(from_channel, resp, dest, flits);
-    }
-
-    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
-        self.req_net.tick(now);
-        self.resp_net.tick(now);
-
+    /// Post-switch routing shared by the serial and sharded ticks: move
+    /// delivered requests through the per-channel staging buffers into
+    /// DRAM under its queue backpressure, and hand delivered responses
+    /// to the sink.
+    fn route(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
         self.scratch_req.clear();
         self.req_net.drain(now, &mut self.scratch_req);
         for (ch, req) in self.scratch_req.drain(..) {
@@ -270,6 +404,63 @@ impl Noc for CrossbarNoc {
         }
     }
 
+    /// [`Noc::tick`] with a worker pool: both switches run their
+    /// arbitration scans sharded across output-port ranges (falling back
+    /// to serial under the scan-work gate), then route exactly as the
+    /// serial tick. Byte-identical to [`Noc::tick`] by construction.
+    pub(crate) fn tick_parallel(
+        &mut self,
+        now: Cycle,
+        dram: &mut DramSystem,
+        responses_out: &mut dyn RespSink,
+        pool: &mut WorkerPool,
+    ) {
+        self.req_net.tick_sharded(now, pool);
+        self.resp_net.tick_sharded(now, pool);
+        self.route(now, dram, responses_out);
+    }
+}
+
+impl Noc for CrossbarNoc {
+    fn try_inject_request(&mut self, _now: Cycle, req: MemRequest) -> bool {
+        let flits = self.flits(request_bytes(&req, self.access_granularity));
+        // Destination port = owning DRAM channel, from the one shared
+        // address→channel hash: the switch must arbitrate toward exactly
+        // the shard `DramSystem::channel_of` will service from (the
+        // shared helper replaced a hand-copied IPOLY recomputation that
+        // could silently drift).
+        let dest = crate::dram::channel_of_addr(
+            req.addr,
+            self.req_staged.len(),
+            self.access_granularity,
+        );
+        self.req_net.try_inject(req.core, req, dest, flits)
+    }
+
+    fn inject_response(&mut self, _now: Cycle, resp: MemResponse, from_channel: usize) {
+        let flits = self.flits(response_bytes(&resp, self.access_granularity));
+        let dest = resp.core;
+        self.resp_net.inject(from_channel, resp, dest, flits);
+    }
+
+    fn tick(&mut self, now: Cycle, dram: &mut DramSystem, responses_out: &mut dyn RespSink) {
+        self.req_net.tick(now);
+        self.resp_net.tick(now);
+        self.route(now, dram, responses_out);
+    }
+
+    /// `now + 1` while any staged request waits on DRAM queue space.
+    /// This is deliberately conservative and load-bearing: the kernel's
+    /// per-cycle forcing runs downstream only (cores force the NoC, the
+    /// NoC forces DRAM — there is no dram→noc forcing edge), so if the
+    /// NoC slept past the cycle a DRAM queue freed a slot, the staged
+    /// request would sit until some unrelated event woke the NoC — or
+    /// deadlock outright when nothing else is in flight
+    /// (`staged_backpressure_keeps_the_noc_awake` pins this). A tighter
+    /// bound would need the DRAM system's next-drain cycle, a
+    /// cross-component dependency the cached next-events deliberately
+    /// avoid. The switch-level `now + 1` below it is *tight*, not
+    /// conservative — see [`Switch::next_event`].
     fn next_event(&self, now: Cycle) -> Cycle {
         if self.req_staged.iter().any(|s| !s.is_empty()) {
             return now + 1;
@@ -291,7 +482,7 @@ impl Noc for CrossbarNoc {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::NocConfig;
+    use crate::config::{DramConfig, NocConfig};
     use crate::noc::testutil::roundtrip;
 
     fn mk(cores: usize, chans: usize) -> CrossbarNoc {
@@ -425,5 +616,113 @@ mod tests {
             t_xbar + 8 >= t_simple,
             "crossbar ({t_xbar}) unexpectedly much faster than simple ({t_simple})"
         );
+    }
+
+    /// The sharded tick must be indistinguishable from the serial tick,
+    /// flit for flit: drive two identical switches through hundreds of
+    /// cycles of contended pseudo-random traffic (both port shapes of the
+    /// server crossbar, plus an odd shape), comparing delivered packets
+    /// and every piece of arbitration state each cycle.
+    #[test]
+    fn sharded_tick_matches_serial_tick() {
+        for (num_in, num_out) in [(4usize, 16usize), (16, 4), (3, 5)] {
+            let mut serial: Switch<u64> = Switch::new(num_in, num_out, 64, 2);
+            let mut par: Switch<u64> = Switch::new(num_in, num_out, 64, 2);
+            let mut pool = WorkerPool::with_spin(3, 0);
+            let mut state = 0x9E37_79B9_7F4A_7C15u64 ^ ((num_in as u64) << 8) ^ num_out as u64;
+            let mut rnd = move |m: u64| {
+                state = state
+                    .wrapping_mul(6_364_136_223_846_793_005)
+                    .wrapping_add(1_442_695_040_888_963_407);
+                (state >> 33) % m
+            };
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            let mut now: Cycle = 0;
+            loop {
+                if now < 400 {
+                    for _ in 0..rnd(3) {
+                        let input = rnd(num_in as u64) as usize;
+                        let dest = rnd(num_out as u64) as usize;
+                        let flits = 1 + rnd(4);
+                        let payload = rnd(1 << 30);
+                        let a = serial.try_inject(input, payload, dest, flits);
+                        let b = par.try_inject(input, payload, dest, flits);
+                        assert_eq!(a, b, "admission diverged at cycle {now}");
+                    }
+                }
+                serial.tick(now);
+                par.par_tick(now, &mut pool);
+                out_a.clear();
+                out_b.clear();
+                serial.drain(now, &mut out_a);
+                par.drain(now, &mut out_b);
+                assert_eq!(out_a, out_b, "drain diverged at cycle {now}");
+                assert_eq!(serial.input_flits, par.input_flits, "queues diverged at {now}");
+                assert_eq!(serial.out_lock, par.out_lock, "locks diverged at {now}");
+                assert_eq!(serial.rr, par.rr, "rr pointers diverged at {now}");
+                assert_eq!(serial.seq, par.seq, "seq diverged at {now}");
+                now += 1;
+                if now >= 400 && !serial.busy() && !par.busy() {
+                    break;
+                }
+                assert!(now < 5_000, "switches did not drain");
+            }
+        }
+    }
+
+    /// Pins the tightness argument on [`Switch::next_event`]: while any
+    /// input queue is non-empty the switch reports `now + 1` AND makes
+    /// progress every cycle — at least one flit moves, so the per-cycle
+    /// wake-up is never a wasted tick.
+    #[test]
+    fn switch_moves_flits_every_cycle_while_inputs_nonempty() {
+        let mut sw: Switch<u64> = Switch::new(4, 2, 1024, 3);
+        for i in 0..4usize {
+            for j in 0..8u64 {
+                // Mixed flit counts, both outputs contended.
+                assert!(sw.try_inject(i, (i as u64) * 100 + j, (j % 2) as usize, 1 + j % 3));
+            }
+        }
+        let mut out = Vec::new();
+        let mut now: Cycle = 0;
+        while sw.inputs.iter().any(|q| !q.is_empty()) {
+            assert_eq!(sw.next_event(now), now + 1);
+            let before: u64 = sw.input_flits.iter().sum();
+            sw.tick(now);
+            let after: u64 = sw.input_flits.iter().sum();
+            assert!(after < before, "cycle {now}: no flit moved with non-empty inputs");
+            sw.drain(now, &mut out);
+            now += 1;
+            assert!(now < 10_000);
+        }
+    }
+
+    /// Pins the conservatism argument on [`CrossbarNoc`]'s `next_event`:
+    /// with both switches fully drained but requests backed up in the
+    /// staging buffers behind a full DRAM queue, the NoC must stay due
+    /// every cycle — only its tick can move staged work into DRAM when
+    /// space frees, because the kernel has no dram→noc forcing edge.
+    #[test]
+    fn staged_backpressure_keeps_the_noc_awake() {
+        let mut cfg = DramConfig::ddr4_mobile();
+        cfg.queue_depth = 1;
+        let mut dram = DramSystem::new(&cfg, 1.0);
+        let mut noc = mk(1, 1);
+        for i in 0..8u64 {
+            assert!(noc.try_inject_request(0, req(i, i * 64, 0)));
+        }
+        let mut sink: Vec<MemResponse> = Vec::new();
+        // Never tick DRAM: its single queue slot fills and everything
+        // else piles up in req_staged once the switch delivers.
+        for now in 0..200 {
+            noc.tick(now, &mut dram, &mut sink);
+        }
+        assert!(
+            noc.req_staged.iter().any(|s| !s.is_empty()),
+            "setup failed: staging should be backed up behind the full DRAM queue"
+        );
+        assert!(!noc.req_net.busy() && !noc.resp_net.busy(), "switches should be drained");
+        assert_eq!(noc.next_event(200), 201, "staged backpressure must keep the NoC due");
     }
 }

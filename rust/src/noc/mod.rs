@@ -129,6 +129,24 @@ impl NocKind {
             NocKind::Crossbar(n) => n.lane_credit(core),
         });
     }
+
+    /// [`Noc::tick`] with a worker pool: the crossbar shards its
+    /// per-output arbitration scans across the pool (byte-identical to
+    /// the serial tick by construction — see
+    /// `crossbar::Switch::par_tick`); the simple NoC's global in-flight
+    /// heaps resist sharding, so it always takes the serial path.
+    pub fn tick_parallel(
+        &mut self,
+        now: Cycle,
+        dram: &mut DramSystem,
+        responses_out: &mut dyn RespSink,
+        pool: &mut crate::sim::parallel::WorkerPool,
+    ) {
+        match self {
+            NocKind::Simple(n) => n.tick(now, dram, responses_out),
+            NocKind::Crossbar(n) => n.tick_parallel(now, dram, responses_out, pool),
+        }
+    }
 }
 
 /// The real NoC is itself a [`ReqSink`]: the serial data plane hands

@@ -67,6 +67,12 @@ pub struct Batcher {
     pub rejected: u64,
     /// Requests admitted into the queue.
     pub admitted: u64,
+    /// Recycled member vectors: [`Batcher::flush`] and
+    /// [`Batcher::take_upto`] draw their output buffers here instead of
+    /// the allocator, and the driver returns them via
+    /// [`Batcher::recycle`] once a batch completes — serving-scale runs
+    /// used to allocate one `Vec<Pending>` per iteration per tenant.
+    arena: crate::util::arena::VecPool<Pending>,
 }
 
 impl Batcher {
@@ -79,7 +85,19 @@ impl Batcher {
             queued_units: 0,
             rejected: 0,
             admitted: 0,
+            arena: Default::default(),
         }
+    }
+
+    /// Return a member vector (from [`Batcher::flush`] /
+    /// [`Batcher::take_upto`]) to the arena for reuse.
+    pub fn recycle(&mut self, members: Vec<Pending>) {
+        self.arena.put(members);
+    }
+
+    /// `(fresh allocations, recycled hand-outs)` of member vectors.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        self.arena.stats()
     }
 
     /// Offer an arrival; `false` means it was rejected at the admission cap.
@@ -113,7 +131,7 @@ impl Batcher {
             Some(t) if t <= now => {}
             _ => return None,
         }
-        let mut members = Vec::new();
+        let mut members = self.arena.take();
         let mut units = 0usize;
         while let Some(&p) = self.queue.front() {
             if !members.is_empty() && units + p.size > self.max_batch {
@@ -137,7 +155,7 @@ impl Batcher {
     /// [`Batcher::flush`] rule — the caller passes `pool.is_empty()`), and
     /// blocks the queue otherwise, preserving FIFO order.
     pub fn take_upto(&mut self, budget: usize, allow_oversized: bool) -> Vec<Pending> {
-        let mut out = Vec::new();
+        let mut out = self.arena.take();
         let mut left = budget;
         while let Some(&p) = self.queue.front() {
             if p.size <= left {

@@ -182,6 +182,10 @@ pub struct ServeDriver {
     /// are stamped from `submitted`/arrival cycles, which are externally
     /// visible simulation results — identical across kernel modes.
     trace: Option<Box<TraceBuf>>,
+    /// Per-tenant gauge label strings (`t{i}_queued`, `t{i}_pool_units`,
+    /// `t{i}_prefill_waiting`), built once so metrics sampling stops
+    /// formatting names on every bucket edge.
+    gauge_labels: Vec<[String; 3]>,
 }
 
 /// Admit one request into the generative pipeline: streams with a prompt
@@ -223,20 +227,23 @@ fn merge_and_launch(
         let budget = dec.pool.max_units.saturating_sub(occupied);
         if budget > 0 {
             let oversize_ok = dec.pool.is_empty() && dec.prefill.is_empty();
-            for p in ts.batcher.take_upto(budget, oversize_ok) {
+            let mut taken = ts.batcher.take_upto(budget, oversize_ok);
+            for p in taken.drain(..) {
                 ts.queue_delay.push(now - p.arrival);
                 admit(dec, p, now);
             }
+            ts.batcher.recycle(taken);
         }
     } else if dec.pool.is_empty() && dec.prefill.is_empty() {
         // Whole-batch decode: the next batch forms only once the previous
         // generation (prompts included) fully drained, under the usual
         // flush rules.
-        if let Some(batch) = ts.batcher.flush(now) {
-            for p in batch.members {
+        if let Some(mut batch) = ts.batcher.flush(now) {
+            for p in batch.members.drain(..) {
                 ts.queue_delay.push(now - p.arrival);
                 admit(dec, p, now);
             }
+            ts.batcher.recycle(batch.members);
         }
     }
     // 2. Promote prefill-complete streams (FIFO) into the decode pool;
@@ -380,12 +387,22 @@ impl ServeDriver {
                 tbt: Vec::new(),
             });
         }
+        let gauge_labels = (0..tenants.len())
+            .map(|i| {
+                [
+                    format!("t{i}_queued"),
+                    format!("t{i}_pool_units"),
+                    format!("t{i}_prefill_waiting"),
+                ]
+            })
+            .collect();
         Ok(ServeDriver {
             tenants,
             duration: (scfg.duration_ms * core_freq_ghz * 1e6).round() as Cycle,
             inflight: HashMap::new(),
             injection_done: false,
             trace: None,
+            gauge_labels,
         })
     }
 
@@ -576,6 +593,7 @@ impl Driver for ServeDriver {
                         vec![("members", members.len() as u64)],
                     );
                 }
+                self.tenants[tenant].batcher.recycle(members);
             }
             Some(Inflight::DecodeStep { tenant, submitted }) => {
                 let ts = &mut self.tenants[tenant];
@@ -688,12 +706,20 @@ impl Driver for ServeDriver {
         // modes agree on at any visited cycle, so the timeline is
         // deterministic across kernels and thread counts.
         for (ti, ts) in self.tenants.iter().enumerate() {
-            out.set(&format!("t{ti}_queued"), ts.batcher.queued_requests() as f64);
+            let [queued, pool_units, prefill_waiting] = &self.gauge_labels[ti];
+            out.set(queued, ts.batcher.queued_requests() as f64);
             if let Some(dec) = &ts.decode {
-                out.set(&format!("t{ti}_pool_units"), dec.pool.units() as f64);
-                out.set(&format!("t{ti}_prefill_waiting"), dec.prefill.len() as f64);
+                out.set(pool_units, dec.pool.units() as f64);
+                out.set(prefill_waiting, dec.prefill.len() as f64);
             }
         }
+    }
+
+    fn arena_stats(&self) -> (u64, u64) {
+        self.tenants.iter().fold((0, 0), |(a, r), ts| {
+            let (ba, br) = ts.batcher.arena_stats();
+            (a + ba, r + br)
+        })
     }
 }
 

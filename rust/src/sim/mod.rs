@@ -22,11 +22,12 @@
 //! produce byte-identical reports.
 //!
 //! With `sim_threads > 1` the dense data plane additionally shards
-//! *within* each cycle — per-core ingress lanes and per-channel DRAM
-//! shards tick on a [`parallel::WorkerPool`], with the serial total order
-//! restored at deterministic merge points (see
-//! [`Simulator::advance_dataplane`]); the control plane stays
-//! single-threaded and reports stay byte-identical to serial.
+//! *within* each cycle — per-core ingress lanes, the crossbar NoC's
+//! output-port arbitration scans, and per-channel DRAM shards tick on a
+//! [`parallel::WorkerPool`], with the serial total order restored at
+//! deterministic merge points (see [`Simulator::advance_dataplane`]);
+//! the control plane stays single-threaded and reports stay
+//! byte-identical to serial.
 
 pub mod kernel;
 pub mod parallel;
@@ -94,6 +95,13 @@ pub trait Driver {
     /// must be pure functions of driver state so the timeline stays
     /// deterministic across kernel modes and thread counts.
     fn sample_gauges(&self, _now: Cycle, _out: &mut GaugeRow) {}
+
+    /// `(fresh allocations, recycled hand-outs)` of this driver's scratch
+    /// arenas, folded into the profiler's `arena_allocs`/`arena_reuses`
+    /// at end of run. Drivers without arenas report zeros.
+    fn arena_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// A no-op driver for static workloads.
@@ -166,6 +174,22 @@ pub struct Simulator {
     /// Per-channel cumulative-bytes snapshot at the previous metrics
     /// sample; turns DRAM byte totals into per-bucket bandwidth gauges.
     last_chan_bytes: Vec<u64>,
+    /// Persistent metrics row: [`telemetry::GaugeRow`] recycles its name
+    /// strings across samples instead of re-allocating them per bucket.
+    gauge_row: GaugeRow,
+    /// Pre-rendered `core{i}_dma_inflight` / `chan{ch}_bytes` gauge names
+    /// (the per-sample `format!` calls were the metrics path's dominant
+    /// allocation source).
+    core_gauge_labels: Vec<String>,
+    chan_gauge_labels: Vec<String>,
+    /// Arenas for the per-pass control-plane scratch (`finished_tiles`,
+    /// `completed_reqs` in [`Simulator::try_run`]): buffers return here
+    /// between passes, so steady-state passes allocate nothing.
+    tile_scratch: crate::util::arena::VecPool<crate::lowering::JobRef>,
+    req_scratch: crate::util::arena::VecPool<usize>,
+    /// Driver-side arena counters captured at the end of the last run
+    /// (the driver is out of scope by the time telemetry finalizes).
+    driver_arena: (u64, u64),
 }
 
 impl Simulator {
@@ -209,6 +233,12 @@ impl Simulator {
             telemetry: None,
             energy,
             last_chan_bytes: vec![0; channels],
+            gauge_row: GaugeRow::default(),
+            core_gauge_labels: (0..n).map(|i| format!("core{i}_dma_inflight")).collect(),
+            chan_gauge_labels: (0..channels).map(|ch| format!("chan{ch}_bytes")).collect(),
+            tile_scratch: Default::default(),
+            req_scratch: Default::default(),
+            driver_arena: (0, 0),
         }
     }
 
@@ -283,8 +313,11 @@ impl Simulator {
     /// Run until all requests complete, or fail if the clock passes
     /// [`Simulator::max_cycles`].
     pub fn try_run(&mut self, driver: &mut dyn Driver) -> anyhow::Result<SimReport> {
-        let mut finished_tiles = Vec::new();
-        let mut completed_reqs = Vec::new();
+        // Pass-local scratch comes from the arenas: repeated runs on one
+        // simulator (and the steady-state loop below) reuse the same
+        // buffers instead of re-allocating per pass.
+        let mut finished_tiles = self.tile_scratch.take();
+        let mut completed_reqs = self.req_scratch.take();
         let profiling = self.telemetry.as_deref().is_some_and(|t| t.prof.is_some());
         // The data-plane worker pool lives for the whole run (persistent
         // threads; per-phase broadcasts are two atomics, not spawns).
@@ -457,6 +490,11 @@ impl Simulator {
             }
             self.clock = self.next_cycle(stop, driver.next_event(stop));
         }
+        self.tile_scratch.put(finished_tiles);
+        self.req_scratch.put(completed_reqs);
+        // Capture the driver's arena counters now — the driver is out of
+        // scope when `take_telemetry` finalizes a second time.
+        self.driver_arena = driver.arena_stats();
         self.finalize_telemetry(pool.as_ref());
         Ok(self.report())
     }
@@ -477,6 +515,23 @@ impl Simulator {
                 p.pool_spins = spins;
                 p.pool_parks = parks;
             }
+            // Control-plane allocation hygiene: fold every scratch
+            // arena's (fresh, recycled) counters into one pair. A healthy
+            // steady state shows `arena_reuses` dwarfing `arena_allocs`.
+            // Assignments, not `+=`: this runs again from
+            // `take_telemetry` and must stay idempotent.
+            let (mut allocs, mut reuses) = (0u64, 0u64);
+            for (a, r) in [
+                self.gauge_row.arena_stats(),
+                self.tile_scratch.stats(),
+                self.req_scratch.stats(),
+                self.driver_arena,
+            ] {
+                allocs += a;
+                reuses += r;
+            }
+            p.arena_allocs = allocs;
+            p.arena_reuses = reuses;
         }
         if let Some(m) = tel.metrics.as_mut() {
             m.set_counter("dram_next_event_recomputes", self.dram.next_event_recomputes());
@@ -535,15 +590,20 @@ impl Simulator {
         if !due {
             return;
         }
-        let mut row = GaugeRow::default();
+        // The row is persistent state: `reset` parks last sample's name
+        // strings for reuse, and the labels below are pre-rendered in
+        // `new`, so a steady-state sample allocates nothing. `take` it
+        // out of `self` to keep the `driver`/telemetry borrows clean.
+        let mut row = std::mem::take(&mut self.gauge_row);
+        row.reset();
         row.set("ready_tiles", self.sched.ready_tiles_total() as f64);
         row.set("tiles_in_flight", self.sched.tiles_in_flight_total() as f64);
         for (i, core) in self.cores.iter().enumerate() {
-            row.set(&format!("core{i}_dma_inflight"), core.dma_inflight() as f64);
+            row.set(&self.core_gauge_labels[i], core.dma_inflight() as f64);
         }
         for (ch, last) in self.last_chan_bytes.iter_mut().enumerate() {
             let total = self.dram.channel_bytes(ch);
-            row.set(&format!("chan{ch}_bytes"), (total - *last) as f64);
+            row.set(&self.chan_gauge_labels[ch], (total - *last) as f64);
             *last = total;
         }
         if let Some(m) = self.energy.as_deref() {
@@ -557,6 +617,7 @@ impl Simulator {
         if let Some(m) = self.telemetry.as_deref_mut().and_then(|t| t.metrics.as_mut()) {
             m.sample(now, &row);
         }
+        self.gauge_row = row;
     }
 
     /// Minimum due cores / busy DRAM channel shards before a dense-cycle
@@ -574,9 +635,9 @@ impl Simulator {
     /// last cycle ticked: `until`-bounded, or earlier if a tile
     /// completed and the scheduler must run.
     ///
-    /// With a worker `pool` (`sim_threads > 1`), the two embarrassingly
-    /// shardable passes inside each dense cycle run concurrently, with
-    /// the serial total order restored at explicit merge points:
+    /// With a worker `pool` (`sim_threads > 1`), the three shardable
+    /// passes inside each dense cycle run concurrently, with the serial
+    /// total order restored at explicit merge points:
     ///
     /// 1. **Core lanes**: due cores tick in parallel, each injecting into
     ///    its private [`IngressLane`] (admission is per-core-local in
@@ -584,14 +645,19 @@ impl Simulator {
     ///    replayed into the real NoC in (cycle, core, id) order — cycle
     ///    by the dense loop, core by the replay scan, id by each lane's
     ///    in-order buffer — exactly the serial injection sequence.
-    /// 2. **DRAM channel shards**: busy channels tick in parallel
+    /// 2. **NoC output ports** (crossbar only): each switch freezes its
+    ///    input heads and scans per-output round-robin arbitration in
+    ///    parallel, then commits winners serially in output order — the
+    ///    byte-identity argument lives in `noc::crossbar`'s module docs.
+    ///    The simple NoC's global in-flight heaps resist sharding, so it
+    ///    always ticks serially.
+    /// 3. **DRAM channel shards**: busy channels tick in parallel
     ///    (channels share no state; IPOLY partitions the address space),
     ///    staging completions per shard; `drain_stage` then merges the
     ///    batches into the NoC response network in channel order, the
     ///    serial delivery order.
     ///
-    /// The NoC tick between them — the one pass with genuinely shared
-    /// state — stays single-threaded, as does the whole control plane.
+    /// The whole control plane stays single-threaded.
     fn advance_dataplane(
         &mut self,
         start: Cycle,
@@ -676,8 +742,14 @@ impl Simulator {
             let mut noc_ticked = false;
             if all_due || core_ticked || noc_next <= t {
                 // The NoC delivers requests into DRAM queues and
-                // responses directly onto their cores.
-                noc.tick(t, dram, cores.as_mut_slice());
+                // responses directly onto their cores. With a pool, the
+                // crossbar shards its per-output arbitration scans
+                // (byte-identical by construction; small or idle switches
+                // fall back to the serial tick internally).
+                match pool.as_deref_mut() {
+                    Some(pool) => noc.tick_parallel(t, dram, cores.as_mut_slice(), pool),
+                    None => noc.tick(t, dram, cores.as_mut_slice()),
+                }
                 noc_ticked = true;
             }
             if all_due || noc_ticked || dram_next <= t {

@@ -27,14 +27,19 @@ use std::thread::JoinHandle;
 /// Default spins before a worker parks while waiting for the next
 /// broadcast. Dense-plane phases arrive back-to-back, so the common case
 /// is a hit within a few hundred spins; parking only happens across
-/// control-plane gaps and run boundaries. Control-plane-heavy serving
-/// workloads can shrink the budget (cheaper idle CPU, ~1 ms wake
-/// latency on each dense-phase restart) or grow it via
-/// `ONNXIM_POOL_SPIN` / `NpuConfig::pool_spin`; the `pool_spins` /
-/// `pool_parks` profile counters show which regime a run is in. The
-/// setting is pure wall-clock tuning — simulated results are
-/// byte-identical at every value.
-const SPIN_LIMIT: u32 = 20_000;
+/// control-plane gaps and run boundaries. The default was retuned from
+/// 20k to 4k against `--profile` spin/park occupancy (`pool_spins` /
+/// `pool_parks` in `PROFILE_kernel.json`) on control-plane-heavy serving
+/// runs: back-to-back dense phases still hit well under 4k spins (so
+/// dense-phase wake latency is unchanged), while the long waits that
+/// previously burned the full 20k budget before parking anyway now give
+/// the CPU back 5x sooner — serving windows are dominated by parks, not
+/// spin hits, at either value. Grow or shrink it per-run via
+/// `ONNXIM_POOL_SPIN` / `NpuConfig::pool_spin`; the profile counters
+/// show which regime a run is in. The setting is pure wall-clock
+/// tuning — simulated results are byte-identical at every value
+/// (`pool_spin_setting_does_not_change_results`).
+const SPIN_LIMIT: u32 = 4_000;
 
 /// Resolve the spin budget: an explicit nonzero `cfg` value wins,
 /// otherwise `ONNXIM_POOL_SPIN` (parsed as u32), otherwise the default.

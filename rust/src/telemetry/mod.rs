@@ -260,14 +260,50 @@ impl Tracer {
 }
 
 /// One sample row of named gauge values, rebuilt at every bucket edge.
+///
+/// Rows used to be constructed fresh per bucket edge, allocating one
+/// `String` per gauge per sample — real churn on metrics-heavy serving
+/// runs. A persistent row now recycles: [`GaugeRow::reset`] clears the
+/// values but parks their name strings on an internal spare list, and
+/// [`GaugeRow::set`] refills names into recycled capacity. The
+/// alloc/reuse counters feed the profiler's `arena_allocs` /
+/// `arena_reuses`.
 #[derive(Debug, Clone, Default)]
 pub struct GaugeRow {
     vals: Vec<(String, f64)>,
+    /// Name strings parked by `reset`, reused (cleared, capacity kept)
+    /// by the next round of `set` calls.
+    spare: Vec<String>,
+    allocs: u64,
+    reuses: u64,
 }
 
 impl GaugeRow {
     pub fn set(&mut self, name: &str, v: f64) {
-        self.vals.push((name.to_string(), v));
+        let mut s = match self.spare.pop() {
+            Some(s) => {
+                self.reuses += 1;
+                s
+            }
+            None => {
+                self.allocs += 1;
+                String::new()
+            }
+        };
+        s.clear();
+        s.push_str(name);
+        self.vals.push((s, v));
+    }
+
+    /// Empty the row for the next sample, recycling the name strings.
+    pub fn reset(&mut self) {
+        self.spare.extend(self.vals.drain(..).map(|(s, _)| s));
+    }
+
+    /// `(fresh string allocations, recycled hand-outs)` over this row's
+    /// lifetime.
+    pub fn arena_stats(&self) -> (u64, u64) {
+        (self.allocs, self.reuses)
     }
 }
 
@@ -409,6 +445,12 @@ pub struct Profiler {
     /// `WorkerPool` wait-loop occupancy: spin iterations and park events.
     pub pool_spins: u64,
     pub pool_parks: u64,
+    /// Control-plane scratch-arena occupancy: buffers handed out fresh
+    /// from the allocator vs recycled from a pool (gauge-row name
+    /// strings, batch member vectors, per-window completion scratch).
+    /// Steady-state runs should show reuses dwarfing allocations.
+    pub arena_allocs: u64,
+    pub arena_reuses: u64,
 }
 
 impl Profiler {
@@ -425,6 +467,8 @@ impl Profiler {
             ("dram_ticks", Json::Num(self.dram_ticks as f64)),
             ("pool_spins", Json::Num(self.pool_spins as f64)),
             ("pool_parks", Json::Num(self.pool_parks as f64)),
+            ("arena_allocs", Json::Num(self.arena_allocs as f64)),
+            ("arena_reuses", Json::Num(self.arena_reuses as f64)),
         ])
     }
 }
@@ -553,10 +597,33 @@ mod tests {
 
     #[test]
     fn profiler_json_has_schema_and_fields() {
-        let p = Profiler { windows: 3, pool_spins: 17, ..Default::default() };
+        let p = Profiler {
+            windows: 3,
+            pool_spins: 17,
+            arena_allocs: 5,
+            arena_reuses: 95,
+            ..Default::default()
+        };
         let j = p.to_json();
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "onnxim-profile-v1");
         assert_eq!(j.get("windows").unwrap().as_u64().unwrap(), 3);
         assert_eq!(j.get("pool_spins").unwrap().as_u64().unwrap(), 17);
+        assert_eq!(j.get("arena_allocs").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(j.get("arena_reuses").unwrap().as_u64().unwrap(), 95);
+    }
+
+    #[test]
+    fn gauge_row_recycles_name_strings() {
+        let mut row = GaugeRow::default();
+        row.set("a", 1.0);
+        row.set("b", 2.0);
+        assert_eq!(row.arena_stats(), (2, 0));
+        row.reset();
+        row.set("c", 3.0);
+        row.set("d", 4.0);
+        row.set("e", 5.0);
+        assert_eq!(row.arena_stats(), (3, 2), "reset must recycle parked strings");
+        let names: Vec<&str> = row.vals.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["c", "d", "e"], "recycled strings must carry the new names");
     }
 }

@@ -1,0 +1,87 @@
+//! Tiny reusable-buffer pools: allocation hygiene for the control plane.
+//!
+//! Serving-scale runs used to churn the allocator with short-lived
+//! `Vec`s — batch member lists, per-window completion scratch — freed
+//! and reallocated every control pass. A [`VecPool`] recycles them:
+//! [`VecPool::take`] hands back a previously [`VecPool::put`] buffer
+//! (cleared, capacity retained) and only falls through to the allocator
+//! when the pool is dry. The pool counts both outcomes so `--profile`
+//! can prove the hygiene: the totals surface as `arena_allocs` /
+//! `arena_reuses` in `PROFILE_kernel.json`, where a steady-state run
+//! should show reuses dwarfing allocations.
+
+/// A free-list of cleared `Vec<T>` buffers with alloc/reuse counters.
+#[derive(Debug)]
+pub struct VecPool<T> {
+    free: Vec<Vec<T>>,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl<T> Default for VecPool<T> {
+    fn default() -> Self {
+        VecPool { free: Vec::new(), allocs: 0, reuses: 0 }
+    }
+}
+
+impl<T> VecPool<T> {
+    /// Hand out a buffer: a recycled one when available (empty, with its
+    /// old capacity), otherwise a fresh allocation.
+    pub fn take(&mut self) -> Vec<T> {
+        match self.free.pop() {
+            Some(v) => {
+                self.reuses += 1;
+                debug_assert!(v.is_empty());
+                v
+            }
+            None => {
+                self.allocs += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the pool; it is cleared here so `take` never
+    /// hands out stale contents.
+    pub fn put(&mut self, mut v: Vec<T>) {
+        v.clear();
+        self.free.push(v);
+    }
+
+    /// `(fresh allocations, recycled hand-outs)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.allocs, self.reuses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_capacity() {
+        let mut pool: VecPool<u64> = VecPool::default();
+        let mut v = pool.take();
+        v.extend(0..100);
+        let cap = v.capacity();
+        pool.put(v);
+        let v2 = pool.take();
+        assert!(v2.is_empty(), "recycled buffer must come back cleared");
+        assert!(v2.capacity() >= cap, "recycled buffer must keep its capacity");
+        assert_eq!(pool.stats(), (1, 1));
+    }
+
+    #[test]
+    fn dry_pool_counts_allocations() {
+        let mut pool: VecPool<u8> = VecPool::default();
+        let a = pool.take();
+        let b = pool.take();
+        assert_eq!(pool.stats(), (2, 0));
+        pool.put(a);
+        pool.put(b);
+        let _ = pool.take();
+        let _ = pool.take();
+        let _ = pool.take();
+        assert_eq!(pool.stats(), (3, 2));
+    }
+}

@@ -1,11 +1,12 @@
-//! Self-contained utilities: JSON codec, deterministic PRNG, and
-//! statistics helpers.
+//! Self-contained utilities: JSON codec, deterministic PRNG, buffer
+//! pools, and statistics helpers.
 //!
 //! The build environment is fully offline with only the `xla` crate (and
 //! `anyhow`) vendored, so the usual ecosystem crates (serde, rand,
 //! criterion, proptest) are unavailable — these small substrates replace
 //! them (see DESIGN.md §3).
 
+pub mod arena;
 pub mod json;
 pub mod rng;
 pub mod stats;

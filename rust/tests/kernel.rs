@@ -144,6 +144,16 @@ fn parallel_dataplane_matches_serial_crossbar() {
     assert_threads_equivalent(&|| NpuConfig::mobile().with_crossbar_noc(), "mobile-crossbar");
 }
 
+// The server crossbar is the config where the sharded NoC tick actually
+// engages (4×16 and 16×4 switches clear `MIN_PAR_SCAN`; the mobile
+// crossbar's 4×1 switches always take the serial fallback), so this is
+// the test that pins the parallel output-port arbitration byte-identical
+// to serial across the full policy matrix.
+#[test]
+fn parallel_dataplane_matches_serial_crossbar_server() {
+    assert_threads_equivalent(&|| NpuConfig::server().with_crossbar_noc(), "server-crossbar");
+}
+
 /// Serving scenarios drive the kernel through its hardest corners:
 /// driver-injected arrivals mid-window, completion-driven decode
 /// iterations launching requests at the drain cycle, and batch-timeout
