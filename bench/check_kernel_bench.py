@@ -105,6 +105,28 @@ def check(cur, base):
             lines.append(f"WARN (advisory): tracing overhead {pct:+.1f}% exceeds the "
                          f"{max_overhead}% target on this runner; not failing the job")
 
+    # Lowering-template cache: byte-identity between cache-on and
+    # cache-off reports is a hard bail inside the bench binary; the
+    # speedup is ADVISORY (same noisy-runner policy). The hit rate is
+    # load-shape-determined, not wall-clock, so a collapse there is worth
+    # a loud warning too.
+    lc = cur.get("lowering_cache")
+    if lc is not None:
+        min_lc = base.get("lowering_cache", {}).get("min_speedup", 1.0)
+        s = lc["lowering_cache_speedup"]
+        hit = lc["template_hit_rate"]
+        lines.append(f"lowering cache: off {lc['off_sec']:.2f}s, on {lc['on_sec']:.2f}s, "
+                     f"speedup {s:.2f}x, hit rate {hit:.1%} "
+                     f"({lc['hits']:.0f} hits / {lc['misses']:.0f} misses) "
+                     f"(advisory target >= {min_lc}x)")
+        if s < min_lc:
+            lines.append(f"WARN (advisory): lowering-cache speedup {s:.2f}x is below the "
+                         f"{min_lc}x target on this runner; not failing the job")
+        min_hit = base.get("lowering_cache", {}).get("min_hit_rate", 0.9)
+        if hit < min_hit:
+            lines.append(f"WARN (advisory): template hit rate {hit:.1%} is below the "
+                         f"{min_hit:.0%} target; the cache keying may have regressed")
+
     base_tput = base.get("dense", {}).get("windowed_cycles_per_sec", 0)
     frac = base.get("max_regression_frac", 0.3)
     if base_tput > 0:

@@ -206,6 +206,13 @@ pub struct NpuConfig {
     /// disables accounting entirely: no meter is attached and reports
     /// are byte-identical to an energy-unaware run.
     pub energy: EnergyConfig,
+    /// Lowering-template cache (on by default): memoize each bucketed
+    /// graph node's tile program the first time it is lowered and
+    /// instantiate later requests by rebasing tensor-relative addresses.
+    /// Instantiation is byte-identical to fresh lowering, so this is
+    /// purely a wall-clock optimization; `--lowering-cache off` disables
+    /// it for A/B verification.
+    pub lowering_cache: bool,
 }
 
 impl NpuConfig {
@@ -232,6 +239,7 @@ impl NpuConfig {
             sim_threads: 1,
             pool_spin: 0,
             energy: EnergyConfig::default(),
+            lowering_cache: true,
         }
     }
 
@@ -275,6 +283,7 @@ impl NpuConfig {
             sim_threads: 1,
             pool_spin: 0,
             energy: EnergyConfig::default(),
+            lowering_cache: true,
         }
     }
 
@@ -351,6 +360,9 @@ impl NpuConfig {
         }
         if self.energy.enabled() {
             fields.push(("energy", self.energy.as_json()));
+        }
+        if !self.lowering_cache {
+            fields.push(("lowering_cache", Json::Bool(false)));
         }
         fields.extend(vec![
             (
@@ -444,6 +456,11 @@ impl NpuConfig {
             energy: match j.get("energy") {
                 Some(v) => EnergyConfig::from_json(v)?,
                 None => EnergyConfig::default(),
+            },
+            // Optional (absent unless explicitly disabled): cache on.
+            lowering_cache: match j.get("lowering_cache") {
+                Some(v) => v.as_bool()?,
+                None => true,
             },
             vector_latency: VectorLatency {
                 add: vj.req("add")?.as_u64()?,
@@ -589,6 +606,26 @@ mod tests {
         assert_eq!(c2.pool_spin, 500);
         assert!(c2.energy.enabled());
         assert!((c2.energy.tdp_mw - 9000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lowering_cache_roundtrips_and_defaults_on() {
+        // Default (on): no key emitted, so existing config files are
+        // byte-identical and legacy files load with the cache enabled.
+        let c = NpuConfig::server();
+        assert!(c.lowering_cache);
+        let j = c.to_json();
+        assert!(!j.contains("lowering_cache"), "cache-on config must not emit the key");
+        let c2 = NpuConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(c2.lowering_cache);
+
+        // Explicitly off: round-trips.
+        let mut c = NpuConfig::mobile();
+        c.lowering_cache = false;
+        let j = c.to_json();
+        assert!(j.contains("lowering_cache"));
+        let c2 = NpuConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(!c2.lowering_cache);
     }
 
     #[test]

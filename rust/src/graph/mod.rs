@@ -143,6 +143,20 @@ pub struct Graph {
     pub nodes: Vec<Node>,
     pub inputs: Vec<TensorId>,
     pub outputs: Vec<TensorId>,
+    /// Identity of the memoized graph this one was cloned from, if any.
+    /// Clones of one cached graph share the key, so downstream caches
+    /// (the lowering template cache) can key work off graph identity
+    /// instead of structural comparison. Process-local; never serialized.
+    pub cache_key: Option<u64>,
+}
+
+/// Mint a process-unique graph identity for [`Graph::cache_key`]. Keys
+/// never appear in reports, so the global counter cannot perturb
+/// determinism; it only needs to never collide across graph caches.
+pub fn fresh_cache_key() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
 impl Graph {

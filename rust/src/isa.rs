@@ -90,7 +90,7 @@ impl Opcode {
 
 /// An instruction plus its intra-tile dependencies (indices into the tile's
 /// instruction list).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Instr {
     pub op: Opcode,
     /// Indices of instructions within the same tile that must complete

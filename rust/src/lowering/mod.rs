@@ -13,6 +13,7 @@
 
 pub mod conv;
 pub mod gemm;
+pub mod template;
 pub mod tiling;
 pub mod vector;
 
@@ -30,7 +31,7 @@ pub struct JobRef {
 
 /// A tile-level operation: the unit of work the global scheduler dispatches
 /// to NPU cores.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Tile {
     pub job: JobRef,
     pub instrs: Vec<Instr>,

@@ -1,0 +1,445 @@
+//! Lowered-tile template cache: capture a node's tile program once, then
+//! instantiate it for later requests by rebasing.
+//!
+//! The paper's speed argument (§II-A) is that tile behavior is
+//! deterministic: for a given node and hardware config the tile program —
+//! instruction kinds, dependency edges, tile sizes — is a pure function of
+//! the op and tensor shapes. The only per-request variation is *where* the
+//! tensors live in DRAM (each request gets its own [`super::AddressMap`])
+//! and which `request_id` tags the tiles. So instead of re-deriving the
+//! program on every decode step, a [`NodeTemplate`] stores it once with
+//! every DMA address expressed *relative to its owning tensor's base*, and
+//! [`NodeTemplate::instantiate_into`] replays it as a flat copy that stamps
+//! the real request id and adds the new tensor bases back in.
+//!
+//! Capture is post-hoc: the node is lowered normally (zero changes to the
+//! gemm/conv/vector backends), then each `Mvin`/`Mvout` address is decoded
+//! by range containment against the node's own tensors — the bump
+//! allocator makes tensor ranges disjoint, so the owning tensor and the
+//! byte offset within it are recoverable from the absolute address alone.
+//! If any address fails to decode (e.g. an address-arithmetic overshoot
+//! past the owning tensor's allocation), [`NodeTemplate::capture`] returns
+//! `None` and the caller keeps lowering that node fresh — correctness
+//! never depends on the cache.
+//!
+//! The contract, enforced by the property tests below and the serve-level
+//! goldens in `rust/tests/kernel.rs`: instantiation is **byte-identical**
+//! to a fresh [`super::lower_node`] call for any request id and any
+//! address map built from the same graph.
+
+use super::{AddressMap, Tile};
+use crate::graph::{Graph, Node, TensorId};
+use crate::isa::{Instr, Opcode};
+
+/// Placeholder request id stored in a template's `JobRef`s; always
+/// overwritten at instantiation, and chosen so a leaked template tile
+/// would index out of any real request table instead of silently
+/// attributing work to request 0.
+pub const TEMPLATE_REQUEST_ID: usize = usize::MAX;
+
+/// One DMA address patch: instruction `instr_idx` of a tile carries an
+/// address `rel` bytes past the base of `tensor`.
+#[derive(Debug, Clone, PartialEq)]
+struct Reloc {
+    instr_idx: u32,
+    tensor: TensorId,
+    rel: u64,
+}
+
+/// A captured tile: instructions with tensor-relative DMA addresses, plus
+/// the relocation list that rebinds them to a concrete [`AddressMap`].
+#[derive(Debug, Clone)]
+struct TileTemplate {
+    node_id: usize,
+    tile_idx: usize,
+    /// `Mvin`/`Mvout` `dram_addr` fields hold tensor-relative offsets.
+    instrs: Vec<Instr>,
+    relocs: Vec<Reloc>,
+    spad_bytes: u64,
+    acc_bytes: u64,
+}
+
+/// An immutable, shareable tile program for one graph node.
+#[derive(Debug, Clone)]
+pub struct NodeTemplate {
+    tiles: Vec<TileTemplate>,
+    /// Shapes of the node's tensors (sorted-deduped inputs ∪ outputs) at
+    /// capture time — the guard against a graph-cache change silently
+    /// rebasing a mismatched program.
+    shapes: Vec<Vec<usize>>,
+    /// Instruction bytes replayed per instantiation (profiler metric).
+    instr_bytes: u64,
+}
+
+/// The node's own tensors in a canonical order (sorted, deduped), each
+/// with its `[base, end)` DRAM range under `amap`.
+fn tensor_ranges(g: &Graph, node: &Node, amap: &AddressMap) -> Vec<(TensorId, u64, u64)> {
+    let mut ids: Vec<TensorId> =
+        node.inputs.iter().chain(node.outputs.iter()).copied().collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids.into_iter()
+        .map(|t| {
+            let base = amap.addr(t);
+            (t, base, base + g.tensors[t].numel() * amap.element_bytes)
+        })
+        .collect()
+}
+
+fn node_shapes(g: &Graph, node: &Node) -> Vec<Vec<usize>> {
+    let mut ids: Vec<TensorId> =
+        node.inputs.iter().chain(node.outputs.iter()).copied().collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ids.into_iter().map(|t| g.tensors[t].shape.clone()).collect()
+}
+
+impl NodeTemplate {
+    /// Capture a template from the tiles a fresh [`super::lower_node`] call
+    /// produced for `node` under `amap`. Returns `None` if any DMA address
+    /// is not contained in one of the node's own tensor allocations, in
+    /// which case the node must keep being lowered fresh.
+    pub fn capture(g: &Graph, node: &Node, amap: &AddressMap, tiles: &[Tile]) -> Option<Self> {
+        let ranges = tensor_ranges(g, node, amap);
+        let mut out = Vec::with_capacity(tiles.len());
+        let mut instr_bytes = 0u64;
+        for tile in tiles {
+            let mut instrs = tile.instrs.clone();
+            let mut relocs = Vec::new();
+            for (i, instr) in instrs.iter_mut().enumerate() {
+                let addr = match &mut instr.op {
+                    Opcode::Mvin { dram_addr, .. } | Opcode::Mvout { dram_addr, .. } => dram_addr,
+                    _ => continue,
+                };
+                let (t, base, _) =
+                    *ranges.iter().find(|&&(_, lo, hi)| *addr >= lo && *addr < hi)?;
+                relocs.push(Reloc { instr_idx: i as u32, tensor: t, rel: *addr - base });
+                *addr -= base;
+            }
+            instr_bytes += (instrs.len() * std::mem::size_of::<Instr>()) as u64;
+            out.push(TileTemplate {
+                node_id: tile.job.node_id,
+                tile_idx: tile.job.tile_idx,
+                instrs,
+                relocs,
+                spad_bytes: tile.spad_bytes,
+                acc_bytes: tile.acc_bytes,
+            });
+        }
+        Some(NodeTemplate { tiles: out, shapes: node_shapes(g, node), instr_bytes })
+    }
+
+    /// True when `node`'s tensor shapes match the shapes this template was
+    /// captured from. A mismatch means the graph cache handed out a
+    /// structurally different graph under the same identity — rebasing
+    /// would produce a plausible-looking but wrong tile program.
+    pub fn shapes_match(&self, g: &Graph, node: &Node) -> bool {
+        self.shapes == node_shapes(g, node)
+    }
+
+    /// Number of tiles an instantiation produces.
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty()
+    }
+
+    /// Instruction bytes replayed per instantiation.
+    pub fn instr_bytes(&self) -> u64 {
+        self.instr_bytes
+    }
+
+    /// Append this template's tiles to `out`, stamped with `request_id`
+    /// and rebased onto `amap`. Byte-identical to the fresh
+    /// [`super::lower_node`] output the template was captured from.
+    pub fn instantiate_into(
+        &self,
+        g: &Graph,
+        node: &Node,
+        amap: &AddressMap,
+        request_id: usize,
+        out: &mut Vec<Tile>,
+    ) {
+        debug_assert!(
+            self.shapes_match(g, node),
+            "lowering template for node {} instantiated against mismatched shapes",
+            node.name
+        );
+        out.reserve(self.tiles.len());
+        for t in &self.tiles {
+            let mut instrs = t.instrs.clone();
+            for r in &t.relocs {
+                match &mut instrs[r.instr_idx as usize].op {
+                    Opcode::Mvin { dram_addr, .. } | Opcode::Mvout { dram_addr, .. } => {
+                        *dram_addr = amap.addr(r.tensor) + r.rel;
+                    }
+                    _ => unreachable!("relocation points at a non-DMA instruction"),
+                }
+            }
+            out.push(Tile {
+                job: super::JobRef { request_id, node_id: t.node_id, tile_idx: t.tile_idx },
+                instrs,
+                spad_bytes: t.spad_bytes,
+                acc_bytes: t.acc_bytes,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lower_node, AddressMap, LoweringParams};
+    use super::*;
+    use crate::config::NpuConfig;
+    use crate::graph::{Activation, OpKind};
+    use crate::util::rng::Rng;
+
+    fn params() -> LoweringParams {
+        LoweringParams::from_config(&NpuConfig::mobile())
+    }
+
+    /// Build a random single-node graph covering every lowering backend:
+    /// matmul (gemm), conv, fused attention, pooling, element-wise, and
+    /// shape-only ops.
+    fn random_node_graph(rng: &mut Rng) -> Graph {
+        let mut g = Graph::new("t");
+        match rng.next_u64() % 6 {
+            0 => {
+                let (m, k, n) = (
+                    1 + (rng.next_u64() % 96) as usize,
+                    8 + (rng.next_u64() % 256) as usize,
+                    8 + (rng.next_u64() % 256) as usize,
+                );
+                let x = g.activation("x", &[1, m, k]);
+                let w = g.weight("w", &[k, n]);
+                let y = g.activation("y", &[1, m, n]);
+                g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+            }
+            1 => {
+                let (c, h, oc) = (
+                    1 + (rng.next_u64() % 16) as usize,
+                    8 + (rng.next_u64() % 24) as usize,
+                    1 + (rng.next_u64() % 32) as usize,
+                );
+                let x = g.activation("x", &[1, c, h, h]);
+                let w = g.weight("w", &[oc, c, 3, 3]);
+                let y = g.activation("y", &[1, oc, h, h]);
+                g.node(
+                    "conv",
+                    OpKind::Conv {
+                        out_channels: oc,
+                        kernel: [3, 3],
+                        stride: [1, 1],
+                        padding: [1, 1],
+                        activation: Activation::None,
+                        fused_bn: false,
+                        fused_skip: false,
+                    },
+                    &[x, w],
+                    &[y],
+                );
+            }
+            2 => {
+                let (heads, hd) = (4usize, 32usize);
+                let kv = 16 + (rng.next_u64() % 128) as usize;
+                let q = g.activation("q", &[1, heads * hd]);
+                let k = g.activation("k", &[kv, heads * hd]);
+                let v = g.activation("v", &[kv, heads * hd]);
+                let y = g.activation("y", &[1, heads * hd]);
+                g.node(
+                    "attn",
+                    OpKind::FusedAttention {
+                        heads,
+                        kv_heads: heads,
+                        head_dim: hd,
+                        seq_q: 1,
+                        seq_kv: kv,
+                    },
+                    &[q, k, v],
+                    &[y],
+                );
+            }
+            3 => {
+                let d = 64 + (rng.next_u64() % 4096) as usize;
+                let x = g.activation("x", &[1, d]);
+                let s = g.activation("s", &[1, d]);
+                let y = g.activation("y", &[1, d]);
+                g.node("add", OpKind::Add, &[x, s], &[y]);
+            }
+            4 => {
+                let (c, h) = (
+                    1 + (rng.next_u64() % 8) as usize,
+                    8 + (rng.next_u64() % 24) as usize,
+                );
+                let x = g.activation("x", &[1, c, h, h]);
+                let y = g.activation("y", &[1, c, h / 2, h / 2]);
+                g.node(
+                    "pool",
+                    OpKind::MaxPool { kernel: [2, 2], stride: [2, 2], padding: [0, 0] },
+                    &[x],
+                    &[y],
+                );
+            }
+            _ => {
+                let d = 16 + (rng.next_u64() % 256) as usize;
+                let x = g.activation("x", &[4, d]);
+                let y = g.activation("y", &[4 * d]);
+                g.node("reshape", OpKind::Reshape, &[x], &[y]);
+            }
+        }
+        g.inputs = vec![0];
+        g.outputs = vec![g.tensors.len() - 1];
+        g
+    }
+
+    /// The tentpole contract: over randomized op kinds, shapes, request
+    /// ids and address-map bases, capture-then-instantiate reproduces the
+    /// fresh `lower_node` output exactly — tiles, instrs, deps, and
+    /// absolute addresses.
+    #[test]
+    fn instantiation_equals_fresh_lowering() {
+        let p = params();
+        let mut rng = Rng::new(0xB10C5);
+        for _ in 0..200 {
+            let g = random_node_graph(&mut rng);
+            let node = &g.nodes[0];
+            let base_a = (rng.next_u64() % 1024) * 4096;
+            let base_b = (rng.next_u64() % 1024) * 4096;
+            let amap_a = AddressMap::build(&g, 1, base_a);
+            let amap_b = AddressMap::build(&g, 1, base_b);
+            let rid_a = (rng.next_u64() % 64) as usize;
+            let rid_b = (rng.next_u64() % 64) as usize;
+
+            let fresh_a = lower_node(&g, node, &amap_a, &p, rid_a);
+            let tpl = NodeTemplate::capture(&g, node, &amap_a, &fresh_a)
+                .expect("every zoo-shaped node should capture cleanly");
+            assert_eq!(tpl.len(), fresh_a.len());
+
+            // Rebase onto a different request id and a different map.
+            let fresh_b = lower_node(&g, node, &amap_b, &p, rid_b);
+            let mut inst = Vec::new();
+            tpl.instantiate_into(&g, node, &amap_b, rid_b, &mut inst);
+            assert_eq!(inst, fresh_b, "template instantiation diverged on {:?}", node.op);
+
+            // And round-trip onto the capture map itself.
+            let mut same = Vec::new();
+            tpl.instantiate_into(&g, node, &amap_a, rid_a, &mut same);
+            assert_eq!(same, fresh_a);
+        }
+    }
+
+    #[test]
+    fn capture_stores_tensor_relative_addresses() {
+        let p = params();
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 32, 64]);
+        let w = g.weight("w", &[64, 64]);
+        let y = g.activation("y", &[1, 32, 64]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        let amap = AddressMap::build(&g, 1, 1 << 20);
+        let tiles = lower_node(&g, &g.nodes[0], &amap, &p, 3);
+        let tpl = NodeTemplate::capture(&g, &g.nodes[0], &amap, &tiles).unwrap();
+        // Every stored DMA address must be smaller than its owning
+        // tensor's allocation — i.e. a relative offset, not an absolute
+        // address (the map starts at 1 MiB, so absolutes would be huge).
+        for t in &tpl.tiles {
+            for r in &t.relocs {
+                let span = g.tensors[r.tensor].numel() * amap.element_bytes;
+                assert!(r.rel < span, "reloc offset {} outside tensor span {span}", r.rel);
+                match &t.instrs[r.instr_idx as usize].op {
+                    Opcode::Mvin { dram_addr, .. } | Opcode::Mvout { dram_addr, .. } => {
+                        assert_eq!(*dram_addr, r.rel);
+                    }
+                    other => panic!("reloc points at non-DMA op {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn undecodable_address_makes_node_non_cacheable() {
+        let p = params();
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[1, 8, 64]);
+        let w = g.weight("w", &[64, 64]);
+        let y = g.activation("y", &[1, 8, 64]);
+        g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+        let amap = AddressMap::build(&g, 1, 0);
+        let mut tiles = lower_node(&g, &g.nodes[0], &amap, &p, 0);
+        // Corrupt one DMA address to point far outside every tensor range,
+        // simulating an address-arithmetic overshoot.
+        'outer: for t in &mut tiles {
+            for i in &mut t.instrs {
+                if let Opcode::Mvin { dram_addr, .. } = &mut i.op {
+                    *dram_addr = u64::MAX / 2;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(NodeTemplate::capture(&g, &g.nodes[0], &amap, &tiles).is_none());
+    }
+
+    #[test]
+    fn shape_only_nodes_capture_as_empty_templates() {
+        let p = params();
+        let mut g = Graph::new("t");
+        let x = g.activation("x", &[4, 4]);
+        let y = g.activation("y", &[16]);
+        g.node("reshape", OpKind::Reshape, &[x], &[y]);
+        let amap = AddressMap::build(&g, 1, 0);
+        let tiles = lower_node(&g, &g.nodes[0], &amap, &p, 0);
+        assert!(tiles.is_empty());
+        let tpl = NodeTemplate::capture(&g, &g.nodes[0], &amap, &tiles).unwrap();
+        assert!(tpl.is_empty());
+        let mut out = Vec::new();
+        tpl.instantiate_into(&g, &g.nodes[0], &amap, 1, &mut out);
+        assert!(out.is_empty());
+    }
+
+    /// The cache-key hazard guard: a template captured from one shape must
+    /// refuse a node with different tensor shapes.
+    #[test]
+    fn shape_mismatch_is_detected() {
+        let p = params();
+        let build = |m: usize| {
+            let mut g = Graph::new("t");
+            let x = g.activation("x", &[1, m, 64]);
+            let w = g.weight("w", &[64, 64]);
+            let y = g.activation("y", &[1, m, 64]);
+            g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+            g
+        };
+        let g16 = build(16);
+        let amap = AddressMap::build(&g16, 1, 0);
+        let tiles = lower_node(&g16, &g16.nodes[0], &amap, &p, 0);
+        let tpl = NodeTemplate::capture(&g16, &g16.nodes[0], &amap, &tiles).unwrap();
+        assert!(tpl.shapes_match(&g16, &g16.nodes[0]));
+        let g32 = build(32);
+        assert!(!tpl.shapes_match(&g32, &g32.nodes[0]));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "mismatched shapes")]
+    fn shape_mismatch_panics_at_instantiation_in_debug() {
+        let p = params();
+        let build = |m: usize| {
+            let mut g = Graph::new("t");
+            let x = g.activation("x", &[1, m, 64]);
+            let w = g.weight("w", &[64, 64]);
+            let y = g.activation("y", &[1, m, 64]);
+            g.node("mm", OpKind::MatMul { activation: Activation::None }, &[x, w], &[y]);
+            g
+        };
+        let g16 = build(16);
+        let amap16 = AddressMap::build(&g16, 1, 0);
+        let tiles = lower_node(&g16, &g16.nodes[0], &amap16, &p, 0);
+        let tpl = NodeTemplate::capture(&g16, &g16.nodes[0], &amap16, &tiles).unwrap();
+        let g32 = build(32);
+        let amap32 = AddressMap::build(&g32, 1, 0);
+        let mut out = Vec::new();
+        tpl.instantiate_into(&g32, &g32.nodes[0], &amap32, 0, &mut out);
+    }
+}

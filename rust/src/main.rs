@@ -48,9 +48,10 @@
 //!             single-sim data plane (--sim-threads 1/2/4 on a
 //!             16-channel config), the sharded crossbar-NoC tick
 //!             (--sim-threads 1 vs 4 on the server crossbar config),
-//!             and a parallel vs serial 8-point serve sweep. Asserts
-//!             byte-identical results on all four comparisons and
-//!             writes a JSON summary:
+//!             a parallel vs serial 8-point serve sweep, and the
+//!             lowering-template cache on a continuous-decode serving
+//!             run (--lowering-cache on vs off). Asserts byte-identical
+//!             results on all five comparisons and writes a JSON summary:
 //!             onnxim bench kernel [--out BENCH_kernel.json] [--threads N]
 //!   validate  Core-model validation vs the RTL reference (Fig. 3b).
 //!   verify    Load artifacts/ and check functional numerics (L1/L2/L3).
@@ -64,7 +65,9 @@
 //! threads, byte-identical to serial; default 1) and `--pool-spin N`
 //! (worker-pool spin budget before
 //! parking; wall-clock tuning only, results are byte-identical at any
-//! setting).
+//! setting) and `--lowering-cache on|off` (memoize per-node tile
+//! programs and instantiate by address rebasing; on by default, results
+//! are byte-identical either way).
 //!
 //! Energy flags (`sim` and `serve`; all off by default — energy-off runs
 //! emit byte-identical reports to a pre-energy build):
@@ -94,7 +97,7 @@ use onnxim::graph::optimizer::{optimize, summarize, OptLevel};
 use onnxim::models;
 use onnxim::scheduler::{Fcfs, Policy, PowerCap, SloSlack, Spatial, TimeShared};
 use onnxim::Cycle;
-use onnxim::serve::{run_serve_mode, run_serve_telemetry, TrafficGen};
+use onnxim::serve::{run_serve_mode, run_serve_telemetry, ServeDriver, TrafficGen};
 use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
 use onnxim::telemetry::{Telemetry, TelemetryConfig};
 use onnxim::tenant::Trace;
@@ -148,6 +151,12 @@ fn load_config(opts: &HashMap<String, String>) -> anyhow::Result<NpuConfig> {
     }
     if let Some(spin) = opts.get("pool-spin") {
         cfg.pool_spin = spin.parse()?;
+    }
+    match opts.get("lowering-cache").map(String::as_str) {
+        None => {}
+        Some("on") => cfg.lowering_cache = true,
+        Some("off") => cfg.lowering_cache = false,
+        Some(other) => anyhow::bail!("unknown lowering-cache setting '{other}' (on|off)"),
     }
     match opts.get("energy").map(String::as_str) {
         None => {}
@@ -563,7 +572,7 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench kernel` — five fixed workloads with built-in equivalence
+/// `bench kernel` — six fixed workloads with built-in equivalence
 /// checks:
 ///
 /// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
@@ -589,6 +598,11 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
 ///    regresses). With `--profile`, a further profiled run (metrics
 ///    bucket enabled, so the allocation-arena counters see live gauge
 ///    sampling) writes `PROFILE_kernel.json`.
+/// 6. **Lowering-template cache** (continuous-batching decode serving on
+///    the server config): the same scenario with `--lowering-cache` on
+///    vs off. Reports must be byte-identical; `lowering_cache_speedup`
+///    and `template_hit_rate` quantify the control-plane payoff of
+///    instantiating memoized tile programs by address rebasing.
 fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
     use onnxim::graph::{Activation, Graph, OpKind};
 
@@ -772,6 +786,48 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
         )?;
     }
 
+    // --- Workload 6: lowering-template cache — a continuous-batching
+    //     decode serving run (the per-iteration graph re-submission
+    //     pattern the cache targets) with `--lowering-cache on` vs
+    //     `off`. Reports must be byte-identical: instantiation by
+    //     address rebasing is only a control-plane wall-clock win. ---
+    eprintln!("bench kernel: lowering-template cache (continuous decode serving), on vs off...");
+    let cache_scenario = || -> ServeConfig {
+        let mut t = TenantLoadConfig::continuous("gpt-tiny-decode", 100_000.0, 8);
+        t.process = "constant".into();
+        t.max_batch = 4;
+        t.kv_init = 32;
+        t.kv_block = 32;
+        t.max_queue = 64;
+        ServeConfig { seed: 11, duration_ms: 0.2, slo_ms: 2.0, tenants: vec![t] }
+    };
+    let cache_run = |cache: bool| -> anyhow::Result<(f64, String, (u64, u64, u64))> {
+        let scfg = cache_scenario();
+        let mut cfg = NpuConfig::server();
+        cfg.lowering_cache = cache;
+        let freq = cfg.core_freq_ghz;
+        let mut driver = ServeDriver::new(&scfg, freq)?;
+        let mut sim = Simulator::new(cfg, Box::new(Fcfs::new()));
+        let t0 = Instant::now();
+        let rep = sim.try_run(&mut driver)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let report = driver.report(rep.total_cycles, "fcfs", &scfg, freq).to_json();
+        Ok((secs, report, sim.sched.template_stats()))
+    };
+    let (cache_on_s, cache_on_rep, (tpl_hits, tpl_misses, tpl_bytes)) = cache_run(true)?;
+    let (cache_off_s, cache_off_rep, _) = cache_run(false)?;
+    if cache_on_rep != cache_off_rep {
+        anyhow::bail!("lowering cache changed the serve report (must be byte-identical)");
+    }
+    let cache_speedup = cache_off_s / cache_on_s.max(1e-9);
+    let hit_rate = tpl_hits as f64 / ((tpl_hits + tpl_misses).max(1)) as f64;
+    eprintln!(
+        "  cache off {cache_off_s:.3}s, on {cache_on_s:.3}s -> {cache_speedup:.2}x \
+         ({tpl_hits} hits / {tpl_misses} misses = {:.1}% hit rate, {tpl_bytes} B reused), \
+         reports byte-identical",
+        hit_rate * 100.0
+    );
+
     let json = Json::obj(vec![
         ("schema", Json::num(1.0)),
         (
@@ -823,6 +879,18 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 ("traced_sec", Json::num(traced_s)),
                 ("trace_events", Json::num(trace_events as f64)),
                 ("trace_overhead_pct", Json::num(trace_overhead_pct)),
+            ]),
+        ),
+        (
+            "lowering_cache",
+            Json::obj(vec![
+                ("off_sec", Json::num(cache_off_s)),
+                ("on_sec", Json::num(cache_on_s)),
+                ("lowering_cache_speedup", Json::num(cache_speedup)),
+                ("template_hit_rate", Json::num(hit_rate)),
+                ("hits", Json::num(tpl_hits as f64)),
+                ("misses", Json::num(tpl_misses as f64)),
+                ("bytes_reused", Json::num(tpl_bytes as f64)),
             ]),
         ),
     ])

@@ -240,6 +240,10 @@ impl TransformerGraphCache {
         }
         let mut g = transformer(key.0, key.1, key.2, &self.cfg);
         optimize(&mut g, OptLevel::Extended);
+        // Stamp a process-unique identity so downstream consumers (the
+        // scheduler's lowering-template cache) can recognize every clone of
+        // this memoized graph as the same bucketed pass.
+        g.cache_key = Some(crate::graph::fresh_cache_key());
         self.builds += 1;
         self.cache.insert(key, g.clone());
         g

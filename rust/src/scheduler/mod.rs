@@ -18,9 +18,12 @@ pub mod policy;
 pub use policy::{Fcfs, Policy, PowerCap, SloSlack, Spatial, TimeShared};
 
 use crate::graph::Graph;
+use crate::lowering::template::NodeTemplate;
 use crate::lowering::{lower_node, AddressMap, JobRef, LoweringParams, Tile};
+use crate::util::arena::VecPool;
 use crate::{Cycle, NEVER};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// One inference request instance and its execution state.
 pub struct Request {
@@ -89,6 +92,25 @@ pub struct GlobalScheduler {
     /// dispatch path pays nothing when energy accounting is off.
     pub tenant_work: Vec<(u64, u64)>,
     track_tenant_work: bool,
+    /// Lowering template cache: `(graph cache key, node id)` → captured
+    /// tile program, or `None` for nodes proven non-cacheable (an address
+    /// failed to decode at capture — keep lowering those fresh). Only
+    /// graphs carrying a [`Graph::cache_key`] (i.e. handed out by a graph
+    /// cache) participate; ad-hoc graphs bypass the map entirely.
+    templates: HashMap<(u64, usize), Option<Arc<NodeTemplate>>>,
+    /// Master switch (config `lowering_cache`, default on).
+    lowering_cache: bool,
+    /// Scratch buffers for template instantiation.
+    tile_scratch: VecPool<Tile>,
+    template_hits: u64,
+    template_misses: u64,
+    template_bytes_reused: u64,
+    /// Wall-clock ns spent in `lower_ready_node` (an informational subset
+    /// of the profiler's `control_ns`); accumulated only while
+    /// [`set_profile_lowering`](Self::set_profile_lowering) is on, so the
+    /// hot path never touches the clock in unprofiled runs.
+    lowering_ns: u64,
+    profile_lowering: bool,
 }
 
 impl GlobalScheduler {
@@ -103,7 +125,44 @@ impl GlobalScheduler {
             done_below: 0,
             tenant_work: Vec::new(),
             track_tenant_work: false,
+            templates: HashMap::new(),
+            lowering_cache: true,
+            tile_scratch: VecPool::default(),
+            template_hits: 0,
+            template_misses: 0,
+            template_bytes_reused: 0,
+            lowering_ns: 0,
+            profile_lowering: false,
         }
+    }
+
+    /// Enable/disable the lowering template cache (config
+    /// `lowering_cache`; on by default). Off forces every node through
+    /// fresh lowering — byte-identical results either way, so this exists
+    /// for benchmarking the cache and as an escape hatch.
+    pub fn set_lowering_cache(&mut self, on: bool) {
+        self.lowering_cache = on;
+    }
+
+    /// Enable wall-clock accounting of lowering time (driven by the
+    /// simulator when `--profile` attaches a profiler).
+    pub fn set_profile_lowering(&mut self, on: bool) {
+        self.profile_lowering = on;
+    }
+
+    /// `(template hits, misses, instruction bytes replayed)` so far.
+    pub fn template_stats(&self) -> (u64, u64, u64) {
+        (self.template_hits, self.template_misses, self.template_bytes_reused)
+    }
+
+    /// Wall-clock ns spent lowering (0 unless profiling was enabled).
+    pub fn lowering_ns(&self) -> u64 {
+        self.lowering_ns
+    }
+
+    /// Alloc/reuse counters of the instantiation scratch pool.
+    pub fn lowering_arena_stats(&self) -> (u64, u64) {
+        self.tile_scratch.stats()
     }
 
     /// Enable per-tenant `(MACs, DMA bytes)` dispatch accounting for
@@ -187,15 +246,75 @@ impl GlobalScheduler {
 
     /// Lower node `nid` of request `r` and enqueue its tiles. Shape-only
     /// nodes complete immediately (recursively releasing successors).
+    ///
+    /// When the request's graph carries a cache key (it came from a graph
+    /// cache), the tile program is served from the template cache: the
+    /// first visit to a `(graph, node)` pair lowers fresh and captures a
+    /// template; every later visit instantiates it by rebasing — a flat
+    /// copy stamped with this request's id and addresses, byte-identical
+    /// to what fresh lowering would have produced.
     fn lower_ready_node(&mut self, r: usize, nid: usize, now: Cycle) {
-        let req = &mut self.requests[r];
+        let t0 = self.profile_lowering.then(std::time::Instant::now);
+        let key = if self.lowering_cache {
+            self.requests[r].graph.cache_key.map(|k| (k, nid))
+        } else {
+            None
+        };
+
+        // Fast path: instantiate a cached template.
+        if let Some(k) = key {
+            if let Some(Some(tpl)) = self.templates.get(&k) {
+                let tpl = tpl.clone();
+                let mut tiles = self.tile_scratch.take();
+                {
+                    let req = &self.requests[r];
+                    tpl.instantiate_into(
+                        &req.graph,
+                        &req.graph.nodes[nid],
+                        &req.amap,
+                        r,
+                        &mut tiles,
+                    );
+                }
+                self.template_hits += 1;
+                self.template_bytes_reused += tpl.instr_bytes();
+                let req = &mut self.requests[r];
+                req.remaining_tiles[nid] = tiles.len();
+                let empty = tiles.is_empty();
+                req.ready.extend(tiles.drain(..));
+                self.tile_scratch.put(tiles);
+                if empty {
+                    self.complete_node(r, nid, now);
+                }
+                if let Some(t0) = t0 {
+                    self.lowering_ns += t0.elapsed().as_nanos() as u64;
+                }
+                return;
+            }
+        }
+
+        // Slow path: lower fresh. The first visit to a keyed (graph,
+        // node) pair additionally captures the template — or records the
+        // node as non-cacheable when an address fails to decode.
+        let req = &self.requests[r];
         let tiles = lower_node(&req.graph, &req.graph.nodes[nid], &req.amap, &self.params, r);
+        if let Some(k) = key {
+            self.template_misses += 1;
+            self.templates.entry(k).or_insert_with(|| {
+                NodeTemplate::capture(&req.graph, &req.graph.nodes[nid], &req.amap, &tiles)
+                    .map(Arc::new)
+            });
+        }
+        let req = &mut self.requests[r];
         if tiles.is_empty() {
             req.remaining_tiles[nid] = 0;
             self.complete_node(r, nid, now);
         } else {
             req.remaining_tiles[nid] = tiles.len();
             req.ready.extend(tiles);
+        }
+        if let Some(t0) = t0 {
+            self.lowering_ns += t0.elapsed().as_nanos() as u64;
         }
     }
 
@@ -544,6 +663,42 @@ mod tests {
         assert_eq!(s.tenant_work, expect);
         assert!(expect[0].0 > 0 && expect[2].0 > 0, "both tenants did MACs");
         assert_eq!(expect[1], (0, 0), "tenant 1 never dispatched");
+    }
+
+    #[test]
+    fn template_cache_hits_on_keyed_graphs_and_matches_fresh_lowering() {
+        let mut keyed = two_layer_graph();
+        keyed.cache_key = Some(crate::graph::fresh_cache_key());
+        // Cache on (default): the first request's fc1 lowering misses and
+        // captures; the second request's is instantiated from the template.
+        let mut s = sched();
+        s.add_request(keyed.clone(), 0, 0);
+        s.add_request(keyed.clone(), 0, 0);
+        s.activate_arrivals(0);
+        let (h, m, bytes) = s.template_stats();
+        assert_eq!((h, m), (1, 1));
+        assert!(bytes > 0, "hits must report replayed instruction bytes");
+        // Cache off: same workload, everything lowered fresh.
+        let mut s2 = sched();
+        s2.set_lowering_cache(false);
+        s2.add_request(keyed.clone(), 0, 0);
+        s2.add_request(keyed, 0, 0);
+        s2.activate_arrivals(0);
+        assert_eq!(s2.template_stats(), (0, 0, 0));
+        // The instantiated ready queue is byte-identical to the fresh one
+        // (both schedulers assign identical address maps).
+        let on: Vec<Tile> = s.requests[1].ready.iter().cloned().collect();
+        let off: Vec<Tile> = s2.requests[1].ready.iter().cloned().collect();
+        assert_eq!(on, off, "template instantiation diverged from fresh lowering");
+    }
+
+    #[test]
+    fn unkeyed_graphs_bypass_template_cache() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.add_request(two_layer_graph(), 0, 0);
+        s.activate_arrivals(0);
+        assert_eq!(s.template_stats(), (0, 0, 0));
     }
 
     #[test]

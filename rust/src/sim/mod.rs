@@ -208,6 +208,7 @@ impl Simulator {
             // the meter; the dispatch path stays untouched otherwise.
             sched.set_track_tenant_work(true);
         }
+        sched.set_lowering_cache(cfg.lowering_cache);
         let n = cfg.num_cores;
         let channels = cfg.dram.channels;
         let max_cycles = cfg.max_cycles;
@@ -279,6 +280,8 @@ impl Simulator {
             if tel.tracer.is_some() && tel.cfg.trace_mem {
                 self.dram.set_trace(true);
             }
+            // Lowering stopwatch only when a profiler will report it.
+            self.sched.set_profile_lowering(tel.prof.is_some());
         }
         self
     }
@@ -525,6 +528,7 @@ impl Simulator {
                 self.gauge_row.arena_stats(),
                 self.tile_scratch.stats(),
                 self.req_scratch.stats(),
+                self.sched.lowering_arena_stats(),
                 self.driver_arena,
             ] {
                 allocs += a;
@@ -532,6 +536,12 @@ impl Simulator {
             }
             p.arena_allocs = allocs;
             p.arena_reuses = reuses;
+            // Lowering-template cache accounting (assignments: idempotent).
+            let (hits, misses, bytes) = self.sched.template_stats();
+            p.template_hits = hits;
+            p.template_misses = misses;
+            p.template_bytes_reused = bytes;
+            p.lowering_ns = self.sched.lowering_ns();
         }
         if let Some(m) = tel.metrics.as_mut() {
             m.set_counter("dram_next_event_recomputes", self.dram.next_event_recomputes());

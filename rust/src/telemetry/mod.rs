@@ -451,6 +451,15 @@ pub struct Profiler {
     /// Steady-state runs should show reuses dwarfing allocations.
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    /// Wall-clock spent lowering graph nodes into tiles (template
+    /// instantiation + fresh lowering), a slice of `control_ns`.
+    pub lowering_ns: u64,
+    /// Lowering-template cache: nodes instantiated from a memoized
+    /// template vs lowered fresh, and instruction bytes served from
+    /// templates instead of re-derived.
+    pub template_hits: u64,
+    pub template_misses: u64,
+    pub template_bytes_reused: u64,
 }
 
 impl Profiler {
@@ -469,6 +478,10 @@ impl Profiler {
             ("pool_parks", Json::Num(self.pool_parks as f64)),
             ("arena_allocs", Json::Num(self.arena_allocs as f64)),
             ("arena_reuses", Json::Num(self.arena_reuses as f64)),
+            ("lowering_ns", Json::Num(self.lowering_ns as f64)),
+            ("template_hits", Json::Num(self.template_hits as f64)),
+            ("template_misses", Json::Num(self.template_misses as f64)),
+            ("template_bytes_reused", Json::Num(self.template_bytes_reused as f64)),
         ])
     }
 }
@@ -602,6 +615,10 @@ mod tests {
             pool_spins: 17,
             arena_allocs: 5,
             arena_reuses: 95,
+            lowering_ns: 1234,
+            template_hits: 40,
+            template_misses: 2,
+            template_bytes_reused: 4096,
             ..Default::default()
         };
         let j = p.to_json();
@@ -610,6 +627,10 @@ mod tests {
         assert_eq!(j.get("pool_spins").unwrap().as_u64().unwrap(), 17);
         assert_eq!(j.get("arena_allocs").unwrap().as_u64().unwrap(), 5);
         assert_eq!(j.get("arena_reuses").unwrap().as_u64().unwrap(), 95);
+        assert_eq!(j.get("lowering_ns").unwrap().as_u64().unwrap(), 1234);
+        assert_eq!(j.get("template_hits").unwrap().as_u64().unwrap(), 40);
+        assert_eq!(j.get("template_misses").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("template_bytes_reused").unwrap().as_u64().unwrap(), 4096);
     }
 
     #[test]

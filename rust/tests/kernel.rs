@@ -251,6 +251,35 @@ fn serve_shapes_agree_across_sim_threads() {
     }
 }
 
+/// The lowering-template cache must be result-invisible: instantiating a
+/// memoized tile program by address rebasing has to produce the same
+/// tiles — and therefore the same report bytes — as lowering every node
+/// fresh, across both kernels and the parallel data plane. Continuous
+/// batching and chunked prefill are the shapes where the cache actually
+/// engages (bucketed graphs are re-submitted every iteration).
+#[test]
+fn lowering_cache_is_report_invisible_across_kernels_and_threads() {
+    let with_cache = |scfg: &ServeConfig, mode: KernelMode, threads: usize, cache: bool| {
+        let mut cfg = NpuConfig::server();
+        cfg.sim_threads = threads;
+        cfg.lowering_cache = cache;
+        run_serve_mode(cfg, Box::new(Fcfs::new()), scfg, mode)
+            .expect("serve scenario")
+            .to_json()
+    };
+    for (name, scfg) in [("continuous", continuous_scenario()), ("prefill", prefill_scenario())] {
+        for mode in [KernelMode::Windowed, KernelMode::Reference] {
+            for threads in [1usize, 4] {
+                assert_eq!(
+                    with_cache(&scfg, mode, threads, true),
+                    with_cache(&scfg, mode, threads, false),
+                    "lowering cache changed the {name} report ({mode:?}, {threads} threads)"
+                );
+            }
+        }
+    }
+}
+
 /// Multi-seed stress on the crossbar NoC: the flit-level switch is the
 /// NoC model with the most intricate shared state (wormhole locks,
 /// round-robin pointers, bounded input queues), so hammer the lane
