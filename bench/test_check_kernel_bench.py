@@ -18,7 +18,8 @@ from check_kernel_bench import baseline_snippet, check  # noqa: E402
 
 def bench_result(dense_speedup=1.5, windowed_cps=2_000_000.0, sweep_speedup=2.0,
                  sweep_threads=4, par_speedup=1.8, noc_par_speedup=1.5,
-                 trace_overhead=5.0, cache_speedup=1.4, cache_hit_rate=0.98):
+                 trace_overhead=5.0, cache_speedup=1.4, cache_hit_rate=0.98,
+                 setup_speedup=2.5, clones_avoided=40, topo_reuses=39):
     """A healthy BENCH_kernel.json document, fields overridable per test."""
     return {
         "schema": 1,
@@ -67,6 +68,15 @@ def bench_result(dense_speedup=1.5, windowed_cps=2_000_000.0, sweep_speedup=2.0,
             "misses": 20,
             "bytes_reused": 4_000_000,
         },
+        "request_setup": {
+            "cloned_sec": 1.0,
+            "shared_sec": 0.9,
+            "cloned_setup_ns": 500_000.0 * setup_speedup,
+            "shared_setup_ns": 500_000.0,
+            "request_setup_speedup": setup_speedup,
+            "graph_clones_avoided": clones_avoided,
+            "topo_reuses": topo_reuses,
+        },
     }
 
 
@@ -79,6 +89,7 @@ def baseline(windowed_cps=0):
         "parallel_dataplane": {"min_speedup": 1.0},
         "noc_parallel": {"min_speedup": 1.0},
         "lowering_cache": {"min_speedup": 1.0, "min_hit_rate": 0.9},
+        "request_setup": {"min_speedup": 1.0},
     }
 
 
@@ -163,6 +174,28 @@ class CheckTests(unittest.TestCase):
         self.assertTrue(any("WARN (advisory)" in ln and "hit rate" in ln
                             for ln in lines))
 
+    def test_request_setup_speedup_is_advisory(self):
+        # Below-target setup speedup warns but never fails — the
+        # stopwatch ratio is steadier than wall clock, but still
+        # runner-dependent.
+        lines, failures = check(bench_result(setup_speedup=0.7), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("WARN (advisory)" in ln and "request-setup" in ln
+                            for ln in lines))
+
+    def test_request_setup_healthy_run_has_no_warn(self):
+        lines, failures = check(bench_result(), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any(ln.startswith("request setup:") for ln in lines))
+        self.assertFalse(any("WARN" in ln and "request" in ln for ln in lines))
+
+    def test_request_setup_zero_clones_avoided_warns(self):
+        # clones_avoided==0 means submissions stopped arriving as Arcs —
+        # the zero-clone path silently regressed. Loud but advisory.
+        lines, failures = check(bench_result(clones_avoided=0), baseline())
+        self.assertEqual(failures, [])
+        self.assertTrue(any("graph_clones_avoided is 0" in ln for ln in lines))
+
     def test_missing_optional_sections_tolerated(self):
         # Old bench artifacts without the dataplane/tracing sections still
         # gate on the required comparisons.
@@ -171,6 +204,7 @@ class CheckTests(unittest.TestCase):
         del cur["noc_parallel"]
         del cur["tracing"]
         del cur["lowering_cache"]
+        del cur["request_setup"]
         _, failures = check(cur, baseline())
         self.assertEqual(failures, [])
 

@@ -9,6 +9,7 @@
 
 pub mod json;
 pub mod optimizer;
+pub mod topo;
 
 use std::collections::HashMap;
 

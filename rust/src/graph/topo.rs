@@ -1,0 +1,246 @@
+//! Derived per-graph structure shared by every request instance.
+//!
+//! Before this module existed, every admitted request re-derived its
+//! dependency bookkeeping from scratch: a `producers()` hash map, a
+//! per-node indegree vector, a `Vec<Vec<NodeId>>` successor table, and a
+//! fresh `AddressMap` layout walk — all pure functions of the graph, all
+//! recomputed per submission. Continuous batching re-submits the same
+//! bucketed decode graph every iteration, so that per-request setup cost
+//! is a per-token cost at serving scale.
+//!
+//! [`GraphTopo`] hoists everything request-invariant out of the request:
+//! the successor adjacency in CSR form (one flat `succs` array plus an
+//! `offsets` index instead of a vector of vectors), the indegree template
+//! the scheduler copies into each request's mutable countdown, and the
+//! relative DRAM layout (`rel`/`footprint`) that [`AddressMap`] turns
+//! into absolute addresses by adding a per-request base. It is computed
+//! once per cached graph and shared via `Arc` alongside the
+//! `Arc<Graph>` itself — a cache hit is two refcount bumps.
+//!
+//! [`AddressMap`]: crate::lowering::AddressMap
+
+use super::{Graph, NodeId, TensorKind};
+use std::sync::Arc;
+
+/// The relative (base-0) DRAM layout of a graph's tensors: weights first
+/// (stable layout shared across batch), then activations, each 64-B
+/// aligned (DRAM access granularity). Returns `(rel, footprint)` where
+/// `rel[t]` is tensor `t`'s offset from the request base. This is the
+/// single source of truth for the layout — [`AddressMap::build`] and
+/// [`GraphTopo::derive`] both call it, so their addresses agree by
+/// construction.
+///
+/// [`AddressMap::build`]: crate::lowering::AddressMap::build
+pub fn relative_layout(g: &Graph, element_bytes: u64) -> (Vec<u64>, u64) {
+    let mut rel = vec![0u64; g.tensors.len()];
+    let mut next = 0u64;
+    let mut alloc = |rel: &mut [u64], t: usize, bytes: u64| {
+        let aligned = next.div_ceil(64) * 64;
+        rel[t] = aligned;
+        next = aligned + bytes;
+    };
+    for t in 0..g.tensors.len() {
+        if g.tensors[t].kind == TensorKind::Weight {
+            alloc(&mut rel, t, g.tensors[t].numel() * element_bytes);
+        }
+    }
+    for t in 0..g.tensors.len() {
+        if g.tensors[t].kind == TensorKind::Activation {
+            alloc(&mut rel, t, g.tensors[t].numel() * element_bytes);
+        }
+    }
+    (rel, next)
+}
+
+/// Request-invariant graph structure: CSR successor adjacency, indegree
+/// template, and the relative tensor layout. Immutable after derivation;
+/// shared across requests as `Arc<GraphTopo>` (see module docs).
+#[derive(Debug)]
+pub struct GraphTopo {
+    /// CSR row index: node `i`'s successors are
+    /// `succs[offsets[i]..offsets[i + 1]]`. Length `nodes + 1`.
+    pub offsets: Vec<usize>,
+    /// Flat successor array, in the same per-producer order the old
+    /// `Vec<Vec<NodeId>>` derivation pushed them (nodes visited in id
+    /// order, inputs in declaration order).
+    pub succs: Vec<NodeId>,
+    /// Per-node unresolved-input count at activation. Requests copy this
+    /// template into their mutable countdown vector.
+    pub indegree: Vec<usize>,
+    /// Relative DRAM layout from [`relative_layout`], shared with every
+    /// request's [`AddressMap`](crate::lowering::AddressMap).
+    pub rel: Arc<Vec<u64>>,
+    /// Total layout footprint in bytes (relative to the request base).
+    pub footprint: u64,
+    pub element_bytes: u64,
+}
+
+impl GraphTopo {
+    /// Derive the topology and layout for `g`. Byte-for-byte equivalent
+    /// to the per-request derivation it replaces: same edge order, same
+    /// indegrees, same addresses once a base is added.
+    pub fn derive(g: &Graph, element_bytes: usize) -> Self {
+        let n = g.nodes.len();
+        let producers = g.producers();
+        let mut indegree = vec![0usize; n];
+        let mut counts = vec![0usize; n];
+        for node in &g.nodes {
+            for &t in &node.inputs {
+                if let Some(&p) = producers.get(&t) {
+                    indegree[node.id] += 1;
+                    counts[p] += 1;
+                }
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + counts[i];
+        }
+        // Second pass fills the flat array in the same iteration order as
+        // the counting pass, so each producer's successor run preserves
+        // the push order of the old Vec<Vec<NodeId>> derivation.
+        let mut cursor: Vec<usize> = offsets[..n].to_vec();
+        let mut succs = vec![0usize; offsets[n]];
+        for node in &g.nodes {
+            for &t in &node.inputs {
+                if let Some(&p) = producers.get(&t) {
+                    succs[cursor[p]] = node.id;
+                    cursor[p] += 1;
+                }
+            }
+        }
+        let (rel, footprint) = relative_layout(g, element_bytes as u64);
+        GraphTopo {
+            offsets,
+            succs,
+            indegree,
+            rel: Arc::new(rel),
+            footprint,
+            element_bytes: element_bytes as u64,
+        }
+    }
+
+    /// Successors of node `nid` as a borrowed CSR slice (no allocation).
+    pub fn succs_of(&self, nid: NodeId) -> &[NodeId] {
+        &self.succs[self.offsets[nid]..self.offsets[nid + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::optimizer::{optimize, OptLevel};
+    use crate::lowering::AddressMap;
+    use crate::models;
+    use crate::util::rng::Rng;
+
+    /// The pre-CSR per-request derivation, kept inline as the executable
+    /// reference: nodes in id order, inputs in declaration order.
+    fn reference_derivation(g: &Graph) -> (Vec<usize>, Vec<Vec<NodeId>>) {
+        let producers = g.producers();
+        let n = g.nodes.len();
+        let mut indegree = vec![0usize; n];
+        let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for node in &g.nodes {
+            for &t in &node.inputs {
+                if let Some(&p) = producers.get(&t) {
+                    indegree[node.id] += 1;
+                    succs[p].push(node.id);
+                }
+            }
+        }
+        (indegree, succs)
+    }
+
+    fn assert_topo_matches(g: &Graph, element_bytes: usize, label: &str) {
+        let topo = GraphTopo::derive(g, element_bytes);
+        let (indegree, succs) = reference_derivation(g);
+        assert_eq!(topo.indegree, indegree, "{label}: indegree template diverged");
+        assert_eq!(topo.offsets.len(), g.nodes.len() + 1, "{label}: offsets length");
+        for nid in 0..g.nodes.len() {
+            assert_eq!(
+                topo.succs_of(nid),
+                succs[nid].as_slice(),
+                "{label}: successor run of node {nid} diverged (order matters)"
+            );
+        }
+        // The relative layout matches a base-0 AddressMap exactly, and a
+        // from_topo map at any 4096-multiple base matches a fresh build.
+        let base0 = AddressMap::build(g, element_bytes, 0);
+        for t in 0..g.tensors.len() {
+            assert_eq!(topo.rel[t], base0.addr(t), "{label}: tensor {t} relative address");
+        }
+        assert_eq!(topo.footprint, base0.footprint(), "{label}: footprint");
+        let mut rng = Rng::new(0xC5F0 ^ g.nodes.len() as u64);
+        for _ in 0..4 {
+            let base = (rng.next_u64() % 1024) * 4096;
+            let fresh = AddressMap::build(g, element_bytes, base);
+            let shared = AddressMap::from_topo(&topo, base);
+            for t in 0..g.tensors.len() {
+                assert_eq!(
+                    shared.addr(t),
+                    fresh.addr(t),
+                    "{label}: tensor {t} diverged at base {base}"
+                );
+            }
+            assert_eq!(shared.footprint(), fresh.footprint(), "{label}: footprint at {base}");
+        }
+    }
+
+    #[test]
+    fn topo_matches_reference_derivation_across_model_zoo() {
+        for name in [
+            "mlp",
+            "resnet50",
+            "gpt3-small-prefill",
+            "gpt3-small-decode",
+            "gpt-tiny-decode",
+        ] {
+            for batch in [1usize, 3] {
+                let g = models::by_name(name, batch).unwrap();
+                assert_topo_matches(&g, 1, &format!("{name}/b{batch}/raw"));
+                // Optimized graphs are what the serving caches actually
+                // hand out; fusion rewrites nodes and edges, so cover the
+                // post-optimizer shape too.
+                let mut opt = models::by_name(name, batch).unwrap();
+                optimize(&mut opt, OptLevel::Extended);
+                assert_topo_matches(&opt, 2, &format!("{name}/b{batch}/opt"));
+            }
+        }
+    }
+
+    #[test]
+    fn topo_matches_reference_on_randomized_transformer_buckets() {
+        let mut rng = Rng::new(42);
+        for _ in 0..8 {
+            let batch = 1 + (rng.next_u64() % 4) as usize;
+            let q = 1 + (rng.next_u64() % 64) as usize;
+            let kv = q + (rng.next_u64() % 256) as usize;
+            let mut g = models::gpt::transformer(batch, q, kv, &models::TransformerCfg::tiny());
+            optimize(&mut g, OptLevel::Extended);
+            assert_topo_matches(&g, 2, &format!("transformer/b{batch}/q{q}/kv{kv}"));
+        }
+    }
+
+    #[test]
+    fn shape_only_and_fanout_edges_counted_per_edge() {
+        use crate::graph::OpKind;
+        // One producer feeding two consumers, one of which reads it twice:
+        // indegree counts edges (not distinct producers), and the CSR run
+        // preserves duplicate successors in push order.
+        let mut g = Graph::new("fanout");
+        let x = g.activation("x", &[4]);
+        let a = g.activation("a", &[4]);
+        g.node("p", OpKind::Relu, &[x], &[a]);
+        let b = g.activation("b", &[4]);
+        g.node("c1", OpKind::Add, &[a, a], &[b]);
+        let c = g.activation("c", &[4]);
+        g.node("c2", OpKind::Relu, &[a], &[c]);
+        g.inputs = vec![x];
+        g.outputs = vec![b, c];
+        let topo = GraphTopo::derive(&g, 1);
+        assert_eq!(topo.indegree, vec![0, 2, 1]);
+        assert_eq!(topo.succs_of(0), &[1, 1, 2]);
+        assert!(topo.succs_of(1).is_empty() && topo.succs_of(2).is_empty());
+    }
+}

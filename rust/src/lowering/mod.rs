@@ -17,9 +17,8 @@ pub mod template;
 pub mod tiling;
 pub mod vector;
 
-use crate::graph::{Graph, Node, OpKind, TensorId, TensorKind};
+use crate::graph::{Graph, Node, OpKind, TensorId};
 use crate::isa::Instr;
-use std::collections::HashMap;
 
 /// Identifies the work a tile belongs to (request → node → tile index).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -74,44 +73,56 @@ impl Tile {
 /// model share one allocation (they are read-only); activations are
 /// per-request. A bump allocator is sufficient: the simulator models
 /// traffic, not liveness-based reuse (same as ONNXim).
+///
+/// The map is a *relative* layout (offsets from a request base, shared via
+/// `Arc` — see [`crate::graph::topo::relative_layout`]) plus the base
+/// itself. Every request instantiated from the same cached graph shares
+/// one layout vector; only the 8-byte base differs. Because the base is
+/// always a 64-multiple (the scheduler rounds region bases to 4096) and
+/// every relative offset is 64-aligned, `base + rel[t]` is bit-identical
+/// to what the old bump-from-`start` walk produced.
 #[derive(Debug, Clone)]
 pub struct AddressMap {
-    base: HashMap<TensorId, u64>,
-    next: u64,
+    /// Relative offset per tensor id, shared across requests.
+    rel: std::sync::Arc<Vec<u64>>,
+    /// Absolute base of this request's region.
+    base: u64,
+    /// Absolute end of the region (`base + relative footprint`).
+    end: u64,
     pub element_bytes: u64,
 }
 
 impl AddressMap {
     /// Lay out all graph tensors contiguously from `start`.
     pub fn build(g: &Graph, element_bytes: usize, start: u64) -> Self {
-        let mut m = AddressMap {
-            base: HashMap::new(),
-            next: start,
+        let (rel, fp) = crate::graph::topo::relative_layout(g, element_bytes as u64);
+        // First allocation 64-aligns anyway, so rounding the base up front
+        // commutes with the old bump-from-`start` layout.
+        let base = start.div_ceil(64) * 64;
+        AddressMap {
+            rel: std::sync::Arc::new(rel),
+            base,
+            end: base + fp,
             element_bytes: element_bytes as u64,
-        };
-        // Weights first (stable layout shared across batch), then activations.
-        for t in 0..g.tensors.len() {
-            if g.tensors[t].kind == TensorKind::Weight {
-                m.alloc(t, g.tensors[t].numel() * element_bytes as u64);
-            }
         }
-        for t in 0..g.tensors.len() {
-            if g.tensors[t].kind == TensorKind::Activation {
-                m.alloc(t, g.tensors[t].numel() * element_bytes as u64);
-            }
-        }
-        m
     }
 
-    fn alloc(&mut self, t: TensorId, bytes: u64) {
-        // 64 B aligned (DRAM access granularity).
-        let aligned = self.next.div_ceil(64) * 64;
-        self.base.insert(t, aligned);
-        self.next = aligned + bytes;
+    /// Rebase a precomputed shared layout — the zero-clone path: two word
+    /// copies and an `Arc` refcount bump instead of a per-request layout
+    /// walk. `base` must be 64-aligned (the scheduler hands in
+    /// 4096-multiples).
+    pub fn from_topo(topo: &crate::graph::topo::GraphTopo, base: u64) -> Self {
+        debug_assert_eq!(base % 64, 0, "request base must be 64-aligned");
+        AddressMap {
+            rel: std::sync::Arc::clone(&topo.rel),
+            base,
+            end: base + topo.footprint,
+            element_bytes: topo.element_bytes,
+        }
     }
 
     pub fn addr(&self, t: TensorId) -> u64 {
-        *self.base.get(&t).expect("tensor has no address")
+        self.base + *self.rel.get(t).expect("tensor has no address")
     }
 
     /// Address of a sub-range of a tensor, given an element offset.
@@ -121,7 +132,7 @@ impl AddressMap {
 
     /// Total allocated footprint in bytes.
     pub fn footprint(&self) -> u64 {
-        self.next
+        self.end
     }
 }
 

@@ -572,7 +572,7 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench kernel` — six fixed workloads with built-in equivalence
+/// `bench kernel` — seven fixed workloads with built-in equivalence
 /// checks:
 ///
 /// 1. **Dense contention** (memory-bound GEMV co-located with a bandwidth
@@ -603,6 +603,13 @@ fn cmd_trace_gen(opts: HashMap<String, String>) -> anyhow::Result<()> {
 ///    vs off. Reports must be byte-identical; `lowering_cache_speedup`
 ///    and `template_hit_rate` quantify the control-plane payoff of
 ///    instantiating memoized tile programs by address rebasing.
+/// 7. **Zero-clone request instantiation** (the workload-6 scenario
+///    again): Arc-shared submission vs the emulated pre-change path
+///    (deep graph clone + fresh topology derivation per request, via
+///    `set_clone_requests`). Reports must be byte-identical;
+///    `request_setup_speedup` compares the request-setup stopwatches
+///    (`request_setup_ns`, robust against run-to-run wall-clock noise)
+///    and `graph_clones_avoided`/`topo_reuses` count the skipped work.
 fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
     use onnxim::graph::{Activation, Graph, OpKind};
 
@@ -828,6 +835,43 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
         hit_rate * 100.0
     );
 
+    // --- Workload 7: zero-clone request instantiation — the same
+    //     continuous-decode scenario, Arc-shared submission vs the
+    //     emulated pre-change path (deep clone + fresh topo derivation
+    //     per request). Reports must be byte-identical; the speedup
+    //     compares request-setup stopwatches, not whole-run wall clock,
+    //     so it isolates the instantiation path. ---
+    eprintln!("bench kernel: request instantiation (continuous decode serving), shared vs cloned...");
+    let setup_run = |clone: bool| -> anyhow::Result<(f64, String, u64, (u64, u64))> {
+        let scfg = cache_scenario();
+        let cfg = NpuConfig::server();
+        let freq = cfg.core_freq_ghz;
+        let mut driver = ServeDriver::new(&scfg, freq)?;
+        let mut sim = Simulator::new(cfg, Box::new(Fcfs::new()));
+        sim.sched.set_clone_requests(clone);
+        // Arm the setup stopwatch directly (no telemetry bundle needed);
+        // wall-clock accounting never touches the report.
+        sim.sched.set_profile_lowering(true);
+        let t0 = Instant::now();
+        let rep = sim.try_run(&mut driver)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let report = driver.report(rep.total_cycles, "fcfs", &scfg, freq).to_json();
+        Ok((secs, report, sim.sched.request_setup_ns(), sim.sched.request_setup_stats()))
+    };
+    let (shared_s, shared_rep, shared_ns, (clones_avoided, topo_reuses)) = setup_run(false)?;
+    let (cloned_s, cloned_rep, cloned_ns, _) = setup_run(true)?;
+    if shared_rep != cloned_rep {
+        anyhow::bail!(
+            "zero-clone request instantiation changed the serve report (must be byte-identical)"
+        );
+    }
+    let setup_speedup = cloned_ns as f64 / (shared_ns as f64).max(1.0);
+    eprintln!(
+        "  cloned setup {cloned_ns} ns ({cloned_s:.3}s run), shared setup {shared_ns} ns \
+         ({shared_s:.3}s run) -> {setup_speedup:.2}x \
+         ({clones_avoided} clones avoided, {topo_reuses} topo reuses), reports byte-identical"
+    );
+
     let json = Json::obj(vec![
         ("schema", Json::num(1.0)),
         (
@@ -891,6 +935,18 @@ fn cmd_bench_kernel(opts: HashMap<String, String>) -> anyhow::Result<()> {
                 ("hits", Json::num(tpl_hits as f64)),
                 ("misses", Json::num(tpl_misses as f64)),
                 ("bytes_reused", Json::num(tpl_bytes as f64)),
+            ]),
+        ),
+        (
+            "request_setup",
+            Json::obj(vec![
+                ("cloned_sec", Json::num(cloned_s)),
+                ("shared_sec", Json::num(shared_s)),
+                ("cloned_setup_ns", Json::num(cloned_ns as f64)),
+                ("shared_setup_ns", Json::num(shared_ns as f64)),
+                ("request_setup_speedup", Json::num(setup_speedup)),
+                ("graph_clones_avoided", Json::num(clones_avoided as f64)),
+                ("topo_reuses", Json::num(topo_reuses as f64)),
             ]),
         ),
     ])

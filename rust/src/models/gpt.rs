@@ -14,6 +14,7 @@
 use crate::graph::optimizer::{optimize, OptLevel};
 use crate::graph::{Activation, Graph, OpKind, TensorId};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Transformer architecture description.
 #[derive(Debug, Clone)]
@@ -220,7 +221,7 @@ pub fn llama3(batch: usize, kv_len: usize, cfg: &TransformerCfg) -> Graph {
 /// is always 1; prefill buckets both token axes).
 struct TransformerGraphCache {
     cfg: TransformerCfg,
-    cache: HashMap<(usize, usize, usize), Graph>,
+    cache: HashMap<(usize, usize, usize), Arc<Graph>>,
     /// Graphs actually built + optimized (cache misses).
     builds: u64,
     /// Passes served from the cache.
@@ -232,20 +233,25 @@ impl TransformerGraphCache {
         TransformerGraphCache { cfg, cache: HashMap::new(), builds: 0, hits: 0 }
     }
 
-    fn pass(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Graph {
+    /// Cached graphs are immutable once optimized, so passes are handed
+    /// out as `Arc<Graph>`: a hit is a refcount bump, and a miss builds
+    /// exactly once (the old code cloned the freshly built graph into the
+    /// cache and then cloned it *again* to return it).
+    fn pass(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Arc<Graph> {
         let key = (batch.max(1), new_tokens.max(1), kv_end.max(new_tokens).max(1));
         if let Some(g) = self.cache.get(&key) {
             self.hits += 1;
-            return g.clone();
+            return Arc::clone(g);
         }
         let mut g = transformer(key.0, key.1, key.2, &self.cfg);
         optimize(&mut g, OptLevel::Extended);
         // Stamp a process-unique identity so downstream consumers (the
-        // scheduler's lowering-template cache) can recognize every clone of
-        // this memoized graph as the same bucketed pass.
+        // scheduler's lowering-template and topology caches) can recognize
+        // every share of this memoized graph as the same bucketed pass.
         g.cache_key = Some(crate::graph::fresh_cache_key());
         self.builds += 1;
-        self.cache.insert(key, g.clone());
+        let g = Arc::new(g);
+        self.cache.insert(key, Arc::clone(&g));
         g
     }
 }
@@ -259,7 +265,8 @@ impl TransformerGraphCache {
 /// would dominate simulation wall-clock, so KV lengths are rounded up to
 /// `kv_block` (paged-attention-style block granularity: a kv of 130 with
 /// block 64 attends to 192 cached slots) and the optimized graph for each
-/// (batch, bucket) pair is built once, then cloned per submit.
+/// (batch, bucket) pair is built once, then *shared* per submit — an
+/// `Arc` refcount bump, never a clone.
 pub struct DecodeGraphCache {
     inner: TransformerGraphCache,
     kv_block: usize,
@@ -277,8 +284,9 @@ impl DecodeGraphCache {
     }
 
     /// An optimized one-token decode-step graph for `batch` streams
-    /// attending to (at least) `kv` cached tokens.
-    pub fn step(&mut self, batch: usize, kv: usize) -> Graph {
+    /// attending to (at least) `kv` cached tokens. Shared, not cloned:
+    /// submit the `Arc` straight to the scheduler.
+    pub fn step(&mut self, batch: usize, kv: usize) -> Arc<Graph> {
         let kv = self.bucket_kv(kv);
         self.inner.pass(batch, 1, kv)
     }
@@ -322,8 +330,9 @@ impl PrefillGraphCache {
 
     /// An optimized prefill pass: `batch` streams processing `new_tokens`
     /// prompt tokens while attending to a `kv_end`-token prefix
-    /// (`kv_end >= new_tokens`; equal for unchunked prefill).
-    pub fn chunk(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Graph {
+    /// (`kv_end >= new_tokens`; equal for unchunked prefill). Shared, not
+    /// cloned: submit the `Arc` straight to the scheduler.
+    pub fn chunk(&mut self, batch: usize, new_tokens: usize, kv_end: usize) -> Arc<Graph> {
         let q = self.bucket_len(new_tokens);
         self.inner.pass(batch, q, self.bucket_len(kv_end).max(q))
     }
@@ -430,11 +439,13 @@ mod tests {
         assert_eq!(c.bucket_kv(1), 64);
         assert_eq!(c.bucket_kv(64), 64);
         assert_eq!(c.bucket_kv(65), 128);
-        // Same batch, kv within one block: one build, then hits.
+        // Same batch, kv within one block: one build, then hits — and a
+        // hit is the *same* graph (refcount bump), not a structural copy.
         let a = c.step(2, 10);
         let b = c.step(2, 63);
         assert_eq!(c.builds(), 1);
         assert_eq!(c.hits(), 1);
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must share, not clone");
         assert_eq!(a.name, b.name);
         // Crossing the block or changing batch builds anew.
         c.step(2, 65);
@@ -453,6 +464,7 @@ mod tests {
         let b = c.chunk(1, 128, 128);
         assert_eq!(c.builds(), 1, "100 and 128 share the 128-token bucket");
         assert_eq!(c.hits(), 1);
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must share, not clone");
         assert_eq!(a.name, b.name);
         // A chunk attending to a longer prefix is a different graph with
         // more attention work but the same projection work per token.

@@ -17,20 +17,65 @@ pub mod policy;
 
 pub use policy::{Fcfs, Policy, PowerCap, SloSlack, Spatial, TimeShared};
 
+use crate::graph::topo::GraphTopo;
 use crate::graph::Graph;
 use crate::lowering::template::NodeTemplate;
 use crate::lowering::{lower_node, AddressMap, JobRef, LoweringParams, Tile};
 use crate::util::arena::VecPool;
 use crate::{Cycle, NEVER};
+use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
+/// What a submitter hands to [`GlobalScheduler::add_request`]: the graph,
+/// optionally with its precomputed [`GraphTopo`], in owned or shared form.
+///
+/// Every historical call site keeps working via the `From` impls: a plain
+/// `Graph` is wrapped in a fresh `Arc` (one unavoidable move, no clone),
+/// while graph caches submit `Arc<Graph>` (or the `(Arc<Graph>,
+/// Arc<GraphTopo>)` pair) and instantiation degenerates to refcount
+/// bumps. The scheduler counts shared submissions in
+/// `graph_clones_avoided`: each one is a deep graph clone the pre-Arc
+/// code would have performed.
+pub struct RequestSpec {
+    graph: Arc<Graph>,
+    topo: Option<Arc<GraphTopo>>,
+    shared: bool,
+}
+
+impl From<Graph> for RequestSpec {
+    fn from(g: Graph) -> Self {
+        RequestSpec { graph: Arc::new(g), topo: None, shared: false }
+    }
+}
+
+impl From<Arc<Graph>> for RequestSpec {
+    fn from(g: Arc<Graph>) -> Self {
+        RequestSpec { graph: g, topo: None, shared: true }
+    }
+}
+
+impl From<(Arc<Graph>, Arc<GraphTopo>)> for RequestSpec {
+    fn from((graph, topo): (Arc<Graph>, Arc<GraphTopo>)) -> Self {
+        RequestSpec { graph, topo: Some(topo), shared: true }
+    }
+}
+
 /// One inference request instance and its execution state.
+///
+/// Zero-clone representation: the graph and its derived topology are
+/// shared (`Arc`), the address map is a shared relative layout plus a
+/// per-request base, and the only per-request allocations are the two
+/// mutable per-node vectors — which come from the scheduler's pool and
+/// are recycled when the request retires.
 pub struct Request {
     pub id: usize,
     /// Tenant/model group (used by spatial partitioning).
     pub tenant: usize,
-    pub graph: Graph,
+    pub graph: Arc<Graph>,
+    /// Immutable derived structure (CSR successors, indegree template,
+    /// relative layout), shared across requests of the same cached graph.
+    pub topo: Arc<GraphTopo>,
     pub arrival: Cycle,
     /// Latency deadline in absolute cycles, when the submitter knows one
     /// (the serve driver sets `oldest member arrival + tenant SLO`).
@@ -40,11 +85,11 @@ pub struct Request {
     pub started_at: Option<Cycle>,
     pub finished_at: Option<Cycle>,
     amap: AddressMap,
-    /// Per-node unresolved input count.
+    /// Per-node unresolved input count (mutable countdown; pooled, taken
+    /// back at retirement).
     indegree: Vec<usize>,
-    /// Per-node successor list.
-    succs: Vec<Vec<usize>>,
-    /// Per-node outstanding tile count (usize::MAX = not yet lowered).
+    /// Per-node outstanding tile count (usize::MAX = not yet lowered;
+    /// pooled, taken back at retirement).
     remaining_tiles: Vec<usize>,
     /// Ready tiles, grouped by node (front = oldest ready node) — keeps
     /// layer boundaries visible to the time-shared policy.
@@ -111,6 +156,27 @@ pub struct GlobalScheduler {
     /// hot path never touches the clock in unprofiled runs.
     lowering_ns: u64,
     profile_lowering: bool,
+    /// Derived-topology cache: graph cache key → shared [`GraphTopo`].
+    /// Lives scheduler-side (not in the model caches) because the layout
+    /// needs `params.element_bytes`, which submitters don't know; a hit
+    /// makes request setup two refcount bumps plus two pooled-vector
+    /// fills. Unkeyed (ad-hoc) graphs derive fresh and bypass the map.
+    topos: HashMap<u64, Arc<GraphTopo>>,
+    /// Pool for the per-request mutable per-node vectors (`indegree`,
+    /// `remaining_tiles`) and activation scratch; retired requests return
+    /// their vectors here.
+    node_state_pool: VecPool<usize>,
+    /// Deep graph clones skipped because the submitter shared an `Arc`.
+    graph_clones_avoided: u64,
+    /// Topology derivations skipped (cache hit or submitter-supplied).
+    topo_reuses: u64,
+    /// Wall-clock ns spent in `add_request` (profiled runs only).
+    request_setup_ns: u64,
+    /// Benchmark escape hatch (`ONNXIM_CLONE_REQUESTS=1`): emulate the
+    /// pre-Arc instantiation path — deep-clone the graph and re-derive
+    /// the topology per request. Byte-identical results, pre-change cost;
+    /// exists so `bench kernel` and CI can measure/verify the refactor.
+    clone_requests: bool,
 }
 
 impl GlobalScheduler {
@@ -133,6 +199,12 @@ impl GlobalScheduler {
             template_bytes_reused: 0,
             lowering_ns: 0,
             profile_lowering: false,
+            topos: HashMap::new(),
+            node_state_pool: VecPool::default(),
+            graph_clones_avoided: 0,
+            topo_reuses: 0,
+            request_setup_ns: 0,
+            clone_requests: false,
         }
     }
 
@@ -160,9 +232,31 @@ impl GlobalScheduler {
         self.lowering_ns
     }
 
-    /// Alloc/reuse counters of the instantiation scratch pool.
+    /// Alloc/reuse counters of the instantiation scratch pools (tile
+    /// scratch plus the per-request node-state pool).
     pub fn lowering_arena_stats(&self) -> (u64, u64) {
-        self.tile_scratch.stats()
+        let (ta, tr) = self.tile_scratch.stats();
+        let (na, nr) = self.node_state_pool.stats();
+        (ta + na, tr + nr)
+    }
+
+    /// Emulate pre-Arc request instantiation: deep-clone the submitted
+    /// graph and re-derive its topology per request. Results stay
+    /// byte-identical (the clone is structurally equal and keeps its
+    /// `cache_key`); only the setup cost changes. For benchmarking and
+    /// the CI byte-identity probe (`ONNXIM_CLONE_REQUESTS=1`).
+    pub fn set_clone_requests(&mut self, on: bool) {
+        self.clone_requests = on;
+    }
+
+    /// `(graph clones avoided, topology reuses)` so far.
+    pub fn request_setup_stats(&self) -> (u64, u64) {
+        (self.graph_clones_avoided, self.topo_reuses)
+    }
+
+    /// Wall-clock ns spent in request setup (0 unless profiling enabled).
+    pub fn request_setup_ns(&self) -> u64 {
+        self.request_setup_ns
     }
 
     /// Enable per-tenant `(MACs, DMA bytes)` dispatch accounting for
@@ -179,39 +273,83 @@ impl GlobalScheduler {
     }
 
     /// Register a request arriving at `arrival`. Returns its id.
-    pub fn add_request(&mut self, graph: Graph, arrival: Cycle, tenant: usize) -> usize {
+    ///
+    /// Accepts anything convertible to [`RequestSpec`]: an owned `Graph`
+    /// (wrapped, topology derived fresh — or served from the topo cache
+    /// when the graph carries a `cache_key`), an `Arc<Graph>` from a
+    /// graph cache (zero-clone), or the `(Arc<Graph>, Arc<GraphTopo>)`
+    /// pair (zero-clone and zero-derive).
+    pub fn add_request(
+        &mut self,
+        graph: impl Into<RequestSpec>,
+        arrival: Cycle,
+        tenant: usize,
+    ) -> usize {
+        let spec = graph.into();
+        let t0 = self.profile_lowering.then(std::time::Instant::now);
+        let element_bytes = self.params.element_bytes as usize;
+        let (graph, topo) = if self.clone_requests {
+            // Pre-change emulation: one deep clone plus one fresh
+            // derivation per request, exactly what every submission cost
+            // before graphs were Arc-shared.
+            let g = Arc::new((*spec.graph).clone());
+            let topo = Arc::new(GraphTopo::derive(&g, element_bytes));
+            (g, topo)
+        } else {
+            if spec.shared {
+                self.graph_clones_avoided += 1;
+            }
+            let topo = match spec.topo {
+                Some(t) => {
+                    self.topo_reuses += 1;
+                    t
+                }
+                None => match spec.graph.cache_key {
+                    Some(k) => match self.topos.entry(k) {
+                        Entry::Occupied(e) => {
+                            self.topo_reuses += 1;
+                            Arc::clone(e.get())
+                        }
+                        Entry::Vacant(e) => Arc::clone(
+                            e.insert(Arc::new(GraphTopo::derive(&spec.graph, element_bytes))),
+                        ),
+                    },
+                    None => Arc::new(GraphTopo::derive(&spec.graph, element_bytes)),
+                },
+            };
+            (spec.graph, topo)
+        };
+        debug_assert_eq!(topo.indegree.len(), graph.nodes.len());
+        debug_assert_eq!(topo.element_bytes, self.params.element_bytes);
+
         let id = self.requests.len();
-        let amap = AddressMap::build(&graph, self.params.element_bytes as usize, self.next_base);
+        let amap = AddressMap::from_topo(&topo, self.next_base);
         self.next_base = amap.footprint().div_ceil(4096) * 4096;
 
         let n = graph.nodes.len();
-        let producers = graph.producers();
-        let mut indegree = vec![0usize; n];
-        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for node in &graph.nodes {
-            for &t in &node.inputs {
-                if let Some(&p) = producers.get(&t) {
-                    indegree[node.id] += 1;
-                    succs[p].push(node.id);
-                }
-            }
-        }
+        let mut indegree = self.node_state_pool.take();
+        indegree.extend_from_slice(&topo.indegree);
+        let mut remaining_tiles = self.node_state_pool.take();
+        remaining_tiles.resize(n, usize::MAX);
         self.requests.push(Request {
             id,
             tenant,
             graph,
+            topo,
             arrival,
             deadline: None,
             started_at: None,
             finished_at: None,
             amap,
             indegree,
-            succs,
-            remaining_tiles: vec![usize::MAX; n],
+            remaining_tiles,
             ready: VecDeque::new(),
             nodes_done: 0,
             tiles_in_flight: 0,
         });
+        if let Some(t0) = t0 {
+            self.request_setup_ns += t0.elapsed().as_nanos() as u64;
+        }
         id
     }
 
@@ -235,12 +373,17 @@ impl GlobalScheduler {
                 continue;
             }
             self.requests[r].started_at = Some(now);
-            let ready_nodes: Vec<usize> = (0..self.requests[r].graph.nodes.len())
-                .filter(|&i| self.requests[r].indegree[i] == 0)
-                .collect();
-            for nid in ready_nodes {
-                self.lower_ready_node(r, nid, now);
+            // Pooled scratch: activation is per-request on the serving hot
+            // path, so even this transient list must not allocate.
+            let mut ready_nodes = self.node_state_pool.take();
+            ready_nodes.extend(
+                (0..self.requests[r].graph.nodes.len())
+                    .filter(|&i| self.requests[r].indegree[i] == 0),
+            );
+            for i in 0..ready_nodes.len() {
+                self.lower_ready_node(r, ready_nodes[i], now);
             }
+            self.node_state_pool.put(ready_nodes);
         }
     }
 
@@ -319,17 +462,30 @@ impl GlobalScheduler {
     }
 
     /// Mark a node complete and release successors.
+    ///
+    /// The successor walk iterates the shared CSR slice — an `Arc`
+    /// refcount bump instead of the per-completed-node `Vec` clone this
+    /// used to perform (the clone existed only to satisfy the borrow
+    /// checker across the `lower_ready_node` recursion).
     fn complete_node(&mut self, r: usize, nid: usize, now: Cycle) {
         self.requests[r].nodes_done += 1;
-        let succs = self.requests[r].succs[nid].clone();
-        for s in succs {
+        let topo = Arc::clone(&self.requests[r].topo);
+        for &s in topo.succs_of(nid) {
             self.requests[r].indegree[s] -= 1;
             if self.requests[r].indegree[s] == 0 {
                 self.lower_ready_node(r, s, now);
             }
         }
         if self.requests[r].done() && self.requests[r].finished_at.is_none() {
-            self.requests[r].finished_at = Some(now);
+            let req = &mut self.requests[r];
+            req.finished_at = Some(now);
+            // Retirement: recycle the mutable per-node state. Safe because
+            // `done()` can only flip once every successor edge has been
+            // walked and no tiles remain; `mem::take` leaves empty vectors
+            // so any stale access panics loudly instead of corrupting a
+            // reused buffer.
+            self.node_state_pool.put(std::mem::take(&mut req.indegree));
+            self.node_state_pool.put(std::mem::take(&mut req.remaining_tiles));
             self.completed.push(r);
         }
     }
@@ -710,5 +866,93 @@ mod tests {
         let a0 = s.requests[0].amap.footprint();
         let a1_first = s.requests[1].amap.addr(0);
         assert!(a1_first >= a0, "request 1 tensors must not alias request 0");
+    }
+
+    #[test]
+    fn arc_shared_submissions_skip_clone_and_reuse_topo() {
+        let mut keyed = two_layer_graph();
+        keyed.cache_key = Some(crate::graph::fresh_cache_key());
+        let shared = Arc::new(keyed.clone());
+        let mut s = sched();
+        s.add_request(Arc::clone(&shared), 0, 0);
+        s.add_request(Arc::clone(&shared), 0, 0);
+        s.add_request(Arc::clone(&shared), 0, 0);
+        // Three shared submissions: three skipped deep clones, first one
+        // derives the topology, the other two hit the topo cache.
+        assert_eq!(s.request_setup_stats(), (3, 2));
+        s.activate_arrivals(0);
+        // Byte-identical to owned (cloning) submissions of the same graph.
+        let mut s2 = sched();
+        s2.add_request(keyed.clone(), 0, 0);
+        s2.add_request(keyed.clone(), 0, 0);
+        s2.add_request(keyed, 0, 0);
+        assert_eq!(s2.request_setup_stats().0, 0, "owned submissions are not 'avoided clones'");
+        s2.activate_arrivals(0);
+        for r in 0..3 {
+            let a: Vec<Tile> = s.requests[r].ready.iter().cloned().collect();
+            let b: Vec<Tile> = s2.requests[r].ready.iter().cloned().collect();
+            assert_eq!(a, b, "shared submission diverged from owned for request {r}");
+        }
+    }
+
+    #[test]
+    fn supplied_topo_pair_is_used_verbatim() {
+        let mut keyed = two_layer_graph();
+        keyed.cache_key = Some(crate::graph::fresh_cache_key());
+        let g = Arc::new(keyed);
+        let eb = LoweringParams::from_config(&NpuConfig::mobile()).element_bytes as usize;
+        let topo = Arc::new(crate::graph::topo::GraphTopo::derive(&g, eb));
+        let mut s = sched();
+        s.add_request((Arc::clone(&g), Arc::clone(&topo)), 0, 0);
+        assert_eq!(s.request_setup_stats(), (1, 1));
+        assert!(Arc::ptr_eq(&s.requests[0].topo, &topo), "supplied topo must be shared, not rebuilt");
+    }
+
+    #[test]
+    fn clone_requests_mode_is_byte_identical_to_shared() {
+        let mut keyed = two_layer_graph();
+        keyed.cache_key = Some(crate::graph::fresh_cache_key());
+        let shared = Arc::new(keyed);
+        let mut fast = sched();
+        let mut slow = sched();
+        slow.set_clone_requests(true);
+        for _ in 0..2 {
+            fast.add_request(Arc::clone(&shared), 0, 0);
+            slow.add_request(Arc::clone(&shared), 0, 0);
+        }
+        assert_eq!(slow.request_setup_stats(), (0, 0), "clone mode must not count reuse");
+        fast.activate_arrivals(0);
+        slow.activate_arrivals(0);
+        for r in 0..2 {
+            let a: Vec<Tile> = fast.requests[r].ready.iter().cloned().collect();
+            let b: Vec<Tile> = slow.requests[r].ready.iter().cloned().collect();
+            assert_eq!(a, b, "clone-mode emulation diverged for request {r}");
+        }
+    }
+
+    #[test]
+    fn retired_request_state_recycles_into_pool() {
+        let mut s = sched();
+        s.add_request(two_layer_graph(), 0, 0);
+        s.activate_arrivals(0);
+        let mut now = 0;
+        while !s.all_done() {
+            let tiles: Vec<Tile> = std::iter::from_fn(|| s.pick_tile(0, now)).collect();
+            assert!(!tiles.is_empty());
+            for t in &tiles {
+                s.on_tile_done(t.job, now);
+            }
+            now += 10;
+        }
+        let (_, reuses_before) = s.lowering_arena_stats();
+        // The retired request returned its indegree/remaining_tiles
+        // vectors; the next request's setup must reuse them.
+        s.add_request(two_layer_graph(), now, 0);
+        let (_, reuses_after) = s.lowering_arena_stats();
+        assert!(
+            reuses_after >= reuses_before + 2,
+            "second request should reuse pooled node-state vectors \
+             ({reuses_before} -> {reuses_after})"
+        );
     }
 }

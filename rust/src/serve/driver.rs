@@ -130,9 +130,10 @@ struct TenantState {
     prompt_max: usize,
     decode_dist: DecodeLenDist,
     /// Optimized batched graphs by unit count: the zoo builds and the
-    /// optimizer runs once per (model, units), then clones per submit.
-    /// (Whole-graph path; decode steps cache inside [`DecodeState`].)
-    graph_cache: HashMap<usize, crate::graph::Graph>,
+    /// optimizer runs once per (model, units), then *shares* per submit —
+    /// the `Arc` goes straight to the scheduler, no clone. (Whole-graph
+    /// path; decode steps cache inside [`DecodeState`].)
+    graph_cache: HashMap<usize, std::sync::Arc<crate::graph::Graph>>,
     decode: Option<DecodeState>,
     offered: u64,
     completed: u64,
@@ -529,16 +530,19 @@ impl Driver for ServeDriver {
                 // 2b. Static whole-graph: flush every due batch.
                 while let Some(batch) = ts.batcher.flush(now) {
                     let model = &ts.model;
-                    let g = ts
-                        .graph_cache
-                        .entry(batch.units)
-                        .or_insert_with(|| {
+                    let g = std::sync::Arc::clone(ts.graph_cache.entry(batch.units).or_insert_with(
+                        || {
                             let mut g = models::by_name(model, batch.units)
                                 .expect("model validated in ServeDriver::new");
                             optimize(&mut g, OptLevel::Extended);
-                            g
-                        })
-                        .clone();
+                            // Stamp an identity so the scheduler's template
+                            // and topology caches engage for the static
+                            // path too (identical cached graph ⇒ identical
+                            // derived work; results are byte-identical).
+                            g.cache_key = Some(crate::graph::fresh_cache_key());
+                            std::sync::Arc::new(g)
+                        },
+                    ));
                     let id = sched.add_request(g, now, ti);
                     let deadline = batch
                         .members

@@ -209,6 +209,16 @@ impl Simulator {
             sched.set_track_tenant_work(true);
         }
         sched.set_lowering_cache(cfg.lowering_cache);
+        // Benchmark/CI escape hatch: restore the pre-Arc deep-clone
+        // request-instantiation path (byte-identical results, pre-change
+        // setup cost). Mirrors ONNXIM_SIM_THREADS as an env-only knob so
+        // the config JSON surface stays unchanged.
+        if matches!(
+            std::env::var("ONNXIM_CLONE_REQUESTS").as_deref(),
+            Ok("1") | Ok("on") | Ok("true")
+        ) {
+            sched.set_clone_requests(true);
+        }
         let n = cfg.num_cores;
         let channels = cfg.dram.channels;
         let max_cycles = cfg.max_cycles;
@@ -298,8 +308,16 @@ impl Simulator {
         Some(tel)
     }
 
-    /// Add a request (thin wrapper over the scheduler).
-    pub fn add_request(&mut self, graph: crate::graph::Graph, arrival: Cycle, tenant: usize) -> usize {
+    /// Add a request (thin wrapper over the scheduler). Accepts an owned
+    /// `Graph`, an `Arc<Graph>` from a graph cache (zero-clone), or an
+    /// `(Arc<Graph>, Arc<GraphTopo>)` pair — see
+    /// [`crate::scheduler::RequestSpec`].
+    pub fn add_request(
+        &mut self,
+        graph: impl Into<crate::scheduler::RequestSpec>,
+        arrival: Cycle,
+        tenant: usize,
+    ) -> usize {
         self.sched.add_request(graph, arrival, tenant)
     }
 
@@ -542,6 +560,11 @@ impl Simulator {
             p.template_misses = misses;
             p.template_bytes_reused = bytes;
             p.lowering_ns = self.sched.lowering_ns();
+            // Zero-clone request instantiation accounting (idempotent).
+            let (clones_avoided, topo_reuses) = self.sched.request_setup_stats();
+            p.graph_clones_avoided = clones_avoided;
+            p.topo_reuses = topo_reuses;
+            p.request_setup_ns = self.sched.request_setup_ns();
         }
         if let Some(m) = tel.metrics.as_mut() {
             m.set_counter("dram_next_event_recomputes", self.dram.next_event_recomputes());

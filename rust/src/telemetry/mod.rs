@@ -460,6 +460,13 @@ pub struct Profiler {
     pub template_hits: u64,
     pub template_misses: u64,
     pub template_bytes_reused: u64,
+    /// Zero-clone request instantiation: deep graph clones skipped
+    /// because the submitter shared an `Arc<Graph>`, topology derivations
+    /// skipped (topo-cache hit or submitter-supplied), and wall-clock
+    /// spent in request setup (`add_request`).
+    pub graph_clones_avoided: u64,
+    pub topo_reuses: u64,
+    pub request_setup_ns: u64,
 }
 
 impl Profiler {
@@ -482,6 +489,9 @@ impl Profiler {
             ("template_hits", Json::Num(self.template_hits as f64)),
             ("template_misses", Json::Num(self.template_misses as f64)),
             ("template_bytes_reused", Json::Num(self.template_bytes_reused as f64)),
+            ("graph_clones_avoided", Json::Num(self.graph_clones_avoided as f64)),
+            ("topo_reuses", Json::Num(self.topo_reuses as f64)),
+            ("request_setup_ns", Json::Num(self.request_setup_ns as f64)),
         ])
     }
 }
@@ -619,6 +629,9 @@ mod tests {
             template_hits: 40,
             template_misses: 2,
             template_bytes_reused: 4096,
+            graph_clones_avoided: 21,
+            topo_reuses: 20,
+            request_setup_ns: 777,
             ..Default::default()
         };
         let j = p.to_json();
@@ -631,6 +644,9 @@ mod tests {
         assert_eq!(j.get("template_hits").unwrap().as_u64().unwrap(), 40);
         assert_eq!(j.get("template_misses").unwrap().as_u64().unwrap(), 2);
         assert_eq!(j.get("template_bytes_reused").unwrap().as_u64().unwrap(), 4096);
+        assert_eq!(j.get("graph_clones_avoided").unwrap().as_u64().unwrap(), 21);
+        assert_eq!(j.get("topo_reuses").unwrap().as_u64().unwrap(), 20);
+        assert_eq!(j.get("request_setup_ns").unwrap().as_u64().unwrap(), 777);
     }
 
     #[test]

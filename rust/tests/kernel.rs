@@ -20,7 +20,7 @@ use onnxim::config::serve::{ServeConfig, TenantLoadConfig};
 use onnxim::config::NpuConfig;
 use onnxim::graph::{Activation, Graph, OpKind};
 use onnxim::scheduler::{Fcfs, Policy, SloSlack, Spatial, TimeShared};
-use onnxim::serve::run_serve_mode;
+use onnxim::serve::{run_serve_mode, ServeDriver};
 use onnxim::sim::{sweep, KernelMode, NoDriver, Simulator};
 
 fn matmul(name: &str, m: usize, k: usize, n: usize) -> Graph {
@@ -274,6 +274,38 @@ fn lowering_cache_is_report_invisible_across_kernels_and_threads() {
                     with_cache(&scfg, mode, threads, true),
                     with_cache(&scfg, mode, threads, false),
                     "lowering cache changed the {name} report ({mode:?}, {threads} threads)"
+                );
+            }
+        }
+    }
+}
+
+/// Zero-clone request instantiation must be result-invisible: Arc-shared
+/// graphs, the cached CSR topology, the shared-relative-layout address
+/// map, and pooled per-node state have to produce the same report bytes
+/// as the pre-change path (deep graph clone + fresh derivation per
+/// request, emulated by `set_clone_requests`). Continuous batching and
+/// chunked prefill are the shapes where sharing actually engages (the
+/// graph caches re-submit the same Arc every iteration).
+#[test]
+fn zero_clone_requests_report_invisible_across_kernels_and_threads() {
+    let run = |scfg: &ServeConfig, mode: KernelMode, threads: usize, clone: bool| {
+        let mut cfg = NpuConfig::server();
+        cfg.sim_threads = threads;
+        let freq = cfg.core_freq_ghz;
+        let mut driver = ServeDriver::new(scfg, freq).expect("serve scenario");
+        let mut sim = Simulator::new(cfg, Box::new(Fcfs::new())).with_kernel(mode);
+        sim.sched.set_clone_requests(clone);
+        let rep = sim.try_run(&mut driver).expect("serve scenario");
+        driver.report(rep.total_cycles, "fcfs", scfg, freq).to_json()
+    };
+    for (name, scfg) in [("continuous", continuous_scenario()), ("prefill", prefill_scenario())] {
+        for mode in [KernelMode::Windowed, KernelMode::Reference] {
+            for threads in [1usize, 4] {
+                assert_eq!(
+                    run(&scfg, mode, threads, false),
+                    run(&scfg, mode, threads, true),
+                    "zero-clone instantiation changed the {name} report ({mode:?}, {threads} threads)"
                 );
             }
         }
